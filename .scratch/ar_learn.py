@@ -1,0 +1,25 @@
+import time, dataclasses, numpy as np, jax, jax.numpy as jnp
+from repro.graphs import synthetic as S
+from repro.sim import p100_topology, prepare_sim_graph
+from repro.sim.scheduler import Env
+from repro.core.featurize import featurize
+from repro.core.policy import PolicyConfig
+from repro.core.ppo import PPOConfig, PPOTrainer
+
+g = S.transformer_xl(4, segments=6)
+topo0 = p100_topology(4)
+cap = g.total_mem() / 4 * 1.8
+topo = dataclasses.replace(topo0, spec=dataclasses.replace(topo0.spec, mem_bytes=cap))
+sg = prepare_sim_graph(g, topo, max_deg=16); env = Env(sg, topo)
+gb = featurize(g, max_deg=8)
+pcfg = PolicyConfig(hidden=64, gnn_layers=2, placer_layers=2, ffn=256, window=64, max_devices=8)
+tr = PPOTrainer(pcfg, PPOConfig(num_samples=32, lr=1e-3, entropy_coef=0.01, entropy_decay=0.997,
+                                epochs=2, baseline='running_avg', adv_norm=True,
+                                per_node_credit=False), seed=0)
+t0 = time.time()
+for it in range(200):
+    m = tr.iteration('txl4', gb, env, 4)
+    if it % 10 == 0:
+        print('%3d r_mean=%.4f best=%.4f ent=%.3f (%.0fs)' % (
+            it, m['reward_mean'], m['best_makespan'], m['entropy'], time.time()-t0), flush=True)
+print('human=1.3177 metis=1.3173 single=OOM')

@@ -1,0 +1,38 @@
+import time, dataclasses, numpy as np, jax, jax.numpy as jnp
+from repro.graphs import synthetic as S
+from repro.sim import p100_topology, prepare_sim_graph
+from repro.sim.scheduler import Env
+from repro.core.featurize import featurize
+from repro.core import policy as P
+from repro.core.policy import PolicyConfig
+from repro.core.ppo import PPOConfig, PPOTrainer
+
+# consistency check first (banded TF vs AR)
+g0 = S.transformer_xl(2, segments=3)
+gb0 = featurize(g0, max_deg=8)
+pcfg0 = PolicyConfig(hidden=64, gnn_layers=2, placer_layers=2, ffn=256, window=64, max_devices=8)
+params0 = P.init(jax.random.PRNGKey(0), pcfg0)
+pl0, lp_ar = P.sample(params0, pcfg0, gb0, 4, jax.random.PRNGKey(1), 2)
+lp_tf, _ = P.logp_and_entropy(params0, pcfg0, gb0, 4, pl0)
+print('AR-vs-TF diff:', float(jnp.abs(lp_ar - lp_tf).max()), flush=True)
+
+g = S.transformer_xl(4, segments=6)
+topo0 = p100_topology(4)
+cap = g.total_mem() / 4 * 1.8
+topo = dataclasses.replace(topo0, spec=dataclasses.replace(topo0.spec, mem_bytes=cap))
+sg = prepare_sim_graph(g, topo, max_deg=16)
+env = Env(sg, topo, shaped_reward=True)
+env_eval = Env(sg, topo, shaped_reward=False)
+gb = featurize(g, max_deg=8)
+pcfg = PolicyConfig(hidden=64, gnn_layers=2, placer_layers=2, ffn=256, window=64, max_devices=8)
+tr = PPOTrainer(pcfg, PPOConfig(num_samples=32, lr=1e-3, entropy_coef=0.02, entropy_decay=0.995,
+                                epochs=2, baseline='running_avg', adv_norm=True,
+                                per_node_credit=True, credit_mix=0.5), seed=0)
+t0 = time.time()
+for it in range(600):
+    m = tr.iteration('txl4', gb, env, 4)
+    if it % 25 == 0:
+        print('%3d r_mean=%.4f best=%.4f ent=%.3f valid=%.2f (%.0fs)' % (
+            it, m['reward_mean'], m['best_makespan'], m['entropy'], m['valid_frac'], time.time()-t0), flush=True)
+print('human=1.3177 metis=1.3173 | final best-of-16 (true reward):', flush=True)
+print(tr.best_of_samples(gb, env_eval, 4, 16), flush=True)

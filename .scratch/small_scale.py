@@ -1,0 +1,35 @@
+import time, dataclasses, numpy as np, jax, jax.numpy as jnp
+from repro.graphs import synthetic as S
+from repro.sim import p100_topology, prepare_sim_graph
+from repro.sim.scheduler import Env
+from repro.core.featurize import featurize
+from repro.core import baselines as B
+from repro.core.policy import PolicyConfig
+from repro.core.ppo import PPOConfig, PPOTrainer
+
+def make_env(g, d, tighten=1.8):
+    topo0 = p100_topology(d)
+    cap = g.total_mem() / d * tighten
+    topo = dataclasses.replace(topo0, spec=dataclasses.replace(topo0.spec, mem_bytes=cap))
+    sg = prepare_sim_graph(g, topo, max_deg=16)
+    return topo, Env(sg, topo, shaped_reward=True), Env(sg, topo)
+
+for gname, g, d in [('rnnlm2', S.rnnlm(2, time_steps=6), 2),
+                    ('inception', S.inception(modules=6), 2)]:
+    topo, env, env_true = make_env(g, d)
+    gb = featurize(g, max_deg=8, topo=topo)
+    hp = B.human_expert(g, topo); mt = B.metis_like(g, topo)
+    mk_h = float(env_true.rewards(jnp.asarray(hp)[None])[0][0])
+    mk_m = float(env_true.rewards(jnp.asarray(mt)[None])[0][0])
+    print(f'== {gname}: N={g.num_nodes} D={d} human={mk_h:.4f} metis={mk_m:.4f}', flush=True)
+    pcfg = PolicyConfig(hidden=64, gnn_layers=2, placer_layers=2, ffn=256, window=64, max_devices=8)
+    tr = PPOTrainer(pcfg, PPOConfig(num_samples=32, lr=1e-3, entropy_coef=0.02, entropy_decay=0.99,
+                                    epochs=2, adv_norm=True, per_node_credit=False,
+                                    canonicalize=True), seed=0)
+    t0=time.time(); best=np.inf
+    for it in range(200):
+        m = tr.iteration(gname, gb, env, d)
+        best = min(best, m['best_makespan'])
+        if it % 20 == 0:
+            print('  %3d r=%.4f best=%.4f ent=%.3f valid=%.2f (%.0fs)' % (it, m['reward_mean'], best, m['entropy'], m['valid_frac'], time.time()-t0), flush=True)
+    print(f'  FINAL best={best:.4f} vs human={mk_h:.4f} speedup={(mk_h-best)/mk_h*100:+.1f}%', flush=True)

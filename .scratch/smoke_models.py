@@ -1,0 +1,36 @@
+import numpy as np, jax, jax.numpy as jnp
+from repro.configs import get_reduced, list_archs, SHAPES
+from repro.models.model import build_model
+
+def make_batch(cfg, b=2, s=32):
+    rng = np.random.RandomState(0)
+    batch = {"tokens": jnp.asarray(rng.randint(0, cfg.vocab, (b, s)), jnp.int32),
+             "labels": jnp.asarray(rng.randint(0, cfg.vocab, (b, s)), jnp.int32)}
+    if cfg.enc_dec:
+        batch["frames"] = jnp.asarray(rng.randn(b, 16, cfg.d_model), jnp.float32)
+    if cfg.frontend == "vision":
+        batch["patch_embeds"] = jnp.asarray(rng.randn(b, 8, cfg.d_model), jnp.float32)
+    if cfg.mrope:
+        batch["positions"] = jnp.broadcast_to(jnp.arange(s)[None, None, :], (3, b, s))
+    return batch
+
+for name in list_archs():
+    cfg = get_reduced(name)
+    model = build_model(cfg)
+    try:
+        state = model.init_train_state(jax.random.PRNGKey(0))
+        batch = make_batch(cfg)
+        ts = model.make_train_step()
+        state2, metrics = jax.jit(ts)(state, batch)
+        loss = float(metrics["loss"])
+        assert np.isfinite(loss), "loss NaN"
+        # serving
+        caches, logits = model.prefill(state["params"], batch, cache_len=64)
+        assert np.all(np.isfinite(np.asarray(logits)))
+        caches2, lg2 = model.decode_step(state["params"], caches,
+                                         jnp.zeros((2,1), jnp.int32), jnp.int32(32))
+        assert np.all(np.isfinite(np.asarray(lg2)))
+        print(f"{name:24s} OK  loss={loss:.3f} logits={np.asarray(lg2).shape}", flush=True)
+    except Exception as e:
+        import traceback
+        print(f"{name:24s} FAIL: {type(e).__name__}: {str(e)[:300]}", flush=True)

@@ -1,0 +1,30 @@
+import time, dataclasses, numpy as np, jax, jax.numpy as jnp
+from repro.graphs import synthetic as S
+from repro.sim import p100_topology, prepare_sim_graph
+from repro.sim.scheduler import Env
+from repro.core.featurize import featurize
+from repro.core import baselines as B
+from repro.core.policy import PolicyConfig
+from repro.core.ppo import PPOConfig, PPOTrainer
+
+g = S.transformer_xl(4, segments=6)
+topo0 = p100_topology(4)
+cap = g.total_mem() / 4 * 1.8
+topo = dataclasses.replace(topo0, spec=dataclasses.replace(topo0.spec, mem_bytes=cap))
+sg = prepare_sim_graph(g, topo, max_deg=16)
+env = Env(sg, topo)
+gb = featurize(g, max_deg=8)
+for name, fn in [('human', B.human_expert), ('metis', B.metis_like)]:
+    p = fn(g, topo)
+    mk, r, v = env.rewards(jnp.asarray(p)[None])
+    print(f'{name:8s} makespan={float(mk[0]):.4f}s valid={bool(v[0])}', flush=True)
+
+for tag, kw in [
+    ('loo-M64-ent.01', dict(num_samples=64, lr=1e-3, entropy_coef=0.01, entropy_decay=0.999, epochs=3, baseline='loo')),
+    ('loo-M64-lr3e-3', dict(num_samples=64, lr=3e-3, entropy_coef=0.01, entropy_decay=0.999, epochs=3, baseline='loo')),
+]:
+    pcfg = PolicyConfig(hidden=64, gnn_layers=2, placer_layers=2, ffn=256, segment=64, max_devices=8)
+    tr = PPOTrainer(pcfg, PPOConfig(**kw), seed=0)
+    t0 = time.time()
+    best = tr.train([('txl4', gb, env, 4)], iterations=1200, log_every=200)
+    print(f'{tag} -> best={best} in {time.time()-t0:.0f}s', flush=True)

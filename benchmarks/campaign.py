@@ -1,0 +1,44 @@
+"""Long-running benchmark campaign: fills results/experiments.json.
+
+Run in the background; benchmarks/run.py reports these cached numbers
+alongside its live quick-mode run.
+
+    PYTHONPATH=src nohup python -m benchmarks.campaign &
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks import common as C
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--iters", type=int, default=250)
+    args = ap.parse_args()
+
+    from benchmarks import table1_individual, table2_batch, generalization, \
+        ablation
+    cached = C.load_cached()
+
+    print("[campaign] table1", flush=True)
+    cached["table1"] = table1_individual.run(iterations=args.iters)
+    C.save_cached(cached)
+
+    print("[campaign] table2", flush=True)
+    cached["table2"] = table2_batch.run(iterations=max(args.iters // 2, 60))
+    C.save_cached(cached)
+
+    print("[campaign] generalization", flush=True)
+    cached["generalization"] = generalization.run(
+        pretrain_iters=max(args.iters // 2, 60), finetune_iters=50)
+    C.save_cached(cached)
+
+    print("[campaign] ablation", flush=True)
+    cached["ablation"] = ablation.run(iterations=max(args.iters // 3, 50))
+    C.save_cached(cached)
+    print("[campaign] done", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,162 @@
+"""Shared benchmark harness: tasks, baselines, trainers, result caching.
+
+Every benchmark compares methods inside the SAME simulator environment
+(paper protocol: memory-constrained devices; single-device placement OOMs,
+mirroring Table 1's 'METIS: OOM' regime).
+
+Scale note (EXPERIMENTS.md §Scale): the paper searches with thousands of
+hardware-parallel measured trials per graph; this container is one CPU
+core, so the default ("quick") instances use reduced unroll lengths
+(N≈100–400 nodes) and a few hundred PPO iterations.  ``--full`` scales
+unrolls and iterations up.  Longer campaign results are cached in
+``results/experiments.json`` and reported when present.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import baselines as B
+from repro.core.featurize import featurize
+from repro.core.policy import PolicyConfig
+from repro.core.ppo import PPOConfig, PPOTrainer
+from repro.core.hdp import HDPConfig, HDPTrainer
+from repro.graphs import synthetic as S
+from repro.sim import p100_topology, prepare_sim_graph
+from repro.sim.scheduler import Env
+
+RESULTS_PATH = os.path.join(os.path.dirname(__file__), "..", "results",
+                            "experiments.json")
+
+POLICY = PolicyConfig(hidden=64, gnn_layers=2, placer_layers=2, ffn=256,
+                      window=64, max_devices=8)
+PPO = PPOConfig(num_samples=32, lr=1e-3, entropy_coef=0.02,
+                entropy_decay=0.99, epochs=2, adv_norm=True,
+                per_node_credit=False, canonicalize=True)
+PPO_PAPER = dataclasses.replace(PPO, canonicalize=False, adv_norm=False)
+
+
+@dataclasses.dataclass
+class Task:
+    name: str
+    graph: Any
+    topo: Any
+    env: Env            # shaped reward (training)
+    env_true: Env       # paper reward (evaluation)
+    gb: Any
+    num_devices: int
+
+
+def make_task(name: str, g, num_devices: int, tighten: float = 1.8) -> Task:
+    topo0 = p100_topology(num_devices)
+    cap = g.total_mem() / num_devices * tighten
+    topo = dataclasses.replace(
+        topo0, spec=dataclasses.replace(topo0.spec, mem_bytes=cap))
+    sg = prepare_sim_graph(g, topo, max_deg=16)
+    return Task(name, g, topo, Env(sg, topo, shaped_reward=True),
+                Env(sg, topo), featurize(g, max_deg=8, topo=topo),
+                num_devices)
+
+
+def paper_tasks(full: bool = False) -> List[Task]:
+    """The paper's Table-1 workloads (reduced unrolls in quick mode)."""
+    ts = 24 if full else 6
+    seg = 8 if full else 3
+    return [
+        make_task("rnnlm-2", S.rnnlm(2, time_steps=ts), 2),
+        make_task("rnnlm-4", S.rnnlm(4, time_steps=ts), 4),
+        make_task("gnmt-2", S.gnmt(2, time_steps=max(ts // 2, 3)), 2),
+        make_task("gnmt-4", S.gnmt(4, time_steps=max(ts // 2, 3)), 4),
+        make_task("transformer_xl-2", S.transformer_xl(2, segments=seg), 2),
+        make_task("transformer_xl-4", S.transformer_xl(4, segments=seg), 4),
+        make_task("inception", S.inception(modules=6 if not full else 9), 2),
+        make_task("wavenet-2", S.wavenet(2, 9 if not full else 18), 2),
+    ]
+
+
+def eval_placement(task: Task, placement: np.ndarray) -> Tuple[float, bool]:
+    mk, r, valid = task.env_true.rewards(jnp.asarray(placement)[None])
+    return float(mk[0]), bool(valid[0])
+
+
+def baseline_rows(task: Task) -> Dict[str, float]:
+    out = {}
+    for name, fn in (("human", B.human_expert), ("metis", B.metis_like),
+                     ("single", B.single_device)):
+        mk, valid = eval_placement(task, fn(task.graph, task.topo))
+        out[name] = mk if valid else float("inf")
+    rand = [eval_placement(task, B.random_placement(task.graph, task.topo, s))
+            for s in range(8)]
+    ok = [m for m, v in rand if v]
+    out["random"] = float(np.mean(ok)) if ok else float("inf")
+    return out
+
+
+def run_gdp_one(task: Task, iterations: int, seed: int = 0,
+                pcfg: Optional[PolicyConfig] = None,
+                ppo: Optional[PPOConfig] = None,
+                log_every: int = 0) -> Dict[str, Any]:
+    tr = PPOTrainer(pcfg or POLICY, ppo or PPO, seed=seed)
+    t0 = time.time()
+    best = np.inf
+    best_curve = []
+    for it in range(iterations):
+        m = tr.iteration(task.name, task.gb, task.env, task.num_devices)
+        if np.isfinite(m["best_makespan"]):
+            best = min(best, m["best_makespan"])
+        best_curve.append((time.time() - t0, best))
+        if log_every and it % log_every == 0:
+            print(f"  [gdp:{task.name}] it={it} best={best:.4f}")
+    best = min(best, tr.best_of_samples(task.gb, task.env_true,
+                                        task.num_devices, 16))
+    return {"best": float(best), "search_s": time.time() - t0,
+            "curve": best_curve[::max(len(best_curve) // 50, 1)],
+            "trainer": tr}
+
+
+def run_hdp(task: Task, iterations: int, seed: int = 0) -> Dict[str, Any]:
+    tr = HDPTrainer(HDPConfig(num_samples=32), seed=seed)
+    t0 = time.time()
+    best = tr.train(task.name, task.gb, task.env_true, task.num_devices,
+                    iterations)
+    return {"best": float(best), "search_s": time.time() - t0,
+            "history": tr.history[:: max(len(tr.history) // 50, 1)]}
+
+
+def time_to_quality(curve: List[Tuple[float, float]], target: float) -> float:
+    """Seconds until the search first reaches ``target`` makespan."""
+    for t, b in curve:
+        if b <= target:
+            return t
+    return float("inf")
+
+
+# ----------------------------------------------------------------- caching
+def load_cached() -> Dict[str, Any]:
+    if os.path.exists(RESULTS_PATH):
+        with open(RESULTS_PATH) as f:
+            return json.load(f)
+    return {}
+
+
+def save_cached(results: Dict[str, Any]) -> None:
+    os.makedirs(os.path.dirname(RESULTS_PATH), exist_ok=True)
+    tmp = RESULTS_PATH + ".tmp"
+    cleaned = _strip(results)
+    with open(tmp, "w") as f:
+        json.dump(cleaned, f, indent=1, default=float)
+    os.replace(tmp, RESULTS_PATH)
+
+
+def _strip(x):
+    if isinstance(x, dict):
+        return {k: _strip(v) for k, v in x.items() if k != "trainer"}
+    if isinstance(x, (list, tuple)):
+        return [_strip(v) for v in x]
+    return x

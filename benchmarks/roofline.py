@@ -1,0 +1,112 @@
+"""§Roofline: per (arch × shape × mesh) terms from the dry-run artifacts.
+
+Reads ``results/dryrun.json`` (produced by ``repro/launch/dryrun.py``) and
+derives, per cell:
+
+  compute    = HLO_FLOPs / peak            (per-device, trip-aware parse)
+  memory     = HLO_bytes / HBM_bw
+  collective = collective_bytes / link_bw
+  dominant term, MODEL_FLOPS (6·N·D (+attention term) for train,
+  2·N·D (+attn) for inference), useful-flops ratio, roofline fraction.
+
+MODEL_FLOPS here *includes* the attention quadratic term (2·B·L·H·hd·S²
+per direction, halved for causal), which dominates the 32k-prefill cells —
+without it the "useful compute" yardstick is meaningless at long context.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict
+
+from repro.configs import SHAPES, get_config
+from repro.configs.base import MIXER_ATTN, MIXER_ATTN_LOCAL
+
+DRYRUN_PATH = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "dryrun.json")
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """Analytic useful FLOPs (global) incl. the attention term."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    b, s = shape.global_batch, shape.seq_len
+    n_act = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens, fb = b * s, 3            # fwd + bwd = 3x fwd
+        ctx = s
+    elif shape.kind == "prefill":
+        tokens, fb = b * s, 1
+        ctx = s
+    else:
+        tokens, fb = b, 1
+        ctx = s                          # decode attends the full cache
+    base = 2.0 * n_act * tokens * fb
+    # attention term: per token per attn layer: 4*H*hd*ctx (qk+pv),
+    # halved for causal coverage during train/prefill.
+    n_attn = sum(1 for i in range(cfg.n_layers)
+                 if cfg.pattern[i % cfg.period].mixer in
+                 (MIXER_ATTN, MIXER_ATTN_LOCAL))
+    if cfg.enc_dec:
+        n_attn += cfg.n_enc_layers + cfg.n_layers    # self-enc + cross
+    half = 0.5 if shape.kind in ("train", "prefill") else 1.0
+    attn = 4.0 * cfg.n_heads * cfg.hd * ctx * half * tokens * n_attn * fb \
+        if n_attn else 0.0
+    # (local-attention layers only cover their window; counting them at full
+    # ctx makes this a slight over-estimate for gemma2 — conservative for
+    # the useful-flops ratio.)
+    return base + attn
+
+
+def rows() -> Dict[str, Dict]:
+    with open(DRYRUN_PATH) as f:
+        data = json.load(f)
+    out = {}
+    for key, v in sorted(data.items()):
+        if v.get("status") != "ok":
+            out[key] = {"status": v.get("status")}
+            continue
+        chips = v["chips"]
+        mf = model_flops(v["arch"], v["shape"])
+        t_c, t_m, t_l = v["t_compute_s"], v["t_memory_s"], v["t_collective_s"]
+        bound = max(t_c, t_m, t_l)
+        ideal = (mf / chips) / PEAK_FLOPS
+        out[key] = {
+            "status": "ok",
+            "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_l,
+            "dominant": v["dominant"],
+            "peak_gb": v["bytes_per_device"]["peak"] / 1e9,
+            "model_flops": mf,
+            "useful_ratio": (mf / chips) / max(v["hlo_flops"], 1.0),
+            # end-to-end fraction: ideal useful-compute time / binding term.
+            # The memory term is an UPPER BOUND (XLA-fallback attention
+            # materializes score tiles; parser over-approximates some
+            # buffer traffic) — see EXPERIMENTS.md §Roofline.
+            "roofline_fraction": ideal / max(bound, 1e-12),
+            # compute-roofline fraction (MFU-like): useful flops vs flops
+            # the compiled program actually executes.
+            "compute_fraction": ideal / max(t_c, 1e-12),
+        }
+    return out
+
+
+def main():
+    r = rows()
+    print("cell,t_compute_s,t_memory_s,t_collective_s,dominant,peak_gb,"
+          "useful_ratio,roofline_fraction,compute_fraction")
+    for k, v in r.items():
+        if v.get("status") != "ok":
+            print(f"{k},,,,{v.get('status')},,,,")
+            continue
+        print(f"{k},{v['t_compute_s']:.5f},{v['t_memory_s']:.5f},"
+              f"{v['t_collective_s']:.5f},{v['dominant']},"
+              f"{v['peak_gb']:.2f},{v['useful_ratio']:.3f},"
+              f"{v['roofline_fraction']:.4f},{v['compute_fraction']:.3f}")
+    return r
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,99 @@
+"""Benchmark orchestrator — one section per paper table/figure + roofline.
+
+Default is quick mode (minutes on one CPU core); ``--full`` reproduces the
+long campaign.  Longer cached campaign results (results/experiments.json,
+produced by ``benchmarks/campaign.py``) are merged into the report when
+present.  Output format: ``name,value,derived`` CSV lines per section.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def _section(title):
+    print(f"\n==== {title} " + "=" * max(0, 60 - len(title)), flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--skip-rl", action="store_true",
+                    help="only report cached RL results + roofline")
+    args = ap.parse_args()
+    quick = not args.full
+    t0 = time.time()
+
+    from benchmarks import common as C
+    cached = C.load_cached()
+
+    _section("Table 1: GDP-one vs HP/METIS/HDP (live quick run)")
+    if not args.skip_rl:
+        from benchmarks import table1_individual
+        rows = table1_individual.run(iterations=40 if quick else 400,
+                                     tasks=C.paper_tasks(full=not quick)[:4 if quick else 8])
+        for name, r in rows.items():
+            print(f"table1.{name},{r['gdp_one']:.5f},"
+                  f"hp={r['human']:.5f};hdp={r['hdp']:.5f};"
+                  f"dHP={r['speedup_vs_hp']*100:+.1f}%;"
+                  f"dHDP={r['speedup_vs_hdp']*100:+.1f}%")
+    if "table1" in cached:
+        print("-- cached campaign (longer search):")
+        for name, r in cached["table1"].items():
+            print(f"table1.campaign.{name},{r['gdp_one']:.5f},"
+                  f"hp={r['human']:.5f};hdp={r['hdp']:.5f};"
+                  f"dHP={r['speedup_vs_hp']*100:+.1f}%;"
+                  f"dHDP={r['speedup_vs_hdp']*100:+.1f}%;"
+                  f"search_x={r.get('search_speedup_vs_hdp', float('nan')):.1f}")
+
+    _section("Table 2: GDP-batch vs GDP-one")
+    if not args.skip_rl:
+        from benchmarks import table2_batch
+        rows = table2_batch.run(iterations=30 if quick else 300)
+        for name, r in rows.items():
+            print(f"table2.{name},{r['gdp_batch']:.5f},"
+                  f"one={r['gdp_one']:.5f};d={r['batch_speedup']*100:+.1f}%")
+    if "table2" in cached:
+        for name, r in cached["table2"].items():
+            print(f"table2.campaign.{name},{r['gdp_batch']:.5f},"
+                  f"one={r['gdp_one']:.5f};d={r['batch_speedup']*100:+.1f}%")
+
+    _section("Fig 2: generalization (zero-shot + finetune on hold-out)")
+    if not args.skip_rl:
+        from benchmarks import generalization
+        rows = generalization.run(pretrain_iters=25 if quick else 200,
+                                  finetune_iters=15 if quick else 50)
+        for name, r in rows.items():
+            print(f"gen.{name},{r['finetune']:.5f},"
+                  f"zs={r['zero_shot']:.5f};hp={r['human']:.5f}")
+    if "generalization" in cached:
+        for name, r in cached["generalization"].items():
+            print(f"gen.campaign.{name},{r['finetune']:.5f},"
+                  f"zs={r['zero_shot']:.5f};hp={r['human']:.5f}")
+
+    _section("Fig 3: ablations (attention / superposition)")
+    if not args.skip_rl:
+        from benchmarks import ablation
+        rows = ablation.run(iterations=25 if quick else 300)
+        for name, r in rows.items():
+            print(f"ablation.{name},{r.get('full', float('nan')):.5f},"
+                  f"no_attn={r.get('no_attention', float('nan')):.5f};"
+                  f"no_sp={r.get('no_superposition', float('nan')):.5f}")
+    if "ablation" in cached:
+        for name, r in cached["ablation"].items():
+            print(f"ablation.campaign.{name},{r.get('full', float('nan')):.5f},"
+                  f"no_attn={r.get('no_attention', float('nan')):.5f};"
+                  f"no_sp={r.get('no_superposition', float('nan')):.5f}")
+
+    _section("Roofline: dry-run terms per (arch x shape x mesh)")
+    try:
+        from benchmarks import roofline
+        roofline.main()
+    except FileNotFoundError:
+        print("roofline,SKIPPED,run repro/launch/dryrun.py first")
+
+    print(f"\n[benchmarks] total wall time: {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

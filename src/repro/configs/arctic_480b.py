@@ -1,0 +1,29 @@
+"""Snowflake Arctic-480B [hf:Snowflake/snowflake-arctic-base] —
+128-expert top-2 MoE with a dense residual MLP in parallel."""
+from repro.configs.base import (ArchConfig, FFN_MOE_DENSE, LayerDesc,
+                                MoEConfig, register)
+
+FULL = ArchConfig(
+    name="arctic-480b", family="moe",
+    n_layers=35, d_model=7168, n_heads=56, n_kv=8, d_ff=4864, vocab=32000,
+    head_dim=128, rope=True,
+    pattern=(LayerDesc(ffn=FFN_MOE_DENSE),),
+    moe=MoEConfig(num_experts=128, top_k=2, d_expert=4864,
+                  capacity_factor=1.25),
+    optimizer_state_dtype="bfloat16",   # 480B total params
+    microbatches=4,
+    notes="Dense-MoE hybrid residual; experts sharded over the model axis "
+          "(8 experts/chip at TP=16).",
+)
+
+REDUCED = ArchConfig(
+    name="arctic-480b", family="moe",
+    n_layers=2, d_model=64, n_heads=4, n_kv=2, d_ff=96, vocab=256,
+    head_dim=16, rope=True,
+    pattern=(LayerDesc(ffn=FFN_MOE_DENSE),),
+    moe=MoEConfig(num_experts=8, top_k=2, d_expert=96, capacity_factor=1.5),
+    param_dtype="float32", activ_dtype="float32",
+    optimizer_state_dtype="float32", remat=False,
+)
+
+register(FULL, REDUCED)

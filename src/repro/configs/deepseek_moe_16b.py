@@ -1,0 +1,33 @@
+"""DeepSeekMoE-16B [arXiv:2401.06066; hf] — fine-grained 64-expert top-6
+routing with 2 always-on shared experts.
+
+Deviation noted: the HF model uses a dense FFN in layer 0 only; we apply the
+MoE pattern uniformly (the dry-run cost difference is <2%), recorded here
+and in DESIGN.md.
+"""
+from repro.configs.base import (ArchConfig, FFN_MOE, LayerDesc, MoEConfig,
+                                register)
+
+FULL = ArchConfig(
+    name="deepseek-moe-16b", family="moe",
+    n_layers=28, d_model=2048, n_heads=16, n_kv=16, d_ff=1408, vocab=102400,
+    head_dim=128, rope=True,
+    pattern=(LayerDesc(ffn=FFN_MOE),),
+    moe=MoEConfig(num_experts=64, top_k=6, num_shared=2, d_expert=1408,
+                  capacity_factor=1.25),
+    optimizer_state_dtype="float32",
+    notes="fine-grained experts (d_expert=1408), 2 shared + 64 routed top-6.",
+)
+
+REDUCED = ArchConfig(
+    name="deepseek-moe-16b", family="moe",
+    n_layers=2, d_model=64, n_heads=4, n_kv=4, d_ff=48, vocab=256,
+    head_dim=16, rope=True,
+    pattern=(LayerDesc(ffn=FFN_MOE),),
+    moe=MoEConfig(num_experts=8, top_k=3, num_shared=2, d_expert=48,
+                  capacity_factor=1.5),
+    param_dtype="float32", activ_dtype="float32",
+    optimizer_state_dtype="float32", remat=False,
+)
+
+register(FULL, REDUCED)

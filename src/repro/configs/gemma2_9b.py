@@ -1,0 +1,28 @@
+"""Gemma2-9B [arXiv:2408.00118; hf] — local/global alternating, softcaps."""
+from repro.configs.base import (ArchConfig, LayerDesc, MIXER_ATTN,
+                                MIXER_ATTN_LOCAL, register)
+
+FULL = ArchConfig(
+    name="gemma2-9b", family="dense",
+    n_layers=42, d_model=3584, n_heads=16, n_kv=8, d_ff=14336, vocab=256000,
+    head_dim=256, rope=True,
+    pattern=(LayerDesc(mixer=MIXER_ATTN_LOCAL), LayerDesc(mixer=MIXER_ATTN)),
+    local_window=4096,
+    attn_softcap=50.0, final_softcap=30.0,
+    optimizer_state_dtype="float32",
+    logits_chunk=512,   # 256k vocab: chunked CE is load-bearing here
+    notes="local(4096)+global alternation; attn/final logit softcaps; "
+          "256k vocab requires streaming cross-entropy.",
+)
+
+REDUCED = ArchConfig(
+    name="gemma2-9b", family="dense",
+    n_layers=2, d_model=64, n_heads=4, n_kv=2, d_ff=128, vocab=512,
+    head_dim=16, rope=True,
+    pattern=(LayerDesc(mixer=MIXER_ATTN_LOCAL), LayerDesc(mixer=MIXER_ATTN)),
+    local_window=16, attn_softcap=50.0, final_softcap=30.0,
+    param_dtype="float32", activ_dtype="float32",
+    optimizer_state_dtype="float32", remat=False, logits_chunk=64,
+)
+
+register(FULL, REDUCED)

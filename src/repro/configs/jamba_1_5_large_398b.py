@@ -1,0 +1,42 @@
+"""Jamba-1.5-Large-398B [arXiv:2403.19887; hf] — Mamba+attention 1:7
+interleave with 16-expert top-2 MoE every other layer.
+
+Period-8 block: layer 0 attention, layers 1-7 Mamba; MoE on odd layers,
+dense FFN on even.  Mamba is implemented in the chunked SSD formulation
+(TPU adaptation, DESIGN.md §3).  Sub-quadratic overall (attention minority,
+KV cache on 9 of 72 layers): runs ``long_500k``.
+"""
+from repro.configs.base import (ArchConfig, FFN_DENSE, FFN_MOE, LayerDesc,
+                                MIXER_ATTN, MIXER_MAMBA, MoEConfig, register)
+
+_PATTERN = tuple(
+    LayerDesc(mixer=MIXER_ATTN if i == 0 else MIXER_MAMBA,
+              ffn=FFN_MOE if i % 2 == 1 else FFN_DENSE)
+    for i in range(8)
+)
+
+FULL = ArchConfig(
+    name="jamba-1.5-large-398b", family="hybrid",
+    n_layers=72, d_model=8192, n_heads=64, n_kv=8, d_ff=24576, vocab=65536,
+    head_dim=128, rope=True,
+    pattern=_PATTERN,
+    moe=MoEConfig(num_experts=16, top_k=2, d_expert=24576,
+                  capacity_factor=1.25),
+    ssm_state=64, ssm_heads=128,
+    optimizer_state_dtype="bfloat16",   # 398B total params
+    microbatches=4,
+    notes="1:7 attn:mamba interleave; 9 groups of 8; MoE 16e top-2.",
+)
+
+REDUCED = ArchConfig(
+    name="jamba-1.5-large-398b", family="hybrid",
+    n_layers=8, d_model=64, n_heads=4, n_kv=2, d_ff=96, vocab=256,
+    head_dim=16, rope=True,
+    pattern=_PATTERN,
+    moe=MoEConfig(num_experts=4, top_k=2, d_expert=96, capacity_factor=1.5),
+    ssm_state=16, ssm_heads=4,
+    param_dtype="float32", activ_dtype="float32",
+    optimizer_state_dtype="float32", remat=False,
+)
+
+register(FULL, REDUCED)

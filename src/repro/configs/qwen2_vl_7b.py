@@ -1,0 +1,28 @@
+"""Qwen2-VL-7B [arXiv:2409.12191; hf] — VLM backbone with M-RoPE.
+
+Vision frontend is a STUB per the brief: ``input_specs()`` provides
+precomputed patch embeddings (B, n_patches, d_model) plus a vision mask;
+patch embeddings are spliced into the token embedding stream.  M-RoPE uses
+3-channel (temporal, h, w) position ids supplied as input.
+"""
+from repro.configs.base import ArchConfig, LayerDesc, register
+
+FULL = ArchConfig(
+    name="qwen2-vl-7b", family="vlm",
+    n_layers=28, d_model=3584, n_heads=28, n_kv=4, d_ff=18944, vocab=152064,
+    head_dim=128, rope=True, mrope=True, frontend="vision",
+    pattern=(LayerDesc(),),
+    optimizer_state_dtype="float32",
+    notes="M-RoPE (t/h/w sections); 28 heads pad onto the 16-way model axis.",
+)
+
+REDUCED = ArchConfig(
+    name="qwen2-vl-7b", family="vlm",
+    n_layers=2, d_model=64, n_heads=4, n_kv=2, d_ff=128, vocab=256,
+    head_dim=16, rope=True, mrope=True, frontend="vision",
+    pattern=(LayerDesc(),),
+    param_dtype="float32", activ_dtype="float32",
+    optimizer_state_dtype="float32", remat=False,
+)
+
+register(FULL, REDUCED)

@@ -1,0 +1,21 @@
+"""Qwen3-8B [hf:Qwen/Qwen3-8B] — dense GQA decoder with qk-norm."""
+from repro.configs.base import ArchConfig, LayerDesc, register
+
+FULL = ArchConfig(
+    name="qwen3-8b", family="dense",
+    n_layers=36, d_model=4096, n_heads=32, n_kv=8, d_ff=12288, vocab=151936,
+    head_dim=128, rope=True, rope_theta=1e6, qk_norm=True,
+    pattern=(LayerDesc(),),
+    optimizer_state_dtype="float32",
+    notes="qk_norm (per-head RMSNorm on q and k before RoPE).",
+)
+
+REDUCED = ArchConfig(
+    name="qwen3-8b", family="dense",
+    n_layers=2, d_model=64, n_heads=4, n_kv=2, d_ff=128, vocab=256,
+    head_dim=16, rope=True, qk_norm=True, pattern=(LayerDesc(),),
+    param_dtype="float32", activ_dtype="float32",
+    optimizer_state_dtype="float32", remat=False,
+)
+
+register(FULL, REDUCED)

@@ -1,0 +1,21 @@
+"""StarCoder2-3B [arXiv:2402.19173; hf] — dense GQA decoder, RoPE."""
+from repro.configs.base import ArchConfig, LayerDesc, register
+
+FULL = ArchConfig(
+    name="starcoder2-3b", family="dense",
+    n_layers=30, d_model=3072, n_heads=24, n_kv=2, d_ff=12288, vocab=49152,
+    head_dim=128, rope=True, rope_theta=1e6,
+    pattern=(LayerDesc(),),
+    optimizer_state_dtype="float32",
+    notes="GQA kv=2; 24 heads pad to the 16-way model axis under GSPMD.",
+)
+
+REDUCED = ArchConfig(
+    name="starcoder2-3b", family="dense",
+    n_layers=2, d_model=64, n_heads=4, n_kv=2, d_ff=128, vocab=256,
+    head_dim=16, rope=True, pattern=(LayerDesc(),),
+    param_dtype="float32", activ_dtype="float32",
+    optimizer_state_dtype="float32", remat=False,
+)
+
+register(FULL, REDUCED)

@@ -1,0 +1,29 @@
+"""Whisper-base [arXiv:2212.04356; unverified] — encoder-decoder backbone.
+
+Per the brief the conv audio frontend is a STUB: ``input_specs()`` feeds
+precomputed frame embeddings of shape (B, S, d_model) to the encoder.
+Positional mechanism adapted to RoPE (original: sinusoidal/learned) —
+recorded in DESIGN.md §8.
+"""
+from repro.configs.base import ArchConfig, LayerDesc, register
+
+FULL = ArchConfig(
+    name="whisper-base", family="audio",
+    n_layers=6, d_model=512, n_heads=8, n_kv=8, d_ff=2048, vocab=51865,
+    head_dim=64, rope=True,
+    pattern=(LayerDesc(),),
+    enc_dec=True, n_enc_layers=6, frontend="audio",
+    optimizer_state_dtype="float32",
+    notes="enc-dec; decoder self-attn causal + cross-attn to encoder output.",
+)
+
+REDUCED = ArchConfig(
+    name="whisper-base", family="audio",
+    n_layers=2, d_model=64, n_heads=4, n_kv=4, d_ff=128, vocab=256,
+    head_dim=16, rope=True, pattern=(LayerDesc(),),
+    enc_dec=True, n_enc_layers=2, frontend="audio",
+    param_dtype="float32", activ_dtype="float32",
+    optimizer_state_dtype="float32", remat=False,
+)
+
+register(FULL, REDUCED)

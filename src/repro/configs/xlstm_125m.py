@@ -1,0 +1,34 @@
+"""xLSTM-125M [arXiv:2405.04517; unverified] — sLSTM + mLSTM blocks.
+
+d_ff=0 in the assignment: the mLSTM/sLSTM blocks carry the channel mixing
+(FFN_NONE).  mLSTM is implemented in its chunkwise-parallel (gated linear
+attention) form — the TPU-native formulation (DESIGN.md §3); sLSTM is a
+true scalar recurrence over time (lax.scan).  Sub-quadratic: runs
+``long_500k``.
+"""
+from repro.configs.base import (ArchConfig, FFN_NONE, LayerDesc, MIXER_MLSTM,
+                                MIXER_SLSTM, register)
+
+FULL = ArchConfig(
+    name="xlstm-125m", family="ssm",
+    n_layers=12, d_model=768, n_heads=4, n_kv=4, d_ff=0, vocab=50304,
+    head_dim=192, rope=False,
+    pattern=(LayerDesc(mixer=MIXER_MLSTM, ffn=FFN_NONE),
+             LayerDesc(mixer=MIXER_SLSTM, ffn=FFN_NONE)),
+    ssm_state=64, ssm_heads=4,
+    optimizer_state_dtype="float32",
+    notes="O(1) decode state per layer; long_500k enabled.",
+)
+
+REDUCED = ArchConfig(
+    name="xlstm-125m", family="ssm",
+    n_layers=2, d_model=64, n_heads=4, n_kv=4, d_ff=0, vocab=256,
+    head_dim=16, rope=False,
+    pattern=(LayerDesc(mixer=MIXER_MLSTM, ffn=FFN_NONE),
+             LayerDesc(mixer=MIXER_SLSTM, ffn=FFN_NONE)),
+    ssm_state=16, ssm_heads=4,
+    param_dtype="float32", activ_dtype="float32",
+    optimizer_state_dtype="float32", remat=False,
+)
+
+register(FULL, REDUCED)

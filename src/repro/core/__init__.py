@@ -1,0 +1,9 @@
+# The paper's primary contribution: the end-to-end GDP placement policy
+# (graph IR, GraphSAGE embedder, segment-recurrent Transformer placer,
+# parameter superposition, PPO trainer) plus the baselines it is compared
+# against.  Substrates live in sibling subpackages (sim/, graphs/, optim/,
+# ckpt/, models/, launch/, kernels/).
+from repro.core.graph import DataflowGraph, GraphBuilder, OP_TYPES  # noqa: F401
+from repro.core.featurize import GraphBatch, featurize  # noqa: F401
+from repro.core.policy import PolicyConfig  # noqa: F401
+from repro.core.ppo import PPOConfig, PPOTrainer  # noqa: F401

@@ -1,0 +1,68 @@
+"""Export a GDP placement to TPU-consumable artifacts.
+
+GPU placement assigns ops to devices and lets the runtime move tensors.
+TPUs run SPMD programs, so the TPU-meaningful artifact (DESIGN.md §3) is a
+**stage assignment**: the per-node device ids become per-node *stages*,
+which the launcher can consume as (a) a pipeline-stage split (contiguousized
+in topo order) or (b) a mesh sub-axis assignment.  This module converts and
+sanity-checks placements into that form.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.graph import DataflowGraph
+
+
+@dataclasses.dataclass
+class StagePlan:
+    """Contiguous pipeline-stage split derived from a placement."""
+    graph_name: str
+    num_stages: int
+    boundaries: List[int]          # node-index cut points, len = num_stages-1
+    stage_of_node: np.ndarray      # int32[N]
+    stage_flops: np.ndarray        # float64[num_stages]
+    cut_bytes: float               # bytes crossing stage boundaries
+
+
+def placement_to_stage_plan(g: DataflowGraph, placement: np.ndarray,
+                            num_devices: int) -> StagePlan:
+    """Contiguousize a placement into pipeline stages.
+
+    Each node's stage is the placement device remapped by the order in which
+    devices first appear along topological order (so stage ids increase).
+    Nodes whose device breaks contiguity are merged into the surrounding
+    majority window — the resulting plan is a valid pipeline split with the
+    same balance characteristics the policy chose.
+    """
+    n = g.num_nodes
+    p = np.asarray(placement[:n], np.int64)
+    first_seen: Dict[int, int] = {}
+    for v in range(n):
+        first_seen.setdefault(int(p[v]), len(first_seen))
+    remap = np.array([first_seen.get(d, 0) for d in range(num_devices)])
+    stages = remap[p]
+
+    # enforce monotone non-decreasing stages (pipeline validity)
+    stages = np.maximum.accumulate(stages)
+    num_stages = int(stages.max()) + 1 if n else 1
+
+    boundaries = [int(np.searchsorted(stages, s)) for s in range(1, num_stages)]
+    stage_flops = np.zeros(num_stages)
+    np.add.at(stage_flops, stages, g.flops)
+    cut = 0.0
+    for s, d in zip(g.src, g.dst):
+        if stages[s] != stages[d]:
+            cut += float(g.out_bytes[s])
+    return StagePlan(g.name, num_stages, boundaries, stages.astype(np.int32),
+                     stage_flops, cut)
+
+
+def plan_summary(plan: StagePlan) -> str:
+    fl = plan.stage_flops
+    imb = float(fl.max() / max(fl.mean(), 1e-9)) if len(fl) else 1.0
+    return (f"{plan.graph_name}: {plan.num_stages} stages, "
+            f"flop imbalance={imb:.2f}, cut={plan.cut_bytes/1e6:.1f}MB")

@@ -1,0 +1,115 @@
+"""Graph featurization: DataflowGraph -> padded arrays for the policy.
+
+Node features (paper §3.1: "concatenation of meta features (e.g. operation
+type, output shape, adjacent node ids)"):
+
+* op type            -> embedding id (looked up inside the GNN)
+* log-scaled flops / output bytes / resident bytes
+* log in/out degree
+* topological position fraction
+* log output-shape dims (up to rank 4)
+
+Graphs in a batch are padded to a common (N, K); the sentinel neighbor index
+is N (a zero/-inf feature row is appended where needed).
+"""
+from __future__ import annotations
+
+from typing import List, NamedTuple, Optional
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.graph import DataflowGraph, MAX_SHAPE_RANK
+
+NUM_NUMERIC_FEATURES = 6 + MAX_SHAPE_RANK
+
+
+class GraphBatch(NamedTuple):
+    """One (optionally padded) graph ready for the policy network."""
+    op: jnp.ndarray          # i32[N]
+    feats: jnp.ndarray       # f32[N, F]
+    nbr_idx: jnp.ndarray     # i32[N, K]   sentinel = N
+    nbr_mask: jnp.ndarray    # f32[N, K]
+    node_mask: jnp.ndarray   # f32[N]
+    mem_frac: jnp.ndarray    # f32[N]  node resident bytes / device capacity
+    comp_frac: jnp.ndarray   # f32[N]  node compute time / graph total
+    num_nodes: int           # real node count (static python int)
+
+
+def featurize(g: DataflowGraph, max_deg: int = 8,
+              pad_to: Optional[int] = None, topo=None) -> GraphBatch:
+    """``topo`` (sim.device.Topology) enables the resource-aware decoder
+    context: per-node memory/compute fractions the AR placer accumulates
+    per device while decoding (DESIGN.md §5-addendum)."""
+    n = g.num_nodes
+    pad_n = pad_to or n
+    assert pad_n >= n, (pad_n, n)
+
+    f = np.zeros((pad_n, NUM_NUMERIC_FEATURES), np.float32)
+    f[:n, 0] = np.log1p(g.flops) / 30.0
+    f[:n, 1] = np.log1p(g.out_bytes) / 30.0
+    f[:n, 2] = np.log1p(g.mem_bytes) / 30.0
+    f[:n, 3] = np.log1p(g.in_degree()) / 5.0
+    f[:n, 4] = np.log1p(g.out_degree()) / 5.0
+    f[:n, 5] = np.arange(n, dtype=np.float32) / max(n - 1, 1)
+    f[:n, 6:6 + MAX_SHAPE_RANK] = np.log1p(g.out_shape) / 20.0
+
+    idx, mask = g.all_neighbors_padded(max_deg)
+    k = idx.shape[1]
+    nbr_idx = np.full((pad_n, k), pad_n, np.int32)
+    nbr_idx[:n] = np.where(idx == n, pad_n, idx)
+    nbr_mask = np.zeros((pad_n, k), np.float32)
+    nbr_mask[:n] = mask
+
+    op = np.zeros(pad_n, np.int32)
+    op[:n] = g.op_type
+    node_mask = np.zeros(pad_n, np.float32)
+    node_mask[:n] = 1.0
+
+    mem_frac = np.zeros(pad_n, np.float32)
+    comp_frac = np.zeros(pad_n, np.float32)
+    if topo is not None:
+        from repro.sim.cost_model import node_compute_times
+        mem_frac[:n] = g.mem_bytes / topo.spec.mem_bytes
+        ct = node_compute_times(g, topo.spec)
+        comp_frac[:n] = ct / max(ct.sum(), 1e-12)
+    return GraphBatch(jnp.asarray(op), jnp.asarray(f), jnp.asarray(nbr_idx),
+                      jnp.asarray(nbr_mask), jnp.asarray(node_mask),
+                      jnp.asarray(mem_frac), jnp.asarray(comp_frac), n)
+
+
+def pad_to_common(batches: List[GraphBatch]) -> List[GraphBatch]:
+    """Re-pad a list of GraphBatches to identical (N, K) for stacking."""
+    n = max(b.op.shape[0] for b in batches)
+    k = max(b.nbr_idx.shape[1] for b in batches)
+    out = []
+    for b in batches:
+        bn, bk = b.op.shape[0], b.nbr_idx.shape[1]
+        op = jnp.zeros(n, jnp.int32).at[:bn].set(b.op)
+        feats = jnp.zeros((n, b.feats.shape[1]), jnp.float32).at[:bn].set(b.feats)
+        idx = jnp.full((n, k), n, jnp.int32)
+        # remap old sentinel (bn) -> new sentinel (n)
+        old = jnp.where(b.nbr_idx == bn, n, b.nbr_idx)
+        idx = idx.at[:bn, :bk].set(old)
+        mask = jnp.zeros((n, k), jnp.float32).at[:bn, :bk].set(b.nbr_mask)
+        nmask = jnp.zeros(n, jnp.float32).at[:bn].set(b.node_mask)
+        memf = jnp.zeros(n, jnp.float32).at[:bn].set(b.mem_frac)
+        compf = jnp.zeros(n, jnp.float32).at[:bn].set(b.comp_frac)
+        out.append(GraphBatch(op, feats, idx, mask, nmask, memf, compf,
+                              b.num_nodes))
+    return out
+
+
+def stack_batches(batches: List[GraphBatch]) -> GraphBatch:
+    """Stack equal-shape GraphBatches along a leading axis (for GDP-batch)."""
+    padded = pad_to_common(batches)
+    return GraphBatch(
+        op=jnp.stack([b.op for b in padded]),
+        feats=jnp.stack([b.feats for b in padded]),
+        nbr_idx=jnp.stack([b.nbr_idx for b in padded]),
+        nbr_mask=jnp.stack([b.nbr_mask for b in padded]),
+        node_mask=jnp.stack([b.node_mask for b in padded]),
+        mem_frac=jnp.stack([b.mem_frac for b in padded]),
+        comp_frac=jnp.stack([b.comp_frac for b in padded]),
+        num_nodes=max(b.num_nodes for b in padded),
+    )

@@ -1,0 +1,270 @@
+"""Dataflow-graph IR for GDP.
+
+A :class:`DataflowGraph` is the unit the whole framework operates on: the
+GDP policy consumes it, the simulator schedules it, baselines partition it,
+and ``graphs/jaxpr_extract.py`` produces one from any JAX computation.
+
+Representation: structure-of-arrays over nodes in a fixed topological order
+(every edge satisfies ``src < dst``), which makes the simulator a single
+``lax.fori_loop`` and lets the placer treat the graph as a sequence.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Op-type vocabulary.
+#
+# Mirrors the granularity of TF/XLA dataflow graphs the paper places: a small
+# closed vocabulary of compute classes; unknown ops fall into OTHER.  The
+# vocabulary doubles as the embedding table index space for featurization.
+# ---------------------------------------------------------------------------
+OP_TYPES: Tuple[str, ...] = (
+    "parameter",      # weights / constants resident on a device
+    "input",          # graph inputs (activations entering)
+    "matmul",         # dense matmul / fully-connected
+    "conv",           # convolution
+    "depthwise_conv",
+    "elementwise",    # add/mul/relu/sigmoid/... fused pointwise
+    "reduce",         # reductions (sum/max/mean/softmax-denominator)
+    "softmax",
+    "embedding",      # gather from an embedding table
+    "lstm_cell",      # fused recurrent cell
+    "attention",      # fused attention block
+    "layernorm",
+    "concat",
+    "split",
+    "transpose",
+    "reshape",
+    "gather",
+    "scatter",
+    "pool",
+    "loss",
+    "update",         # optimizer update ops
+    "collective",     # pre-existing collectives in the traced graph
+    "dynamic_slice",
+    "scan",           # fused loop body (jaxpr scan)
+    "other",
+)
+OP_TYPE_TO_ID: Dict[str, int] = {name: i for i, name in enumerate(OP_TYPES)}
+NUM_OP_TYPES = len(OP_TYPES)
+
+# Maximum tensor rank we featurize explicitly.
+MAX_SHAPE_RANK = 4
+
+
+def op_id(name: str) -> int:
+    return OP_TYPE_TO_ID.get(name, OP_TYPE_TO_ID["other"])
+
+
+@dataclasses.dataclass
+class DataflowGraph:
+    """Topologically-sorted dataflow graph with per-node cost metadata.
+
+    Attributes
+    ----------
+    name:       human-readable identifier, e.g. ``"gnmt-4"``.
+    op_type:    int32[N]   index into :data:`OP_TYPES`.
+    flops:      float64[N] compute cost of the node.
+    out_bytes:  float64[N] size of the node's output tensor.
+    mem_bytes:  float64[N] bytes resident while the node's output is alive
+                (parameters count their full size here).
+    out_shape:  int64[N, MAX_SHAPE_RANK] output shape, zero padded.
+    src, dst:   int32[E] edge list with src < dst (topological order).
+    """
+
+    name: str
+    op_type: np.ndarray
+    flops: np.ndarray
+    out_bytes: np.ndarray
+    mem_bytes: np.ndarray
+    out_shape: np.ndarray
+    src: np.ndarray
+    dst: np.ndarray
+
+    # ------------------------------------------------------------------ api
+    @property
+    def num_nodes(self) -> int:
+        return int(self.op_type.shape[0])
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.src.shape[0])
+
+    def validate(self) -> None:
+        n, e = self.num_nodes, self.num_edges
+        assert self.flops.shape == (n,)
+        assert self.out_bytes.shape == (n,)
+        assert self.mem_bytes.shape == (n,)
+        assert self.out_shape.shape == (n, MAX_SHAPE_RANK)
+        assert self.src.shape == (e,) and self.dst.shape == (e,)
+        if e:
+            assert self.src.min() >= 0 and self.dst.max() < n
+            if not np.all(self.src < self.dst):
+                raise ValueError(f"{self.name}: edges not topologically sorted")
+        assert np.all(self.flops >= 0) and np.all(self.out_bytes >= 0)
+
+    # -------------------------------------------------------- neighborhoods
+    def in_neighbors_padded(self, max_deg: Optional[int] = None) -> Tuple[np.ndarray, np.ndarray]:
+        """Padded in-neighbor matrix ``(idx[N, K], mask[N, K])``.
+
+        Padding index is ``num_nodes`` (callers append a sentinel feature
+        row).  If a node has more than ``max_deg`` in-edges, the largest
+        producers (by out_bytes) are kept — they dominate transfer cost.
+        """
+        return _padded_neighbors(self.dst, self.src, self.num_nodes,
+                                 self.out_bytes, max_deg)
+
+    def out_neighbors_padded(self, max_deg: Optional[int] = None) -> Tuple[np.ndarray, np.ndarray]:
+        return _padded_neighbors(self.src, self.dst, self.num_nodes,
+                                 self.out_bytes, max_deg)
+
+    def all_neighbors_padded(self, max_deg: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Union of in- and out-neighbors (GraphSAGE aggregates undirected)."""
+        ii, mi = self.in_neighbors_padded(max_deg)
+        oo, mo = self.out_neighbors_padded(max_deg)
+        idx = np.concatenate([ii, oo], axis=1)
+        mask = np.concatenate([mi, mo], axis=1)
+        return idx, mask
+
+    def in_degree(self) -> np.ndarray:
+        return np.bincount(self.dst, minlength=self.num_nodes).astype(np.int32)
+
+    def out_degree(self) -> np.ndarray:
+        return np.bincount(self.src, minlength=self.num_nodes).astype(np.int32)
+
+    # ------------------------------------------------------------- utility
+    def total_flops(self) -> float:
+        return float(self.flops.sum())
+
+    def total_mem(self) -> float:
+        return float(self.mem_bytes.sum())
+
+    def subgraph_stats(self) -> str:
+        return (f"{self.name}: N={self.num_nodes} E={self.num_edges} "
+                f"GFLOPs={self.total_flops()/1e9:.2f} mem={self.total_mem()/1e9:.2f}GB")
+
+
+def _padded_neighbors(key: np.ndarray, val: np.ndarray, n: int,
+                      weight: np.ndarray, max_deg: Optional[int]) -> Tuple[np.ndarray, np.ndarray]:
+    deg = np.bincount(key, minlength=n)
+    k = int(deg.max()) if deg.size and deg.max() > 0 else 1
+    if max_deg is not None:
+        k = min(k, max_deg)
+    k = max(k, 1)
+    idx = np.full((n, k), n, dtype=np.int32)  # sentinel = n
+    mask = np.zeros((n, k), dtype=bool)
+    order = np.argsort(key, kind="stable")
+    key_s, val_s = key[order], val[order]
+    starts = np.searchsorted(key_s, np.arange(n))
+    ends = np.searchsorted(key_s, np.arange(n) + 1)
+    for v in range(n):
+        nb = val_s[starts[v]:ends[v]]
+        if nb.size > k:
+            # keep heaviest producers
+            w = weight[nb]
+            nb = nb[np.argsort(-w, kind="stable")[:k]]
+        idx[v, :nb.size] = nb
+        mask[v, :nb.size] = True
+    return idx, mask
+
+
+# ---------------------------------------------------------------------------
+# GraphBuilder — convenience for generators.
+# ---------------------------------------------------------------------------
+class GraphBuilder:
+    """Append-only builder that guarantees topological edge order."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self._op: List[int] = []
+        self._flops: List[float] = []
+        self._out_bytes: List[float] = []
+        self._mem: List[float] = []
+        self._shape: List[Tuple[int, ...]] = []
+        self._src: List[int] = []
+        self._dst: List[int] = []
+
+    def add(self, op: str, shape: Sequence[int] = (), *, flops: float = 0.0,
+            deps: Sequence[int] = (), dtype_bytes: int = 4,
+            extra_mem: float = 0.0) -> int:
+        """Add a node; returns its id.  ``deps`` must already exist."""
+        nid = len(self._op)
+        numel = float(np.prod(shape)) if len(shape) else 1.0
+        out_b = numel * dtype_bytes
+        self._op.append(op_id(op))
+        self._flops.append(float(flops))
+        self._out_bytes.append(out_b)
+        self._mem.append(out_b + float(extra_mem))
+        self._shape.append(tuple(int(s) for s in shape[:MAX_SHAPE_RANK]))
+        for d in deps:
+            if not (0 <= d < nid):
+                raise ValueError(f"bad dep {d} for node {nid}")
+            self._src.append(d)
+            self._dst.append(nid)
+        return nid
+
+    def param(self, shape: Sequence[int], dtype_bytes: int = 4) -> int:
+        return self.add("parameter", shape, dtype_bytes=dtype_bytes)
+
+    def build(self) -> DataflowGraph:
+        n = len(self._op)
+        shp = np.zeros((n, MAX_SHAPE_RANK), dtype=np.int64)
+        for i, s in enumerate(self._shape):
+            shp[i, :len(s)] = s
+        g = DataflowGraph(
+            name=self.name,
+            op_type=np.asarray(self._op, dtype=np.int32),
+            flops=np.asarray(self._flops, dtype=np.float64),
+            out_bytes=np.asarray(self._out_bytes, dtype=np.float64),
+            mem_bytes=np.asarray(self._mem, dtype=np.float64),
+            out_shape=shp,
+            src=np.asarray(self._src, dtype=np.int32),
+            dst=np.asarray(self._dst, dtype=np.int32),
+        )
+        g.validate()
+        return g
+
+
+def topo_relabel(name: str, op_type, flops, out_bytes, mem_bytes, out_shape,
+                 src, dst) -> DataflowGraph:
+    """Build a graph from arbitrarily-ordered nodes by topologically sorting."""
+    n = len(op_type)
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    indeg = np.bincount(dst, minlength=n)
+    children: List[List[int]] = [[] for _ in range(n)]
+    for s, d in zip(src, dst):
+        children[int(s)].append(int(d))
+    order: List[int] = []
+    stack = [v for v in range(n) if indeg[v] == 0]
+    indeg = indeg.copy()
+    while stack:
+        v = stack.pop()
+        order.append(v)
+        for c in children[v]:
+            indeg[c] -= 1
+            if indeg[c] == 0:
+                stack.append(c)
+    if len(order) != n:
+        raise ValueError("graph has a cycle")
+    pos = np.empty(n, dtype=np.int64)
+    pos[np.asarray(order)] = np.arange(n)
+    perm = np.asarray(order)
+    g = DataflowGraph(
+        name=name,
+        op_type=np.asarray(op_type)[perm].astype(np.int32),
+        flops=np.asarray(flops)[perm].astype(np.float64),
+        out_bytes=np.asarray(out_bytes)[perm].astype(np.float64),
+        mem_bytes=np.asarray(mem_bytes)[perm].astype(np.float64),
+        out_shape=np.asarray(out_shape)[perm].astype(np.int64),
+        src=pos[src].astype(np.int32),
+        dst=pos[dst].astype(np.int32),
+    )
+    # edges may still be (u>v) if sort emitted child first — cannot happen in
+    # Kahn order, but keep the check.
+    g.validate()
+    return g

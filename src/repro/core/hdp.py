@@ -1,0 +1,173 @@
+"""HDP-like hierarchical placement baseline (Mirhoseini et al., 2018).
+
+Two-stage controller reproduced for the paper's comparisons:
+
+* **Grouper**: feed-forward softmax assigning each op to one of G groups
+  (non-differentiable sampling — the reason HDP cannot train end-to-end;
+  group features are *averaged* member features, the paper's §3.2 critique).
+* **Placer**: LSTM seq2seq over group embeddings emitting one device per
+  group.
+
+Both stages train jointly with REINFORCE + running-average baseline on the
+same simulator reward, which reproduces HDP's characteristically slower,
+noisier convergence (GDP's 15× convergence claim is measured against this).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import nn
+from repro.core.featurize import GraphBatch, NUM_NUMERIC_FEATURES
+from repro.core.graph import NUM_OP_TYPES
+from repro.optim import AdamConfig, adam_init, adam_update, clip_by_global_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class HDPConfig:
+    num_groups: int = 32
+    hidden: int = 128
+    op_emb: int = 32
+    lr: float = 1e-3
+    num_samples: int = 8
+    entropy_coef: float = 0.02
+
+
+def init(key, cfg: HDPConfig, max_devices: int = 16) -> Dict[str, Any]:
+    ks = nn.split_keys(key, 8)
+    h = cfg.hidden
+    return {
+        "op_emb": nn.embedding_init(ks[0], NUM_OP_TYPES + 1, cfg.op_emb),
+        "g1": nn.dense_init(ks[1], cfg.op_emb + NUM_NUMERIC_FEATURES, h),
+        "g2": nn.dense_init(ks[2], h, cfg.num_groups),
+        "emb": nn.dense_init(ks[3], cfg.op_emb + NUM_NUMERIC_FEATURES + 1, h),
+        "lstm_x": nn.dense_init(ks[4], h, 4 * h),
+        "lstm_h": nn.dense_init(ks[5], h, 4 * h),
+        "head": nn.dense_init(ks[6], h, max_devices, scale=1e-2),
+    }
+
+
+def _lstm_scan(params, xs):
+    h0 = jnp.zeros((params["lstm_h"]["w"].shape[0],))
+    c0 = jnp.zeros_like(h0)
+
+    def step(carry, x):
+        h, c = carry
+        gates = nn.dense(params["lstm_x"], x) + nn.dense(params["lstm_h"], h)
+        i, f, g, o = jnp.split(gates, 4)
+        c = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (h, c), h
+
+    _, hs = jax.lax.scan(step, (h0, c0), xs)
+    return hs
+
+
+def forward_sample(params, cfg: HDPConfig, gb: GraphBatch, num_devices: int,
+                   key) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sample one placement; returns (placement[N], total_logp scalar)."""
+    feats = jnp.concatenate([params["op_emb"][gb.op], gb.feats], -1)
+    glogits = nn.dense(params["g2"], jax.nn.relu(nn.dense(params["g1"], feats)))
+    k1, k2 = jax.random.split(key)
+    groups = jax.random.categorical(k1, glogits, axis=-1)          # [N]
+    glp = jnp.take_along_axis(jax.nn.log_softmax(glogits, -1),
+                              groups[:, None], -1)[:, 0]
+
+    # averaged member features per group (HDP's aggregation)
+    onehot = jax.nn.one_hot(groups, cfg.num_groups) * gb.node_mask[:, None]
+    counts = onehot.sum(0)                                          # [G]
+    gfeat = (onehot.T @ feats) / jnp.maximum(counts[:, None], 1.0)
+    gfeat = jnp.concatenate([gfeat, jnp.log1p(counts)[:, None]], -1)
+    gemb = jax.nn.relu(nn.dense(params["emb"], gfeat))
+
+    hs = _lstm_scan(params, gemb)                                   # [G, H]
+    dlogits = nn.dense(params["head"], hs)
+    dmax = dlogits.shape[-1]
+    dlogits = jnp.where((jnp.arange(dmax) < num_devices)[None, :],
+                        dlogits, -1e9)
+    gdev = jax.random.categorical(k2, dlogits, axis=-1)             # [G]
+    dlp = jnp.take_along_axis(jax.nn.log_softmax(dlogits, -1),
+                              gdev[:, None], -1)[:, 0]
+
+    placement = gdev[groups].astype(jnp.int32)
+    used = counts > 0
+    logp = (glp * gb.node_mask).sum() + (dlp * used).sum()
+    return placement, logp
+
+
+@partial(jax.jit, static_argnames=("cfg", "num_devices", "m"))
+def _sample_batch(params, cfg: HDPConfig, gb: GraphBatch, num_devices: int,
+                  key, m: int):
+    keys = jax.random.split(key, m)
+    return jax.vmap(lambda k: forward_sample(params, cfg, gb, num_devices, k))(keys)
+
+
+def _reinforce_loss(params, cfg, gb, num_devices, keys, adv):
+    _, logps = jax.vmap(
+        lambda k: forward_sample(params, cfg, gb, num_devices, k))(keys)
+    return -(logps * adv).mean()
+
+
+@partial(jax.jit, static_argnames=("cfg", "ocfg", "num_devices"))
+def _update(params, opt_state, cfg: HDPConfig, ocfg: AdamConfig,
+            gb: GraphBatch, num_devices: int, keys, adv):
+    loss, grads = jax.value_and_grad(_reinforce_loss)(
+        params, cfg, gb, num_devices, keys, adv)
+    grads, _ = clip_by_global_norm(grads, 1.0)
+    params, opt_state = adam_update(grads, opt_state, params, ocfg)
+    return params, opt_state, loss
+
+
+class HDPTrainer:
+    """Same interface surface as PPOTrainer for the comparison harness."""
+
+    def __init__(self, cfg: HDPConfig, seed: int = 0, max_devices: int = 16):
+        self.cfg = cfg
+        self.ocfg = AdamConfig(lr=cfg.lr)
+        self.key = jax.random.PRNGKey(seed)
+        self.params = init(jax.random.PRNGKey(seed + 1), cfg, max_devices)
+        self.opt_state = adam_init(self.params, self.ocfg)
+        self.baseline = 0.0
+        self.count = 0
+        self.history: List[Dict[str, float]] = []
+
+    def _next_key(self):
+        self.key, k = jax.random.split(self.key)
+        return k
+
+    def train(self, name: str, gb: GraphBatch, env, num_devices: int,
+              iterations: int, log_every: int = 0) -> float:
+        best = np.inf
+        t0 = time.time()
+        for it in range(iterations):
+            k = self._next_key()
+            keys = jax.random.split(k, self.cfg.num_samples)
+            placements, _ = _sample_batch(self.params, self.cfg, gb,
+                                          num_devices, k, self.cfg.num_samples)
+            mk, rewards, valid = env.rewards(placements)
+            r = np.asarray(rewards)
+            bias = self.baseline if self.count else float(r.mean())
+            adv = r - bias
+            if adv.std() > 1e-6:
+                adv = (adv - adv.mean()) / (adv.std() + 1e-8)
+            total = self.baseline * self.count + r.sum()
+            self.count += r.size
+            self.baseline = total / self.count
+            self.params, self.opt_state, loss = _update(
+                self.params, self.opt_state, self.cfg, self.ocfg, gb,
+                num_devices, keys, jnp.asarray(adv))
+            mkv = np.where(np.asarray(valid), np.asarray(mk), np.inf)
+            best = min(best, float(mkv.min()))
+            self.history.append({"graph": name, "iter": it,
+                                 "best_makespan": best,
+                                 "reward_mean": float(r.mean()),
+                                 "elapsed_s": time.time() - t0})
+            if log_every and it % log_every == 0:
+                print(f"[hdp] it={it:4d} {name} best={best:.4f}s")
+        return best

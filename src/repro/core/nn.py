@@ -1,0 +1,49 @@
+"""Minimal parameter/NN toolkit (no flax in this environment).
+
+Parameters are plain pytrees of ``jnp.ndarray``; initializers are explicit;
+modules are pure functions ``(params, x) -> y``.  This is all the policy
+networks need, and the model zoo builds on the same conventions.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Params = Any  # pytree
+
+
+def dense_init(key, d_in: int, d_out: int, scale: float | None = None,
+               dtype=jnp.float32) -> Dict[str, jnp.ndarray]:
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    w = jax.random.normal(key, (d_in, d_out), dtype) * scale
+    return {"w": w, "b": jnp.zeros((d_out,), dtype)}
+
+
+def dense(p: Dict[str, jnp.ndarray], x: jnp.ndarray) -> jnp.ndarray:
+    return x @ p["w"] + p["b"]
+
+
+def layernorm_init(d: int, dtype=jnp.float32) -> Dict[str, jnp.ndarray]:
+    return {"g": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p, x, eps: float = 1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * p["g"] + p["b"]
+
+
+def embedding_init(key, vocab: int, d: int, dtype=jnp.float32) -> jnp.ndarray:
+    return jax.random.normal(key, (vocab, d), dtype) * 0.02
+
+
+def split_keys(key, n: int) -> Sequence[jax.Array]:
+    return jax.random.split(key, n)
+
+
+def count_params(params: Params) -> int:
+    return sum(int(p.size) for p in jax.tree_util.tree_leaves(params)
+               if hasattr(p, "size"))

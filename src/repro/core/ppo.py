@@ -1,0 +1,268 @@
+"""PPO trainer for the GDP policy (paper §3, §4.1).
+
+Reward protocol exactly as the paper: r = −√runtime, −10 for invalid
+placements; the *bias* (baseline) is the running average of all previous
+trials' rewards for that graph; advantage = r − bias.  The surrogate is the
+standard clipped PPO objective with per-node ratios (each node's device
+choice is an action sharing the episode advantage) plus an entropy bonus.
+
+Supports GDP-one (single graph), GDP-batch (Eq. 1, mean over a graph set),
+fine-tuning from a pre-trained checkpoint, and zero-shot evaluation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import policy as policy_mod
+from repro.core.featurize import GraphBatch
+from repro.core.policy import PolicyConfig
+from repro.optim import AdamConfig, adam_init, adam_update, clip_by_global_norm
+from repro.optim.clip import sanitize
+
+
+@dataclasses.dataclass(frozen=True)
+class PPOConfig:
+    lr: float = 1e-3
+    clip_eps: float = 0.2
+    epochs: int = 3
+    num_samples: int = 32         # placements sampled per graph per iteration
+    entropy_coef: float = 0.02
+    entropy_decay: float = 0.997  # anneal exploration over iterations
+    grad_clip: float = 1.0
+    adv_norm: bool = True
+    # "running_avg": the paper's bias (average of all previous trials).
+    # "loo": leave-one-out within the sample batch — a beyond-paper variance
+    # reduction recorded separately in EXPERIMENTS.md.
+    baseline: str = "running_avg"
+    # Per-node counterfactual credit: for every (node, device) pool the
+    # rewards of the samples that made that choice; a node's advantage is
+    # its chosen cell's pooled mean minus the batch mean.  This collapses
+    # the variance of the single-scalar-reward estimator (the paper buys
+    # the same effect with hardware-parallel trial farms).  Beyond-paper;
+    # benchmarks report both modes.
+    per_node_credit: bool = True
+    credit_mix: float = 0.5       # blend: per-node + global advantage
+    # Canonical device relabeling: makespan is invariant under device
+    # permutation, so each sampled placement is relabeled by first
+    # appearance along topo order before the update (data augmentation onto
+    # the canonical fundamental domain).  Collapses the D! symmetric modes
+    # the policy would otherwise have to split probability mass across.
+    # Beyond-paper; recorded in EXPERIMENTS.md.
+    canonicalize: bool = True
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    baselines: Dict[str, float]       # per-graph running-average reward
+    baseline_counts: Dict[str, int]
+    step: int = 0
+    entropy_scale: float = 1.0
+
+
+def init_state(key, pcfg: PolicyConfig, ocfg: AdamConfig) -> TrainState:
+    params = policy_mod.init(key, pcfg)
+    return TrainState(params=params, opt_state=adam_init(params, ocfg),
+                      baselines={}, baseline_counts={})
+
+
+def _loss_fn(params, pcfg: PolicyConfig, gb: GraphBatch, num_devices: int,
+             placements, old_logp, adv, clip_eps, entropy_coef):
+    new_lp, ent = policy_mod.logp_and_entropy(params, pcfg, gb, num_devices,
+                                              placements)
+    ratio = jnp.exp(jnp.clip(new_lp - old_logp, -10.0, 10.0))   # [M, N]
+    a = adv if adv.ndim == 2 else adv[:, None]                  # [M,N] or [M,1]
+    surr = jnp.minimum(ratio * a, jnp.clip(ratio, 1 - clip_eps, 1 + clip_eps) * a)
+    denom = jnp.maximum(gb.node_mask.sum(), 1.0)
+    pg = -(surr * gb.node_mask[None, :]).sum(-1) / denom        # [M]
+    loss = pg.mean() - entropy_coef * ent
+    return loss, {"pg": pg.mean(), "entropy": ent}
+
+
+@partial(jax.jit, static_argnames=("pcfg", "num_devices", "ocfg"))
+def _update(params, opt_state, pcfg: PolicyConfig, ocfg: AdamConfig,
+            gb: GraphBatch, num_devices: int, placements, old_logp, adv,
+            clip_eps, entropy_coef, grad_clip):
+    (loss, aux), grads = jax.value_and_grad(_loss_fn, has_aux=True)(
+        params, pcfg, gb, num_devices, placements, old_logp, adv,
+        clip_eps, entropy_coef)
+    grads = sanitize(grads)
+    grads, gnorm = clip_by_global_norm(grads, grad_clip)
+    params, opt_state = adam_update(grads, opt_state, params, ocfg)
+    aux = dict(aux, loss=loss, gnorm=gnorm)
+    return params, opt_state, aux
+
+
+@partial(jax.jit, static_argnames=("pcfg", "num_devices", "num_samples"))
+def _sample(params, pcfg: PolicyConfig, gb: GraphBatch, num_devices: int,
+            key, num_samples: int):
+    return policy_mod.sample(params, pcfg, gb, num_devices, key, num_samples)
+
+
+@partial(jax.jit, static_argnames=("pcfg", "num_devices"))
+def _logp(params, pcfg: PolicyConfig, gb: GraphBatch, num_devices: int,
+          placements):
+    return policy_mod.logp_and_entropy(params, pcfg, gb, num_devices,
+                                       placements)
+
+
+def canonical_relabel(placements: np.ndarray, num_nodes: int) -> np.ndarray:
+    """Relabel each row's devices by first appearance along topo order."""
+    out = placements.copy()
+    for m in range(placements.shape[0]):
+        row = placements[m, :num_nodes]
+        mapping: Dict[int, int] = {}
+        for d in row:
+            di = int(d)
+            if di not in mapping:
+                mapping[di] = len(mapping)
+        out[m, :num_nodes] = np.vectorize(mapping.get)(row)
+    return out
+
+
+def _per_node_advantage(placements: np.ndarray, rewards: np.ndarray,
+                        num_devices: int, global_adv: np.ndarray,
+                        mix: float) -> np.ndarray:
+    """Counterfactual per-(node,device) pooled advantage, [M, N]."""
+    m, n = placements.shape
+    cnt = np.zeros((num_devices, n))
+    srw = np.zeros((num_devices, n))
+    for d in range(num_devices):
+        sel = placements == d
+        cnt[d] = sel.sum(0)
+        srw[d] = (sel * rewards[:, None]).sum(0)
+    cell = np.where(cnt > 0, srw / np.maximum(cnt, 1), 0.0)
+    cell = cell - rewards.mean()
+    cell = np.where(cnt > 0, cell, 0.0)
+    # gather cell[placements[m, v], v] -> [M, N]
+    per_node = cell[placements, np.arange(n)[None, :]]
+    scale = per_node.std() + 1e-8
+    gscale = max(global_adv.std(), 1e-3)
+    return (mix * per_node / scale * gscale +
+            (1 - mix) * global_adv[:, None]).astype(np.float32)
+
+
+class PPOTrainer:
+    """Drives PPO over one or many (GraphBatch, Env) tasks."""
+
+    def __init__(self, pcfg: PolicyConfig, ppo: PPOConfig, seed: int = 0,
+                 state: Optional[TrainState] = None):
+        self.pcfg = pcfg
+        self.ppo = ppo
+        self.ocfg = AdamConfig(lr=ppo.lr)
+        self.key = jax.random.PRNGKey(seed)
+        self.state = state or init_state(jax.random.PRNGKey(seed + 1),
+                                         pcfg, self.ocfg)
+        self.history: List[Dict[str, float]] = []
+
+    # ------------------------------------------------------------------
+    def _next_key(self):
+        self.key, k = jax.random.split(self.key)
+        return k
+
+    def _baseline(self, name: str) -> float:
+        return self.state.baselines.get(name, 0.0)
+
+    def _update_baseline(self, name: str, rewards: np.ndarray):
+        # running average of ALL previous trials (paper §4.1)
+        c = self.state.baseline_counts.get(name, 0)
+        b = self.state.baselines.get(name, 0.0)
+        total = b * c + float(rewards.sum())
+        c_new = c + rewards.size
+        self.state.baselines[name] = total / c_new
+        self.state.baseline_counts[name] = c_new
+
+    # ------------------------------------------------------------------
+    def iteration(self, name: str, gb: GraphBatch, env,
+                  num_devices: int) -> Dict[str, float]:
+        """One PPO iteration on a single graph task."""
+        placements, old_logp = _sample(self.state.params, self.pcfg, gb,
+                                       num_devices, self._next_key(),
+                                       self.ppo.num_samples)
+        if self.ppo.canonicalize:
+            placements = jnp.asarray(
+                canonical_relabel(np.asarray(placements), gb.num_nodes))
+            old_logp, _ = _logp(self.state.params, self.pcfg, gb,
+                                num_devices, placements)
+        makespans, rewards, valid = env.rewards(placements)
+        rewards_np = np.asarray(rewards)
+        if self.ppo.baseline == "loo" and rewards_np.size > 1:
+            m = rewards_np.size
+            adv = (rewards_np - rewards_np.mean()) * m / (m - 1)
+        else:
+            bias = self._baseline(name) if self.state.baseline_counts.get(name, 0) \
+                else float(rewards_np.mean())
+            adv = rewards_np - bias
+        if self.ppo.adv_norm and adv.std() > 1e-6:
+            adv = (adv - adv.mean()) / (adv.std() + 1e-8)
+        if self.ppo.per_node_credit:
+            adv = _per_node_advantage(np.asarray(placements), rewards_np,
+                                      num_devices, adv, self.ppo.credit_mix)
+        self._update_baseline(name, rewards_np)
+
+        ent_coef = self.ppo.entropy_coef * self.state.entropy_scale
+        aux = {}
+        for _ in range(self.ppo.epochs):
+            p, o, aux = _update(self.state.params, self.state.opt_state,
+                                self.pcfg, self.ocfg, gb, num_devices,
+                                placements, old_logp, jnp.asarray(adv),
+                                self.ppo.clip_eps, ent_coef,
+                                self.ppo.grad_clip)
+            self.state.params, self.state.opt_state = p, o
+        self.state.step += 1
+        self.state.entropy_scale *= self.ppo.entropy_decay
+        best = float(np.where(np.asarray(valid), np.asarray(makespans),
+                              np.inf).min())
+        return {"graph": name, "reward_mean": float(rewards_np.mean()),
+                "best_makespan": best,
+                "valid_frac": float(np.asarray(valid).mean()),
+                "loss": float(aux.get("loss", 0.0)),
+                "entropy": float(aux.get("entropy", 0.0))}
+
+    # ------------------------------------------------------------------
+    def train(self, tasks: List[Tuple[str, GraphBatch, Any, int]],
+              iterations: int, log_every: int = 10,
+              callback: Optional[Callable[[int, Dict], None]] = None
+              ) -> Dict[str, float]:
+        """GDP-one (len==1) or GDP-batch (len>1, Eq. 1 round-robin)."""
+        best: Dict[str, float] = {}
+        t0 = time.time()
+        for it in range(iterations):
+            for (name, gb, env, nd) in tasks:
+                m = self.iteration(name, gb, env, nd)
+                if np.isfinite(m["best_makespan"]):
+                    best[name] = min(best.get(name, np.inf), m["best_makespan"])
+                m["iter"] = it
+                m["elapsed_s"] = time.time() - t0
+                self.history.append(m)
+                if callback:
+                    callback(it, m)
+                if log_every and it % log_every == 0:
+                    print(f"[ppo] it={it:4d} {name:>18s} "
+                          f"r̄={m['reward_mean']:+.3f} "
+                          f"best={best.get(name, np.inf):.4f}s "
+                          f"valid={m['valid_frac']:.2f}")
+        return best
+
+    # ------------------------------------------------------------------
+    def eval_greedy(self, gb: GraphBatch, env, num_devices: int
+                    ) -> Tuple[float, bool]:
+        pl = policy_mod.greedy(self.state.params, self.pcfg, gb, num_devices)
+        mk, r, valid = env.rewards(pl[None])
+        return float(mk[0]), bool(valid[0])
+
+    def best_of_samples(self, gb: GraphBatch, env, num_devices: int,
+                        m: int = 16) -> float:
+        pl, _ = _sample(self.state.params, self.pcfg, gb, num_devices,
+                        self._next_key(), m)
+        mk, _, valid = env.rewards(pl)
+        mk = np.where(np.asarray(valid), np.asarray(mk), np.inf)
+        return float(mk.min())

@@ -1,0 +1,4 @@
+from repro.graphs.synthetic import (  # noqa: F401
+    rnnlm, gnmt, transformer_xl, inception, amoebanet, wavenet,
+    FAMILIES, make_graph, paper_suite,
+)

@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose anchors)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None,
+                        sm_scale: Optional[float] = None,
+                        q_offset: int = 0) -> jnp.ndarray:
+    """q: [BH, Sq, D]; k/v: [BH, Sk, D] — plain softmax attention."""
+    import math
+    d = q.shape[-1]
+    sm = sm_scale if sm_scale is not None else 1.0 / math.sqrt(d)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * sm
+    sq, sk = q.shape[1], k.shape[1]
+    qi = q_offset + jnp.arange(sq)
+    ki = jnp.arange(sk)
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= ki[None, :] <= qi[:, None]
+    if window is not None:
+        mask &= ki[None, :] > qi[:, None] - window
+    s = jnp.where(mask[None], s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def neighbor_maxpool_ref(z, adj) -> jnp.ndarray:
+    """z: [M, H]; adj: [N, M] bool -> [N, H]; empty rows -> -1e9."""
+    masked = jnp.where(adj[:, :, None], z[None, :, :].astype(jnp.float32),
+                       -1e9)
+    return masked.max(axis=1).astype(z.dtype)
+
+
+def neighbor_maxpool_from_lists_ref(z, nbr_idx, nbr_mask) -> jnp.ndarray:
+    """Padded-neighbor-list form used by the GNN (sentinel = N)."""
+    z_pad = jnp.concatenate([z, jnp.full((1, z.shape[1]), -1e9, z.dtype)])
+    gathered = z_pad[nbr_idx]
+    masked = jnp.where(nbr_mask[..., None] > 0, gathered, -1e9)
+    return masked.max(axis=1)

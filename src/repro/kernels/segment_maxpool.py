@@ -1,0 +1,75 @@
+"""Pallas TPU kernel: GraphSAGE neighbor max-pool aggregation.
+
+TPU adaptation (DESIGN.md §3): GPU GraphSAGE gathers neighbor rows; TPU
+HBM hates gathers, so the aggregation is re-cast as a **blocked
+masked-adjacency max**:
+
+    out[i, h] = max_{j : adj[i, j]} z[j, h]
+
+with the grid tiled (node-block × feature-block × neighbor-block); each
+cell streams an adjacency bitmask tile [bn, bm] and a feature tile
+[bm, bh] HBM→VMEM and updates a running max in the revisited output tile
+(the innermost grid axis walks neighbor blocks, so output revisiting is
+contiguous — the standard accumulation pattern).  Isolated rows come back
+as NEG and are zeroed by the caller.
+
+The block-dense form is exact for the ≤few-k-node graphs the PPO loop
+trains on; the production plan for 50k+-node graphs is identical kernel
+body + block-sparse grid via scalar-prefetched (row, col) block indices
+(metadata from featurize), documented in DESIGN.md.
+
+Oracle: ``repro.kernels.ref.neighbor_maxpool_ref``; CPU validation uses
+interpret=True.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -1e9
+
+
+def _maxpool_kernel(adj_ref, z_ref, o_ref, *, block_m: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.full_like(o_ref, NEG)
+
+    adj = adj_ref[...]                           # [bn, bm] bool
+    z = z_ref[...].astype(jnp.float32)           # [bm, bh]
+    masked = jnp.where(adj[:, :, None], z[None, :, :], NEG)   # [bn, bm, bh]
+    o_ref[...] = jnp.maximum(o_ref[...], masked.max(axis=1).astype(o_ref.dtype))
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_m", "block_h",
+                                             "interpret"))
+def neighbor_maxpool_dense(z: jnp.ndarray, adj: jnp.ndarray, *,
+                           block_n: int = 64, block_m: int = 128,
+                           block_h: int = 128,
+                           interpret: bool = False) -> jnp.ndarray:
+    """z: [M, H] neighbor features; adj: [N, M] bool -> out: [N, H].
+
+    Rows with no neighbors return NEG (caller zeroes them).
+    Dims must divide block sizes (ops wrapper pads).
+    """
+    n, m = adj.shape
+    h = z.shape[1]
+    bn, bm, bh = min(block_n, n), min(block_m, m), min(block_h, h)
+    assert n % bn == 0 and m % bm == 0 and h % bh == 0, (n, m, h, bn, bm, bh)
+    grid = (n // bn, h // bh, m // bm)           # j innermost: accumulation
+    kernel = functools.partial(_maxpool_kernel, block_m=bm)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bm), lambda i, hh, j: (i, j)),
+            pl.BlockSpec((bm, bh), lambda i, hh, j: (j, hh)),
+        ],
+        out_specs=pl.BlockSpec((bn, bh), lambda i, hh, j: (i, hh)),
+        out_shape=jax.ShapeDtypeStruct((n, h), z.dtype),
+        interpret=interpret,
+    )(adj, z)

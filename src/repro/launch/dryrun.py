@@ -1,0 +1,231 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " +
+    os.environ.get("XLA_FLAGS", ""))
+
+# Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+_DOC = """
+
+The two lines above MUST run before any jax import (jax locks the device
+count at first init); nothing else in the repo sets this flag.
+
+For each cell this driver:
+  1. builds the FULL ArchConfig model,
+  2. constructs sharded ShapeDtypeStruct inputs (no allocation),
+  3. ``jax.jit(step).lower(...).compile()`` on the production mesh,
+  4. records ``memory_analysis()`` (fits-in-HBM proof), ``cost_analysis()``
+     (FLOPs/bytes) and the HLO-parsed collective bytes (§Roofline),
+  5. appends the row to ``results/dryrun.json`` (resumable cache).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                 # all cells
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --multi-pod     # 2x16x16
+"""
+__doc__ = _DOC
+
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.configs import SHAPES, cell_is_skipped, get_config, list_archs
+from repro.dist import sharding as SH
+from repro.launch import input_specs as IS
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import build_model
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "results", "dryrun.json")
+
+# TPU v5e constants (per chip) — §Roofline.
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+
+def _sds(tree):
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def lower_cell(arch: str, shape_name: str, mesh) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    model = build_model(cfg, mesh=mesh)
+    chips = int(np.prod(list(mesh.shape.values())))
+
+    with mesh:
+        if shape.kind == "train":
+            state_sh = jax.eval_shape(
+                lambda: model.init_train_state(jax.random.PRNGKey(0)))
+            batch_sh = IS.train_batch_specs(cfg, shape)
+            st_specs = SH.state_specs(state_sh, mesh)
+            bt_specs = SH.batch_specs(batch_sh, mesh)
+            args = (SH.with_shardings(state_sh, st_specs, mesh),
+                    SH.with_shardings(batch_sh, bt_specs, mesh))
+            fn = model.make_train_step()
+            jitted = jax.jit(fn, out_shardings=(
+                SH.to_shardings(st_specs, mesh), None), donate_argnums=(0,))
+            lowered = jitted.lower(*args)
+        elif shape.kind == "prefill":
+            params_sh = model.param_shapes()
+            p_specs = SH.param_specs(params_sh, mesh)
+            batch_sh = IS.prefill_batch_specs(cfg, shape)
+            bt_specs = SH.batch_specs(batch_sh, mesh)
+            fn = lambda p, b: model.prefill(p, b, cache_len=shape.seq_len)  # noqa: E731
+            jitted = jax.jit(fn)
+            lowered = jitted.lower(
+                SH.with_shardings(params_sh, p_specs, mesh),
+                SH.with_shardings(batch_sh, bt_specs, mesh))
+        else:  # decode
+            params_sh = model.param_shapes()
+            p_specs = SH.param_specs(params_sh, mesh, mode="serve")
+            cache_sh = jax.eval_shape(
+                lambda: model.init_cache(shape.global_batch, shape.seq_len))
+            c_specs = SH.cache_specs(cache_sh, mesh)
+            tok, pos = IS.decode_token_specs(shape)
+            jitted = jax.jit(model.decode_step, out_shardings=(
+                SH.to_shardings(c_specs, mesh), None), donate_argnums=(1,))
+            lowered = jitted.lower(
+                SH.with_shardings(params_sh, p_specs, mesh),
+                SH.with_shardings(cache_sh, c_specs, mesh), tok, pos)
+
+        t0 = time.time()
+        compiled = lowered.compile()
+        compile_s = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    parsed = analyze_hlo(hlo)
+
+    # All parsed numbers are per-device (post-SPMD module) and trip-count
+    # multiplied; see hlo_analysis.py.
+    flops = float(parsed["flops"])
+    hbm_bytes = float(parsed["hbm_bytes"])
+    coll_total = float(parsed["collective_bytes"])
+    t_compute = flops / PEAK_FLOPS
+    t_memory = hbm_bytes / HBM_BW
+    t_coll = coll_total / LINK_BW
+    dom = max((t_compute, "compute"), (t_memory, "memory"),
+              (t_coll, "collective"))[1]
+
+    n_params = cfg.param_count()
+    n_active = cfg.active_param_count()
+    tokens = shape.global_batch * (shape.seq_len
+                                   if shape.kind in ("train", "prefill") else 1)
+    mult = 6 if shape.kind == "train" else 2
+    model_flops = mult * n_active * tokens          # global
+    model_flops_dev = model_flops / chips
+
+    return {
+        "arch": arch, "shape": shape_name,
+        "mesh": "x".join(str(v) for v in mesh.shape.values()),
+        "chips": chips,
+        "status": "ok",
+        "compile_s": round(compile_s, 1),
+        "bytes_per_device": {
+            "output": mem.output_size_in_bytes,
+            "temp": mem.temp_size_in_bytes,
+            "argument": mem.argument_size_in_bytes,
+            "peak": mem.peak_memory_in_bytes,
+        },
+        "hlo_flops": flops,
+        "hlo_bytes": hbm_bytes,
+        "collective_bytes": coll_total,
+        "collective_kinds": parsed["collective_kinds"],
+        "xla_cost_flops": float(cost.get("flops", 0.0)),
+        "xla_cost_bytes": float(cost.get("bytes accessed", 0.0)),
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dom,
+        "model_flops": model_flops,
+        "useful_flops_ratio": (model_flops_dev / flops) if flops else None,
+        "params_total": n_params,
+        "params_active": n_active,
+    }
+
+
+def load_results(path: str) -> Dict[str, Any]:
+    if os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    return {}
+
+
+def save_results(path: str, results: Dict[str, Any]) -> None:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(results, f, indent=1, default=float)
+    os.replace(tmp, path)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--results", default=os.path.abspath(RESULTS))
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    meshes = [args.multi_pod] if not args.both_meshes else [False, True]
+    archs = [args.arch] if args.arch else list_archs()
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    results = load_results(args.results)
+
+    for mp in meshes:
+        mesh = make_production_mesh(multi_pod=mp)
+        mesh_tag = "2x16x16" if mp else "16x16"
+        for arch in archs:
+            for shape_name in shapes:
+                key = f"{arch}|{shape_name}|{mesh_tag}"
+                skip = cell_is_skipped(arch, shape_name)
+                if skip:
+                    results[key] = {"arch": arch, "shape": shape_name,
+                                    "mesh": mesh_tag, "status": skip}
+                    save_results(args.results, results)
+                    print(f"[dryrun] {key}: {skip}")
+                    continue
+                if key in results and results[key].get("status") == "ok" \
+                        and not args.force:
+                    print(f"[dryrun] {key}: cached ok")
+                    continue
+                print(f"[dryrun] {key}: lowering...", flush=True)
+                try:
+                    row = lower_cell(arch, shape_name, mesh)
+                    results[key] = row
+                    peak = (row.get("bytes_per_device") or {}).get("peak")
+                    print(f"[dryrun] {key}: OK compile={row['compile_s']}s "
+                          f"peak={peak and peak/1e9:.2f}GB "
+                          f"dom={row['dominant']} "
+                          f"t=({row['t_compute_s']:.4f},"
+                          f"{row['t_memory_s']:.4f},"
+                          f"{row['t_collective_s']:.4f})s", flush=True)
+                except Exception as e:  # noqa: BLE001
+                    results[key] = {"arch": arch, "shape": shape_name,
+                                    "mesh": mesh_tag, "status": "error",
+                                    "error": f"{type(e).__name__}: {e}",
+                                    "trace": traceback.format_exc()[-2000:]}
+                    print(f"[dryrun] {key}: FAIL {type(e).__name__}: "
+                          f"{str(e)[:200]}", flush=True)
+                save_results(args.results, results)
+
+    ok = sum(1 for v in results.values() if v.get("status") == "ok")
+    skipped = sum(1 for v in results.values()
+                  if str(v.get("status", "")).startswith("SKIP"))
+    err = sum(1 for v in results.values() if v.get("status") == "error")
+    print(f"[dryrun] done: ok={ok} skipped={skipped} errors={err}")
+
+
+if __name__ == "__main__":
+    main()

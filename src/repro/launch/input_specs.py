@@ -1,0 +1,59 @@
+"""ShapeDtypeStruct stand-ins for every (arch × shape) dry-run cell.
+
+No allocation happens here — the dry-run lowers pure avals (weak-type
+correct, shardable).  Modality frontends are stubs per the brief: whisper
+gets precomputed frame embeddings, qwen2-vl precomputed patch embeddings
+plus M-RoPE position ids.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+WHISPER_FRAMES = 1504          # whisper audio context (pads 1500 to /16)
+VLM_PATCHES = 256
+
+
+def _adt(cfg: ArchConfig):
+    return jnp.dtype(cfg.activ_dtype)
+
+
+def train_batch_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    out = {
+        "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+    }
+    if cfg.enc_dec:
+        out["frames"] = jax.ShapeDtypeStruct((b, WHISPER_FRAMES, cfg.d_model),
+                                             _adt(cfg))
+    if cfg.frontend == "vision":
+        out["patch_embeds"] = jax.ShapeDtypeStruct((b, VLM_PATCHES, cfg.d_model),
+                                                   _adt(cfg))
+    if cfg.mrope:
+        out["positions"] = jax.ShapeDtypeStruct((3, b, s), jnp.int32)
+    return out
+
+
+def prefill_batch_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    out = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if cfg.enc_dec:
+        out["frames"] = jax.ShapeDtypeStruct((b, WHISPER_FRAMES, cfg.d_model),
+                                             _adt(cfg))
+    if cfg.frontend == "vision":
+        out["patch_embeds"] = jax.ShapeDtypeStruct((b, VLM_PATCHES, cfg.d_model),
+                                                   _adt(cfg))
+    if cfg.mrope:
+        out["positions"] = jax.ShapeDtypeStruct((3, b, s), jnp.int32)
+    return out
+
+
+def decode_token_specs(shape: ShapeConfig) -> Tuple[Any, Any]:
+    tok = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return tok, pos

@@ -1,0 +1,4 @@
+# Model zoo package.  Import submodules directly (repro.models.model,
+# repro.models.layers, ...); this __init__ stays empty so lower layers
+# (e.g. the GDP placer reusing layers.chunked_attention) can import
+# repro.models.layers without pulling the whole zoo.

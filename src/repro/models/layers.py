@@ -1,0 +1,307 @@
+"""Transformer layer library for the model zoo.
+
+Everything here is shape-polymorphic pure JAX, designed so that the
+production shapes lower and compile on the fixed (16,16)/(2,16,16) meshes:
+
+* Attention is **chunked with an online softmax** (`chunked_attention`):
+  scores only ever exist per (q-chunk × kv-chunk) block inside a scan, so
+  32k-token prefill and 4k train never materialize O(S²) buffers.  This is
+  the XLA-native twin of the Pallas flash kernel in ``repro.kernels`` (the
+  kernel is the TPU hot path; this path is the oracle, the CPU path, and
+  what the dry-run lowers).
+* GQA via head-group einsums; qk-norm, logit softcap, local windows and
+  (M-)RoPE are config flags.
+* Cross-entropy is **chunked over sequence positions** so [B,S,V] logits
+  never exist (load-bearing for gemma2's 256k vocab).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+NEG = -2.3819763e38   # min bf16
+
+
+# ------------------------------------------------------------------ norms
+def rmsnorm(scale: jnp.ndarray, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    y = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def head_rmsnorm(scale: jnp.ndarray, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    """qk-norm: RMSNorm over head_dim. x: [..., hd]."""
+    return rmsnorm(scale, x, eps)
+
+
+# ------------------------------------------------------------------- rope
+def rope_freqs(hd: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+               mrope: bool = False) -> jnp.ndarray:
+    """x: [B, S, H, hd]; positions: [B, S] or [3, B, S] for M-RoPE."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # [hd/2]
+    if mrope:
+        # qwen2-vl: split rotary channels into (temporal, h, w) sections
+        nf = hd // 2
+        s1, s2 = nf // 4, (nf - nf // 4) // 2
+        sec = jnp.concatenate([jnp.zeros(s1, jnp.int32),
+                               jnp.ones(s2, jnp.int32),
+                               jnp.full(nf - s1 - s2, 2, jnp.int32)])
+        pos = jnp.take_along_axis(
+            positions.astype(jnp.float32).transpose(1, 2, 0)[:, :, :],  # [B,S,3]
+            jnp.broadcast_to(sec[None, None, :], positions.shape[1:] + (nf,)),
+            axis=-1)                                     # [B, S, hd/2]
+        ang = pos[..., None, :] * freqs[None, None, None, :]
+    else:
+        ang = positions.astype(jnp.float32)[..., None, None] * \
+            freqs[None, None, None, :]                  # [B, S, 1, hd/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -------------------------------------------------------------- attention
+def _block_mask(qi: jnp.ndarray, ki: jnp.ndarray, causal: bool,
+                window: Optional[int], kv_valid_len: Optional[jnp.ndarray]
+                ) -> jnp.ndarray:
+    """[Q, K] boolean mask from absolute indices (no big global mask)."""
+    m = jnp.ones((qi.shape[0], ki.shape[0]), bool)
+    if causal:
+        m &= ki[None, :] <= qi[:, None]
+    if window is not None:
+        m &= ki[None, :] > (qi[:, None] - window)
+    if kv_valid_len is not None:
+        m &= ki[None, :] < kv_valid_len
+    return m
+
+
+def _softcap(x: jnp.ndarray, cap: Optional[float]) -> jnp.ndarray:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def _pick_chunk(s: int, target: int) -> int:
+    """Largest divisor of s that is <= target."""
+    c = min(target, s)
+    while s % c:
+        c -= 1
+    return c
+
+
+def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                      causal: bool, window: Optional[int] = None,
+                      softcap: Optional[float] = None,
+                      q_offset: int | jnp.ndarray = 0,
+                      kv_valid_len: Optional[jnp.ndarray] = None,
+                      q_chunk: int = 1024, kv_chunk: int = 1024,
+                      ) -> jnp.ndarray:
+    """Online-softmax attention.
+
+    q: [B, Sq, H, hd]; k/v: [B, Skv, Hkv, hd] (GQA: H % Hkv == 0).
+    Returns [B, Sq, H, hd].  fp32 accumulation; O(q_chunk·kv_chunk) live
+    scores.  ``q_offset`` is the absolute position of q[0] (decode/segment).
+    """
+    b, sq, h, hd = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    qc = _pick_chunk(sq, q_chunk)
+    kc = _pick_chunk(skv, kv_chunk)
+    nq, nk = sq // qc, skv // kc
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+
+    qr = q.reshape(b, nq, qc, hkv, g, hd).astype(jnp.float32)
+    kr = k.reshape(b, nk, kc, hkv, hd).astype(jnp.float32)
+    vr = v.reshape(b, nk, kc, hkv, hd).astype(jnp.float32)
+
+    def q_block(_, qi_blk):
+        qb, iq = qi_blk            # [B, qc, hkv, g, hd], scalar block idx
+        q_abs = q_offset + iq * qc + jnp.arange(qc)
+
+        def kv_block(carry, kv_blk):
+            acc, m_run, l_run = carry
+            kb, vb, ik = kv_blk
+            k_abs = ik * kc + jnp.arange(kc)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qb, kb) * scale
+            s = _softcap(s, softcap)
+            mask = _block_mask(q_abs, k_abs, causal, window, kv_valid_len)
+            s = jnp.where(mask[None, None, None], s, NEG)
+            m_new = jnp.maximum(m_run, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m_run - m_new)
+            l_new = l_run * corr + p.sum(-1)
+            acc = acc * corr[..., None] + jnp.einsum("bhgqk,bkhd->bhgqd", p, vb)
+            return (acc, m_new, l_new), None
+
+        acc0 = jnp.zeros((b, hkv, g, qc, hd), jnp.float32)
+        m0 = jnp.full((b, hkv, g, qc), NEG, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, qc), jnp.float32)
+        (acc, m_run, l_run), _ = jax.lax.scan(
+            kv_block, (acc0, m0, l0),
+            (kr.transpose(1, 0, 2, 3, 4), vr.transpose(1, 0, 2, 3, 4),
+             jnp.arange(nk)))
+        out = acc / jnp.maximum(l_run[..., None], 1e-20)
+        return None, out.transpose(0, 3, 1, 2, 4)       # [B, qc, hkv, g, hd]
+
+    _, blocks = jax.lax.scan(q_block, None,
+                             (qr.transpose(1, 0, 2, 3, 4, 5), jnp.arange(nq)))
+    out = blocks.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq, h, hd)
+    return out.astype(q.dtype)
+
+
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                     pos: jnp.ndarray, *, window: Optional[int] = None,
+                     softcap: Optional[float] = None) -> jnp.ndarray:
+    """Single-token attention against a cache.
+
+    q: [B, 1, H, hd]; caches: [B, S, Hkv, hd]; pos: scalar current index.
+    """
+    b, _, h, hd = q.shape
+    s, hkv = k_cache.shape[1], k_cache.shape[2]
+    g = h // hkv
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    qr = q.reshape(b, hkv, g, hd).astype(jnp.float32)
+    sc = jnp.einsum("bhgd,bkhd->bhgk", qr, k_cache.astype(jnp.float32)) * scale
+    sc = _softcap(sc, softcap)
+    idx = jnp.arange(s)
+    valid = idx[None, None, None, :] <= pos
+    if window is not None:
+        valid &= idx[None, None, None, :] > pos - window
+    sc = jnp.where(valid, sc, NEG)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+# ----------------------------------------------------------- attn wrapper
+@dataclasses.dataclass
+class AttnParams:
+    """Just a naming convention: params dict with wq, wk, wv, wo [+norms]."""
+
+
+def init_attention(key, cfg: ArchConfig, dtype) -> Dict[str, Any]:
+    d, h, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.hd
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    std = d ** -0.5
+    p = {
+        "wq": jax.random.normal(k1, (d, h * hd), dtype) * std,
+        "wk": jax.random.normal(k2, (d, hkv * hd), dtype) * std,
+        "wv": jax.random.normal(k3, (d, hkv * hd), dtype) * std,
+        "wo": jax.random.normal(k4, (h * hd, d), dtype) * std,
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), dtype)
+        p["k_norm"] = jnp.zeros((hd,), dtype)
+    return p
+
+
+def attention_block(p: Dict[str, Any], x: jnp.ndarray, cfg: ArchConfig, *,
+                    causal: bool, local: bool, positions: jnp.ndarray,
+                    cache: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+                    cache_pos: Optional[jnp.ndarray] = None,
+                    update_cache: bool = False,
+                    kv_override: Optional[jnp.ndarray] = None,
+                    ) -> Tuple[jnp.ndarray, Optional[Tuple[jnp.ndarray, jnp.ndarray]]]:
+    """Full attention sublayer (projections + mixing).
+
+    Modes:
+      * train/prefill: cache=None or update_cache=True writes fresh cache
+      * decode: cache given, x is [B, 1, D], cache_pos scalar
+      * cross-attention: kv_override = encoder output [B, Senc, D]
+    Returns (out [B,S,D], new_cache or None).
+    """
+    b, s, d = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv, cfg.hd
+    kv_src = kv_override if kv_override is not None else x
+    q = (x @ p["wq"]).reshape(b, s, h, hd)
+    k = (kv_src @ p["wk"]).reshape(b, kv_src.shape[1], hkv, hd)
+    v = (kv_src @ p["wv"]).reshape(b, kv_src.shape[1], hkv, hd)
+    if cfg.qk_norm:
+        q = head_rmsnorm(p["q_norm"], q)
+        k = head_rmsnorm(p["k_norm"], k)
+    if cfg.rope and kv_override is None:
+        q = apply_rope(q, positions, cfg.rope_theta, cfg.mrope)
+        k = apply_rope(k, positions, cfg.rope_theta, cfg.mrope)
+    elif cfg.rope and kv_override is not None:
+        q = apply_rope(q, positions, cfg.rope_theta, cfg.mrope)
+
+    window = cfg.local_window if local else None
+    new_cache = None
+    if cache is not None and not update_cache:
+        # decode: write this token, attend prefix
+        kc, vc = cache
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k, cache_pos, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v, cache_pos, axis=1)
+        out = decode_attention(q, kc, vc, cache_pos,
+                               window=window, softcap=cfg.attn_softcap)
+        new_cache = (kc, vc)
+    else:
+        out = chunked_attention(q, k, v, causal=causal, window=window,
+                                softcap=cfg.attn_softcap)
+        if update_cache and cache is not None:
+            kc, vc = cache
+            kc = jax.lax.dynamic_update_slice_in_dim(kc, k, 0, axis=1)
+            vc = jax.lax.dynamic_update_slice_in_dim(vc, v, 0, axis=1)
+            new_cache = (kc, vc)
+    y = out.reshape(b, s, h * hd) @ p["wo"]
+    return y, new_cache
+
+
+# -------------------------------------------------------------------- mlp
+def init_mlp(key, d: int, ff: int, dtype) -> Dict[str, Any]:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": jax.random.normal(k1, (d, ff), dtype) * d ** -0.5,
+        "w_up": jax.random.normal(k2, (d, ff), dtype) * d ** -0.5,
+        "w_down": jax.random.normal(k3, (ff, d), dtype) * ff ** -0.5,
+    }
+
+
+def mlp_block(p: Dict[str, Any], x: jnp.ndarray) -> jnp.ndarray:
+    return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+
+
+# ------------------------------------------------------- chunked softmax CE
+def chunked_cross_entropy(h: jnp.ndarray, emb: jnp.ndarray,
+                          labels: jnp.ndarray, *, chunk: int,
+                          final_softcap: Optional[float] = None
+                          ) -> jnp.ndarray:
+    """Mean CE loss without materializing [B,S,V] logits.
+
+    h: [B, S, D] final hidden; emb: [V, D] (tied head); labels: [B, S].
+    Scans over sequence chunks; each chunk's [B,chunk,V] logits are
+    checkpointed away (recomputed in backward).
+    """
+    b, s, d = h.shape
+    c = min(chunk, s)
+    n = s // c
+    assert n * c == s
+    hc = h.reshape(b, n, c, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, n, c).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def one(hb, lb):
+        logits = (hb.astype(jnp.float32) @ emb.astype(jnp.float32).T)
+        if final_softcap is not None:
+            logits = _softcap(logits, final_softcap)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lb[..., None], axis=-1)[..., 0]
+        return (lse - gold).sum()
+
+    def body(carry, xs):
+        hb, lb = xs
+        return carry + one(hb, lb), None
+
+    total, _ = jax.lax.scan(body, jnp.float32(0.0), (hc, lc))
+    return total / (b * s)

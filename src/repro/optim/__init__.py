@@ -1,0 +1,4 @@
+from repro.optim.adam import AdamConfig, AdamState, adam_init, adam_update  # noqa: F401
+from repro.optim.schedules import constant, cosine, linear_warmup_cosine  # noqa: F401
+from repro.optim.clip import clip_by_global_norm, global_norm  # noqa: F401
+from repro.optim.compress import int8_compress, int8_decompress, compressed_allreduce  # noqa: F401

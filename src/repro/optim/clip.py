@@ -1,0 +1,29 @@
+"""Gradient clipping + NaN guards (fault tolerance for long runs)."""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float) -> Tuple[Any, jnp.ndarray]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda x: x * scale.astype(x.dtype), tree), norm
+
+
+def sanitize(tree, replace: float = 0.0):
+    """Replace non-finite grads (lets a step proceed after a bad microbatch)."""
+    return jax.tree_util.tree_map(
+        lambda x: jnp.where(jnp.isfinite(x), x, jnp.asarray(replace, x.dtype)), tree)
+
+
+def is_finite(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.all(jnp.stack([jnp.all(jnp.isfinite(x)) for x in leaves]))

@@ -1,0 +1,47 @@
+"""Int8 gradient compression with error feedback.
+
+For 1000+-node data parallelism the gradient all-reduce is the dominant
+inter-pod collective.  ``compressed_allreduce`` quantizes each leaf to int8
+with a per-tensor scale before the sum and keeps the quantization residual
+locally (error feedback), which preserves convergence (1-bit-Adam-style
+analysis).  Works under ``shard_map``; on a single device it degrades to
+quantize→dequantize, which is what the unit tests exercise.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def int8_compress(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_decompress(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_allreduce(grads: Any, residual: Any, axis_name: str | None = None
+                         ) -> Tuple[Any, Any]:
+    """Returns (reduced_grads, new_residual).  ``residual`` is the same
+    pytree (error feedback accumulator); pass zeros initially."""
+
+    def leaf(g, r):
+        g32 = g.astype(jnp.float32) + r
+        q, s = int8_compress(g32)
+        deq = int8_decompress(q, s)
+        new_r = g32 - deq
+        if axis_name is not None:
+            deq = jax.lax.pmean(deq, axis_name)
+        return deq.astype(g.dtype), new_r
+
+    out = jax.tree_util.tree_map(leaf, grads, residual)
+    g_out = jax.tree_util.tree_map(lambda t: t[0], out,
+                                   is_leaf=lambda t: isinstance(t, tuple))
+    r_out = jax.tree_util.tree_map(lambda t: t[1], out,
+                                   is_leaf=lambda t: isinstance(t, tuple))
+    return g_out, r_out

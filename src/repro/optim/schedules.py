@@ -1,0 +1,23 @@
+"""Learning-rate schedules as step -> multiplier functions."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant():
+    return lambda step: jnp.float32(1.0)
+
+
+def cosine(total_steps: int, final: float = 0.1):
+    def fn(step):
+        t = jnp.clip(step / total_steps, 0.0, 1.0)
+        return final + (1 - final) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return fn
+
+
+def linear_warmup_cosine(warmup: int, total_steps: int, final: float = 0.1):
+    cos = cosine(max(total_steps - warmup, 1), final)
+    def fn(step):
+        w = jnp.clip(step / max(warmup, 1), 0.0, 1.0)
+        return w * cos(jnp.maximum(step - warmup, 0))
+    return fn

@@ -1,0 +1,3 @@
+from repro.sim.device import DeviceSpec, Topology, P100, TPU_V5E, p100_topology, tpu_v5e_topology  # noqa: F401
+from repro.sim.cost_model import node_compute_times  # noqa: F401
+from repro.sim.scheduler import SimGraph, prepare_sim_graph, simulate, simulate_batch, reward_from_runtime  # noqa: F401

@@ -1,0 +1,42 @@
+"""Per-op cost model: dataflow node -> execution seconds on a device.
+
+Roofline-style per-op estimate::
+
+    t(op) = max(flops / (peak * eff(op)), bytes_moved / hbm_bw) + overhead
+
+``eff(op)`` captures how well each op class drives the matrix unit; memory
+traffic is approximated as 3x the output size (read two operands, write one)
+— the same granularity TF's cost model uses for placement decisions.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.graph import DataflowGraph, OP_TYPES
+from repro.sim.device import DeviceSpec
+
+# Fraction of peak FLOP/s each op class achieves.
+_EFF = {
+    "matmul": 0.62, "conv": 0.55, "depthwise_conv": 0.12, "lstm_cell": 0.5,
+    "attention": 0.45, "embedding": 0.05, "softmax": 0.08, "reduce": 0.08,
+    "elementwise": 0.06, "layernorm": 0.08, "pool": 0.10, "loss": 0.08,
+    "update": 0.06, "gather": 0.04, "scatter": 0.04, "scan": 0.3,
+}
+_DEFAULT_EFF = 0.08
+_EFF_TABLE = np.array([_EFF.get(name, _DEFAULT_EFF) for name in OP_TYPES],
+                      dtype=np.float64)
+
+# Fixed per-op dispatch overhead (kernel launch / runtime bookkeeping).
+OP_OVERHEAD_S = 4e-6
+
+
+def node_compute_times(g: DataflowGraph, spec: DeviceSpec) -> np.ndarray:
+    """float64[N] seconds per node on one device of ``spec``."""
+    eff = _EFF_TABLE[g.op_type]
+    t_flops = g.flops / (spec.peak_flops * eff)
+    bytes_moved = 3.0 * g.out_bytes
+    t_mem = bytes_moved / spec.hbm_bw
+    t = np.maximum(t_flops, t_mem) + OP_OVERHEAD_S
+    # parameters/inputs are resident, not executed
+    is_static = (g.flops == 0) & (np.isin(g.op_type, [0, 1]))
+    return np.where(is_static, 0.0, t)

@@ -1,0 +1,43 @@
+"""Device and interconnect specifications for the execution simulator.
+
+Two device tables ship by default:
+
+* ``P100``    — matches the paper's evaluation hosts (up to 8 GPUs/host),
+  so reproduced step times land in the paper's 0.2–1.0 s regime.
+* ``TPU_V5E`` — the deployment target for the rest of the framework
+  (197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI), used when GDP places
+  jaxpr-extracted graphs for TPU stage assignment.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceSpec:
+    name: str
+    peak_flops: float      # FLOP/s at the matmul unit
+    mem_bytes: float       # usable HBM per device
+    hbm_bw: float          # bytes/s
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """Homogeneous device pool with uniform point-to-point links."""
+    num_devices: int
+    spec: DeviceSpec
+    link_bw: float         # bytes/s per point-to-point link
+    link_latency: float    # seconds per transfer
+
+
+P100 = DeviceSpec("p100", peak_flops=9.5e12, mem_bytes=15.0e9, hbm_bw=732e9)
+TPU_V5E = DeviceSpec("tpu_v5e", peak_flops=197e12, mem_bytes=16.0e9, hbm_bw=819e9)
+
+
+def p100_topology(num_devices: int) -> Topology:
+    # NVLink-class intra-host links.
+    return Topology(num_devices, P100, link_bw=20e9, link_latency=5e-6)
+
+
+def tpu_v5e_topology(num_devices: int) -> Topology:
+    return Topology(num_devices, TPU_V5E, link_bw=50e9, link_latency=1e-6)

@@ -1,0 +1,52 @@
+"""Pure-numpy reference simulator (oracle for property tests).
+
+Semantics identical to :func:`repro.sim.scheduler.simulate`; written
+independently with explicit loops so the jitted version is checked against
+it, plus an optional sender-port serialization mode used to quantify how
+much link contention shifts makespans (reported in EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+from repro.core.graph import DataflowGraph
+from repro.sim.cost_model import node_compute_times
+from repro.sim.device import Topology
+
+
+def simulate_ref(g: DataflowGraph, placement: np.ndarray, topo: Topology,
+                 max_deg: int = 16, sender_contention: bool = False
+                 ) -> Tuple[float, float, bool]:
+    n = g.num_nodes
+    ct = node_compute_times(g, topo.spec)
+    idx, mask = g.in_neighbors_padded(max_deg)
+    finish = np.zeros(n)
+    dev_free = np.zeros(topo.num_devices)
+    send_free = np.zeros(topo.num_devices)
+    inv_bw = 1.0 / topo.link_bw
+    p = placement.astype(np.int64)
+    for v in range(n):
+        ready = 0.0
+        for kk in range(idx.shape[1]):
+            if not mask[v, kk]:
+                continue
+            u = int(idx[v, kk])
+            t = finish[u]
+            if p[u] != p[v]:
+                dur = g.out_bytes[u] * inv_bw
+                if sender_contention:
+                    start = max(t, send_free[p[u]])
+                    send_free[p[u]] = start + dur
+                    t = start + topo.link_latency + dur
+                else:
+                    t = t + topo.link_latency + dur
+            ready = max(ready, t)
+        start = max(ready, dev_free[p[v]])
+        finish[v] = start + ct[v]
+        dev_free[p[v]] = finish[v]
+    mem = np.zeros(topo.num_devices)
+    np.add.at(mem, p, g.mem_bytes)
+    peak = float(mem.max()) if n else 0.0
+    return float(finish.max() if n else 0.0), peak, bool(peak <= topo.spec.mem_bytes)

@@ -1,0 +1,60 @@
+"""Placement baselines: validity and qualitative ordering."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import baselines as B
+from repro.core.export import placement_to_stage_plan
+from repro.graphs import synthetic as S
+from repro.sim import p100_topology, prepare_sim_graph
+from repro.sim.scheduler import Env
+
+
+@pytest.fixture(scope="module")
+def env4():
+    g = S.gnmt(2, time_steps=6)
+    topo = p100_topology(4)
+    cap = g.total_mem() / 4 * 1.8
+    topo = dataclasses.replace(
+        topo, spec=dataclasses.replace(topo.spec, mem_bytes=cap))
+    return g, topo, Env(prepare_sim_graph(g, topo, max_deg=16), topo)
+
+
+def test_all_baselines_in_range(env4):
+    g, topo, env = env4
+    for fn in (B.human_expert, B.metis_like, B.random_placement):
+        p = fn(g, topo)
+        assert p.shape == (g.num_nodes,)
+        assert p.min() >= 0 and p.max() < 4
+
+
+def test_expert_beats_random(env4):
+    g, topo, env = env4
+    mk_h, _, v_h = env.rewards(jnp.asarray(B.human_expert(g, topo))[None])
+    mks = []
+    for s in range(5):
+        mk_r, _, v_r = env.rewards(
+            jnp.asarray(B.random_placement(g, topo, seed=s))[None])
+        if bool(v_r[0]):
+            mks.append(float(mk_r[0]))
+    assert bool(v_h[0])
+    assert float(mk_h[0]) < min(mks)
+
+
+def test_metis_no_worse_than_expert(env4):
+    g, topo, env = env4
+    mk_h, _, _ = env.rewards(jnp.asarray(B.human_expert(g, topo))[None])
+    mk_m, _, v = env.rewards(jnp.asarray(B.metis_like(g, topo))[None])
+    assert bool(v[0])
+    assert float(mk_m[0]) <= float(mk_h[0]) * 1.05
+
+
+def test_stage_plan_export(env4):
+    g, topo, _ = env4
+    p = B.human_expert(g, topo)
+    plan = placement_to_stage_plan(g, p, 4)
+    assert plan.num_stages <= 4
+    assert np.all(np.diff(plan.stage_of_node) >= 0)   # monotone pipeline
+    assert plan.stage_flops.sum() == pytest.approx(g.flops.sum(), rel=1e-6)

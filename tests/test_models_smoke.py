@@ -1,0 +1,62 @@
+"""Per-arch smoke: reduced config, one train step + prefill + decode on CPU,
+asserting output shapes and no NaNs (deliverable f)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced, list_archs
+from repro.models.model import build_model
+
+
+def make_batch(cfg, b=2, s=32):
+    rng = np.random.RandomState(0)
+    batch = {"tokens": jnp.asarray(rng.randint(0, cfg.vocab, (b, s)), jnp.int32),
+             "labels": jnp.asarray(rng.randint(0, cfg.vocab, (b, s)), jnp.int32)}
+    if cfg.enc_dec:
+        batch["frames"] = jnp.asarray(rng.randn(b, 16, cfg.d_model), jnp.float32)
+    if cfg.frontend == "vision":
+        batch["patch_embeds"] = jnp.asarray(rng.randn(b, 8, cfg.d_model),
+                                            jnp.float32)
+    if cfg.mrope:
+        batch["positions"] = jnp.broadcast_to(
+            jnp.arange(s)[None, None, :], (3, b, s)).astype(jnp.int32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_arch_smoke(arch):
+    cfg = get_reduced(arch)
+    model = build_model(cfg)
+    state = model.init_train_state(jax.random.PRNGKey(0))
+    batch = make_batch(cfg)
+    state2, metrics = jax.jit(model.make_train_step())(state, batch)
+    loss = float(metrics["loss"])
+    assert np.isfinite(loss), f"{arch}: train loss NaN"
+    assert loss > 0
+    # one more step decreases or stays comparable (optimizer wired correctly)
+    state3, metrics2 = jax.jit(model.make_train_step())(state2, batch)
+    assert np.isfinite(float(metrics2["loss"]))
+
+    caches, logits = model.prefill(state["params"], batch, cache_len=64)
+    assert logits.shape == (2, 1, cfg.vocab)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+    caches2, lg2 = model.decode_step(state["params"], caches,
+                                     jnp.zeros((2, 1), jnp.int32),
+                                     jnp.int32(32))
+    assert lg2.shape == (2, 1, cfg.vocab)
+    assert np.all(np.isfinite(np.asarray(lg2, np.float32)))
+
+
+def test_param_counts_match_assignment():
+    from repro.configs import get_config
+    expected = {  # billions, loose bands around the assigned names
+        "starcoder2-3b": (2, 4.5), "qwen3-8b": (6, 10),
+        "mistral-large-123b": (100, 140), "gemma2-9b": (7.5, 12),
+        "arctic-480b": (380, 560), "deepseek-moe-16b": (12, 20),
+        "whisper-base": (0.05, 0.12), "qwen2-vl-7b": (6, 10),
+        "xlstm-125m": (0.08, 0.2), "jamba-1.5-large-398b": (300, 480),
+    }
+    for arch, (lo, hi) in expected.items():
+        n = get_config(arch).param_count() / 1e9
+        assert lo <= n <= hi, f"{arch}: {n:.2f}B outside [{lo},{hi}]B"

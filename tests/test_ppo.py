@@ -1,0 +1,52 @@
+"""PPO machinery: learns a non-trivial reward; baselines bookkeeping."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.featurize import featurize
+from repro.core.policy import PolicyConfig
+from repro.core.ppo import PPOConfig, PPOTrainer, _per_node_advantage
+from repro.graphs import synthetic as S
+from repro.sim import p100_topology
+
+
+class FracEnv:
+    """Reward = fraction of nodes on device 0 (asymmetric, learnable)."""
+
+    def rewards(self, placements):
+        frac = (placements == 0).mean(axis=1).astype(jnp.float32)
+        return 1.0 - frac, frac - 1.0, jnp.ones(placements.shape[0], bool)
+
+
+def test_ppo_learns_trivial_reward():
+    g = S.rnnlm(2, time_steps=3)
+    gb = featurize(g, max_deg=8, topo=p100_topology(4))
+    pcfg = PolicyConfig(hidden=32, gnn_layers=2, placer_layers=1, ffn=64,
+                        window=32, max_devices=8)
+    tr = PPOTrainer(pcfg, PPOConfig(num_samples=8, lr=3e-3, epochs=2,
+                                    entropy_coef=0.005, canonicalize=False,
+                                    per_node_credit=True), seed=0)
+    m0 = tr.iteration("t", gb, FracEnv(), 4)
+    for _ in range(40):
+        m = tr.iteration("t", gb, FracEnv(), 4)
+    assert m["reward_mean"] > m0["reward_mean"] + 0.3
+
+
+def test_running_average_baseline():
+    g = S.rnnlm(2, time_steps=3)
+    gb = featurize(g, max_deg=8, topo=p100_topology(4))
+    pcfg = PolicyConfig(hidden=32, gnn_layers=1, placer_layers=1, ffn=64,
+                        window=32, max_devices=8)
+    tr = PPOTrainer(pcfg, PPOConfig(num_samples=4, epochs=1,
+                                    canonicalize=False), seed=0)
+    tr.iteration("t", gb, FracEnv(), 4)
+    c0 = tr.state.baseline_counts["t"]
+    tr.iteration("t", gb, FracEnv(), 4)
+    assert tr.state.baseline_counts["t"] == c0 + 4   # all previous trials
+
+
+def test_per_node_advantage_estimator():
+    pl = np.array([[0, 1], [1, 1], [0, 0], [1, 0]])
+    r = np.array([1.0, -1.0, 1.0, -1.0])      # node0==0 -> +1
+    adv = _per_node_advantage(pl, r, 2, r.copy(), mix=1.0)
+    assert adv[0, 0] > 0.5 and adv[1, 0] < -0.5
+    np.testing.assert_allclose(adv[:, 1], 0.0, atol=1e-6)

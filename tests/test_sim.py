@@ -1,0 +1,93 @@
+"""Simulator: jitted scheduler vs pure-numpy oracle + reward semantics."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import baselines as B
+from repro.graphs import synthetic as S
+from repro.sim import p100_topology, prepare_sim_graph, simulate
+from repro.sim.reference import simulate_ref
+from repro.sim.scheduler import Env, reward_from_runtime, reward_shaped
+
+
+def _env(g, d=4, tighten=None):
+    topo = p100_topology(d)
+    if tighten:
+        cap = g.total_mem() / d * tighten
+        topo = dataclasses.replace(
+            topo, spec=dataclasses.replace(topo.spec, mem_bytes=cap))
+    sg = prepare_sim_graph(g, topo, max_deg=16)
+    return sg, topo
+
+
+GRAPHS = [S.rnnlm(2, time_steps=4), S.transformer_xl(2, segments=2),
+          S.inception(modules=3)]
+
+
+@pytest.mark.parametrize("g", GRAPHS, ids=lambda g: g.name)
+@pytest.mark.parametrize("seed", [0, 1])
+def test_jit_matches_reference(g, seed):
+    sg, topo = _env(g)
+    rng = np.random.RandomState(seed)
+    p = rng.randint(0, 4, g.num_nodes).astype(np.int32)
+    mk, peak, valid = simulate(sg, jnp.asarray(p), num_devices=4,
+                               link_bw=topo.link_bw,
+                               link_latency=topo.link_latency,
+                               mem_cap=topo.spec.mem_bytes)
+    mk_ref, peak_ref, valid_ref = simulate_ref(g, p, topo)
+    assert np.isclose(float(mk), mk_ref, rtol=1e-4)
+    assert np.isclose(float(peak), peak_ref, rtol=1e-5)
+    assert bool(valid) == valid_ref
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10 ** 6))
+def test_jit_matches_reference_random_placements(seed):
+    g = GRAPHS[0]
+    sg, topo = _env(g, d=3)
+    rng = np.random.RandomState(seed)
+    p = rng.randint(0, 3, g.num_nodes).astype(np.int32)
+    mk, _, _ = simulate(sg, jnp.asarray(p), num_devices=3,
+                        link_bw=topo.link_bw,
+                        link_latency=topo.link_latency,
+                        mem_cap=topo.spec.mem_bytes)
+    mk_ref, _, _ = simulate_ref(g, p, topo, max_deg=16)
+    assert np.isclose(float(mk), mk_ref, rtol=1e-4)
+
+
+def test_single_device_no_comm_cost():
+    """All-on-one-device makespan == sum of compute times."""
+    g = S.rnnlm(2, time_steps=4)
+    sg, topo = _env(g, d=2)
+    from repro.sim.cost_model import node_compute_times
+    ct = node_compute_times(g, topo.spec)
+    mk, _, _ = simulate(sg, jnp.zeros(g.num_nodes, jnp.int32), num_devices=2,
+                        link_bw=topo.link_bw, link_latency=topo.link_latency,
+                        mem_cap=topo.spec.mem_bytes)
+    assert np.isclose(float(mk), ct.sum(), rtol=1e-4)
+
+
+def test_memory_validity_and_rewards():
+    g = S.transformer_xl(2, segments=2)
+    sg, topo = _env(g, d=4, tighten=1.5)
+    env = Env(sg, topo)
+    single = jnp.zeros((1, g.num_nodes), jnp.int32)
+    mk, r, valid = env.rewards(single)
+    assert not bool(valid[0])           # single device OOMs
+    assert float(r[0]) == -10.0          # paper's invalid reward
+    spread = jnp.asarray(B.human_expert(g, topo))[None]
+    mk2, r2, valid2 = env.rewards(spread)
+    assert bool(valid2[0])
+    assert np.isclose(float(r2[0]), -np.sqrt(float(mk2[0])), rtol=1e-5)
+
+
+def test_shaped_reward_continuity():
+    mk = jnp.asarray([1.0, 1.0])
+    peak = jnp.asarray([0.9e9, 1.1e9])
+    r = reward_shaped(mk, peak, 1e9)
+    assert float(r[0]) == pytest.approx(-1.0)
+    assert float(r[1]) < -1.0            # penalized but not cliff -10
+    assert float(r[1]) > -10.0
