@@ -37,6 +37,12 @@ def main():
     print("[campaign] ablation", flush=True)
     cached["ablation"] = ablation.run(iterations=max(args.iters // 3, 50))
     C.save_cached(cached)
+
+    print("[campaign] hetero", flush=True)
+    from benchmarks import hetero
+    cached["hetero"] = hetero.run(iterations=max(args.iters // 2, 60),
+                                  full=True)
+    C.save_cached(cached)
     print("[campaign] done", flush=True)
 
 

@@ -54,14 +54,17 @@ class Task:
 
 
 def make_task(name: str, g, num_devices: int, tighten: float = 1.8) -> Task:
-    topo0 = p100_topology(num_devices)
     cap = g.total_mem() / num_devices * tighten
-    topo = dataclasses.replace(
-        topo0, spec=dataclasses.replace(topo0.spec, mem_bytes=cap))
+    topo = p100_topology(num_devices).with_mem_caps(cap)
+    return make_task_topo(name, g, topo)
+
+
+def make_task_topo(name: str, g, topo) -> Task:
+    """Task on an arbitrary (possibly heterogeneous) Topology."""
     sg = prepare_sim_graph(g, topo, max_deg=16)
     return Task(name, g, topo, Env(sg, topo, shaped_reward=True),
                 Env(sg, topo), featurize(g, max_deg=8, topo=topo),
-                num_devices)
+                topo.num_devices)
 
 
 def paper_tasks(full: bool = False) -> List[Task]:
@@ -88,6 +91,7 @@ def eval_placement(task: Task, placement: np.ndarray) -> Tuple[float, bool]:
 def baseline_rows(task: Task) -> Dict[str, float]:
     out = {}
     for name, fn in (("human", B.human_expert), ("metis", B.metis_like),
+                     ("round_robin", B.round_robin),
                      ("single", B.single_device)):
         mk, valid = eval_placement(task, fn(task.graph, task.topo))
         out[name] = mk if valid else float("inf")

@@ -85,6 +85,23 @@ def main() -> None:
                   f"no_attn={r.get('no_attention', float('nan')):.5f};"
                   f"no_sp={r.get('no_superposition', float('nan')):.5f}")
 
+    _section("Heterogeneous fleets: GDP vs topology-blind round-robin")
+    if not args.skip_rl:
+        from benchmarks import hetero
+        rows = hetero.run(iterations=25 if quick else 300, full=not quick)
+        for name, r in rows.items():
+            print(f"hetero.{name},{r['gdp']:.5f},"
+                  f"rr={r['round_robin']:.5f};hp={r['human']:.5f};"
+                  f"metis={r['metis']:.5f};"
+                  f"dRR={r['gdp_vs_round_robin']*100:+.1f}%")
+        u = hetero.uniform_equivalence_row()
+        print(f"hetero.uniform_check,{u['makespan']:.5f},valid={u['valid']}")
+    if "hetero" in cached:
+        for name, r in cached["hetero"].items():
+            print(f"hetero.campaign.{name},{r['gdp']:.5f},"
+                  f"rr={r['round_robin']:.5f};"
+                  f"dRR={r['gdp_vs_round_robin']*100:+.1f}%")
+
     _section("Roofline: dry-run terms per (arch x shape x mesh)")
     try:
         from benchmarks import roofline

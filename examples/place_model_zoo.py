@@ -33,10 +33,7 @@ def main(iterations: int = 40):
     g = extract(model.loss, params, batch, name="qwen3-reduced-loss")
     print("extracted:", g.subgraph_stats())
 
-    topo = p100_topology(2)
-    cap = g.total_mem() / 2 * 1.9
-    topo = dataclasses.replace(
-        topo, spec=dataclasses.replace(topo.spec, mem_bytes=cap))
+    topo = p100_topology(2).with_mem_caps(g.total_mem() / 2 * 1.9)
     env_true = Env(prepare_sim_graph(g, topo, max_deg=16), topo)
     env = dataclasses.replace(env_true, shaped_reward=True)
     gb = featurize(g, max_deg=8, topo=topo)

@@ -6,7 +6,6 @@ against the human-expert and METIS baselines.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import dataclasses
 import time
 
 import jax.numpy as jnp
@@ -23,10 +22,8 @@ from repro.sim.scheduler import Env
 
 def main(iterations: int = 60):
     g = S.transformer_xl(2, segments=3)
-    topo = p100_topology(2)
     cap = g.total_mem() / 2 * 1.8           # memory-constrained (paper regime)
-    topo = dataclasses.replace(
-        topo, spec=dataclasses.replace(topo.spec, mem_bytes=cap))
+    topo = p100_topology(2).with_mem_caps(cap)
     sg = prepare_sim_graph(g, topo, max_deg=16)
     env, env_true = Env(sg, topo, shaped_reward=True), Env(sg, topo)
     gb = featurize(g, max_deg=8, topo=topo)

@@ -2,14 +2,22 @@
 
 * ``human_expert``  — contiguous compute-balanced split in topological
   order: the standard expert strategy (whole layers per device, parameters
-  co-located with their consumers, balance per-device FLOPs).
+  co-located with their consumers, balance per-device FLOPs).  On a
+  heterogeneous pool the cut points are proportional to device throughput
+  (a 2× faster device receives 2× the compute) — the natural extension of
+  what an expert does on a mixed fleet.
 * ``metis_like``    — multilevel balanced min-edge-cut partitioner in the
   spirit of METIS (greedy growth + Kernighan–Lin boundary refinement over
-  edge byte weights, with compute balance constraint).
+  edge byte weights, with a *time-balance* constraint: loads are measured
+  in per-device seconds, so slow devices saturate earlier).
+* ``round_robin``   — topology-blind ``node i -> i mod D``: the control
+  that quantifies how much speed-awareness buys on mixed fleets.
 * ``single_device`` — everything on device 0 (sanity lower bound on comm).
 * random placement  — exploration reference.
 
 All return int32[N] placements evaluated by the same simulator as GDP.
+Uniform topologies take the exact historical code paths, so their
+placements (and therefore makespans) are bit-for-bit unchanged.
 """
 from __future__ import annotations
 
@@ -18,12 +26,17 @@ from typing import Optional
 import numpy as np
 
 from repro.core.graph import DataflowGraph
-from repro.sim.cost_model import node_compute_times
+from repro.sim.cost_model import node_compute_matrix, node_compute_times
 from repro.sim.device import Topology
 
 
 def single_device(g: DataflowGraph, topo: Topology) -> np.ndarray:
     return np.zeros(g.num_nodes, np.int32)
+
+
+def round_robin(g: DataflowGraph, topo: Topology) -> np.ndarray:
+    """Topology-blind striping in topo order (ignores device speeds)."""
+    return (np.arange(g.num_nodes) % topo.num_devices).astype(np.int32)
 
 
 def random_placement(g: DataflowGraph, topo: Topology,
@@ -32,19 +45,42 @@ def random_placement(g: DataflowGraph, topo: Topology,
     return rng.randint(0, topo.num_devices, g.num_nodes).astype(np.int32)
 
 
-def human_expert(g: DataflowGraph, topo: Topology) -> np.ndarray:
-    """Contiguous compute-balanced chunks in topo order.
+def _throughput_shares(ct_mat: np.ndarray) -> np.ndarray:
+    """f64[D] fraction of total compute each device should receive,
+    proportional to its throughput on THIS graph's op mix."""
+    total = ct_mat.sum(axis=0)                        # graph seconds per device
+    speed = 1.0 / np.maximum(total, 1e-30)
+    return speed / speed.sum()
+
+
+def human_expert(g: DataflowGraph, topo: Topology,
+                 ct_mat: Optional[np.ndarray] = None) -> np.ndarray:
+    """Contiguous throughput-balanced chunks in topo order.
 
     Mirrors how experts place stacked models: consecutive layers share a
-    device; cut points chosen so cumulative compute is balanced.  Parameters
+    device; cut points chosen so each device's share of cumulative compute
+    matches its throughput (equal shares on a uniform pool).  Parameters
     (zero-compute nodes) are assigned with their first consumer.
     """
     d = topo.num_devices
-    ct = node_compute_times(g, topo.spec)
-    cum = np.cumsum(ct)
-    total = cum[-1] if g.num_nodes else 0.0
-    placement = np.minimum((cum / max(total, 1e-12) * d).astype(np.int64),
-                           d - 1).astype(np.int32)
+    if topo.is_uniform:
+        # exact historical path: bit-identical placements on uniform pools
+        ct = node_compute_times(g, topo.spec)
+        cum = np.cumsum(ct)
+        total = cum[-1] if g.num_nodes else 0.0
+        placement = np.minimum((cum / max(total, 1e-12) * d).astype(np.int64),
+                               d - 1).astype(np.int32)
+    else:
+        if ct_mat is None:
+            ct_mat = node_compute_matrix(g, topo)
+        ct = ct_mat.min(axis=1)
+        cum = np.cumsum(ct)
+        total = cum[-1] if g.num_nodes else 0.0
+        # device k owns cumulative-compute fractions [bounds[k-1], bounds[k])
+        bounds = np.cumsum(_throughput_shares(ct_mat))
+        frac = cum / max(total, 1e-12)
+        placement = np.minimum(np.searchsorted(bounds, frac, side="left"),
+                               d - 1).astype(np.int32)
     # co-locate parameters with first consumer
     first_consumer = np.full(g.num_nodes, -1, np.int64)
     for s, t in zip(g.src, g.dst):
@@ -61,20 +97,30 @@ def metis_like(g: DataflowGraph, topo: Topology, *, kl_passes: int = 4,
                balance_tol: float = 0.15, seed: int = 0) -> np.ndarray:
     """Balanced min-cut partitioning (METIS stand-in).
 
-    1. Seed d partitions with greedy BFS growth in topo order weighted by
-       compute time (balance constraint).
+    1. Seed d partitions with the throughput-aware expert split.
     2. Kernighan–Lin-style refinement: move boundary nodes to the partition
-       holding most of their edge bytes if balance stays within tolerance.
+       holding most of their edge bytes if the time balance stays within
+       tolerance.  Loads are per-device *seconds* (node cost depends on the
+       device under consideration), so on mixed fleets slow devices hit the
+       balance ceiling with proportionally less work.
     """
     n, d = g.num_nodes, topo.num_devices
-    ct = node_compute_times(g, topo.spec)
-    placement = human_expert(g, topo).copy()          # balanced seed
+    uniform = topo.is_uniform
+    if uniform:
+        ct_mat = np.repeat(node_compute_times(g, topo.spec)[:, None], d, axis=1)
+    else:
+        ct_mat = node_compute_matrix(g, topo)
+    placement = human_expert(g, topo, ct_mat).copy()  # balanced seed
     if n == 0 or d == 1:
         return placement
 
     loads = np.zeros(d)
-    np.add.at(loads, placement, ct)
-    target = ct.sum() / d
+    np.add.at(loads, placement, ct_mat[np.arange(n), placement])
+    if uniform:
+        target = ct_mat[:, 0].sum() / d               # historical formula
+    else:
+        # ideal per-device seconds if work splits by throughput
+        target = ct_mat.min(axis=1).sum() / d
     hi = target * (1 + balance_tol)
     lo = target * (1 - balance_tol)
 
@@ -97,12 +143,13 @@ def metis_like(g: DataflowGraph, topo: Topology, *, kl_passes: int = 4,
             best = int(np.argmax(gain))
             if best == pv or gain[best] <= gain[pv]:
                 continue
-            if loads[best] + ct[v] > hi or loads[pv] - ct[v] < lo * 0.0:
-                if loads[best] + ct[v] > hi:
+            if loads[best] + ct_mat[v, best] > hi or \
+                    loads[pv] - ct_mat[v, pv] < lo * 0.0:
+                if loads[best] + ct_mat[v, best] > hi:
                     continue
             placement[v] = best
-            loads[pv] -= ct[v]
-            loads[best] += ct[v]
+            loads[pv] -= ct_mat[v, pv]
+            loads[best] += ct_mat[v, best]
             moved += 1
         if not moved:
             break

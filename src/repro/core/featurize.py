@@ -9,6 +9,14 @@ type, output shape, adjacent node ids)"):
 * topological position fraction
 * log output-shape dims (up to rank 4)
 
+Device features (heterogeneous-topology extension): a ``[D, F]`` table of
+normalized per-device capabilities — relative peak FLOP/s, HBM bandwidth,
+memory capacity and interconnect reach — that conditions the decoder's
+device logits so the policy can learn "put the big matmuls on the fast
+device".  On a uniform pool every row is identical, so the table shifts
+all valid devices' logits equally and the placement distribution reduces
+to the homogeneous one.
+
 Graphs in a batch are padded to a common (N, K); the sentinel neighbor index
 is N (a zero/-inf feature row is appended where needed).
 """
@@ -22,6 +30,7 @@ import jax.numpy as jnp
 from repro.core.graph import DataflowGraph, MAX_SHAPE_RANK
 
 NUM_NUMERIC_FEATURES = 6 + MAX_SHAPE_RANK
+NUM_DEVICE_FEATURES = 6
 
 
 class GraphBatch(NamedTuple):
@@ -31,16 +40,39 @@ class GraphBatch(NamedTuple):
     nbr_idx: jnp.ndarray     # i32[N, K]   sentinel = N
     nbr_mask: jnp.ndarray    # f32[N, K]
     node_mask: jnp.ndarray   # f32[N]
-    mem_frac: jnp.ndarray    # f32[N]  node resident bytes / device capacity
-    comp_frac: jnp.ndarray   # f32[N]  node compute time / graph total
+    mem_frac: jnp.ndarray    # f32[N]  node resident bytes / tightest device cap
+    comp_frac: jnp.ndarray   # f32[N]  best-device compute time / graph total
+    dev_feats: jnp.ndarray   # f32[D, F_DEV] normalized per-device capabilities
     num_nodes: int           # real node count (static python int)
+
+
+def device_features(topo) -> np.ndarray:
+    """f32[D, NUM_DEVICE_FEATURES] normalized capability table.
+
+    Columns: peak-FLOP/s, HBM bandwidth and memory capacity relative to the
+    pool's best device; mean and min outgoing link bandwidth relative to
+    the pool's best-connected device; absolute log-FLOP/s anchor.
+    """
+    d = topo.num_devices
+    pf, hb, mc = topo.peak_flops, topo.hbm_bw, topo.mem_caps
+    off = ~np.eye(d, dtype=bool)
+    if d > 1:
+        bw_out = np.array([topo.bw[i][off[i]].mean() for i in range(d)])
+        bw_min = np.array([topo.bw[i][off[i]].min() for i in range(d)])
+    else:
+        bw_out = bw_min = np.ones(d)
+    f = np.stack([pf / pf.max(), hb / hb.max(), mc / mc.max(),
+                  bw_out / bw_out.max(), bw_min / bw_min.max(),
+                  np.log10(pf) / 15.0], axis=1)
+    return f.astype(np.float32)
 
 
 def featurize(g: DataflowGraph, max_deg: int = 8,
               pad_to: Optional[int] = None, topo=None) -> GraphBatch:
     """``topo`` (sim.device.Topology) enables the resource-aware decoder
     context: per-node memory/compute fractions the AR placer accumulates
-    per device while decoding (DESIGN.md §5-addendum)."""
+    per device while decoding, plus the per-device capability table
+    (DESIGN.md §5-addendum)."""
     n = g.num_nodes
     pad_n = pad_to or n
     assert pad_n >= n, (pad_n, n)
@@ -68,23 +100,29 @@ def featurize(g: DataflowGraph, max_deg: int = 8,
 
     mem_frac = np.zeros(pad_n, np.float32)
     comp_frac = np.zeros(pad_n, np.float32)
+    dev_feats = np.zeros((0, NUM_DEVICE_FEATURES), np.float32)
     if topo is not None:
-        from repro.sim.cost_model import node_compute_times
-        mem_frac[:n] = g.mem_bytes / topo.spec.mem_bytes
-        ct = node_compute_times(g, topo.spec)
+        from repro.sim.cost_model import node_compute_matrix
+        # fractions against the tightest cap / best device: identical to
+        # the historical single-spec fractions on uniform pools
+        mem_frac[:n] = g.mem_bytes / topo.mem_caps.min()
+        ct = node_compute_matrix(g, topo).min(axis=1)
         comp_frac[:n] = ct / max(ct.sum(), 1e-12)
+        dev_feats = device_features(topo)
     return GraphBatch(jnp.asarray(op), jnp.asarray(f), jnp.asarray(nbr_idx),
                       jnp.asarray(nbr_mask), jnp.asarray(node_mask),
-                      jnp.asarray(mem_frac), jnp.asarray(comp_frac), n)
+                      jnp.asarray(mem_frac), jnp.asarray(comp_frac),
+                      jnp.asarray(dev_feats), n)
 
 
 def pad_to_common(batches: List[GraphBatch]) -> List[GraphBatch]:
-    """Re-pad a list of GraphBatches to identical (N, K) for stacking."""
+    """Re-pad a list of GraphBatches to identical (N, K, D) for stacking."""
     n = max(b.op.shape[0] for b in batches)
     k = max(b.nbr_idx.shape[1] for b in batches)
+    d = max(b.dev_feats.shape[0] for b in batches)
     out = []
     for b in batches:
-        bn, bk = b.op.shape[0], b.nbr_idx.shape[1]
+        bn, bk, bd = b.op.shape[0], b.nbr_idx.shape[1], b.dev_feats.shape[0]
         op = jnp.zeros(n, jnp.int32).at[:bn].set(b.op)
         feats = jnp.zeros((n, b.feats.shape[1]), jnp.float32).at[:bn].set(b.feats)
         idx = jnp.full((n, k), n, jnp.int32)
@@ -95,7 +133,10 @@ def pad_to_common(batches: List[GraphBatch]) -> List[GraphBatch]:
         nmask = jnp.zeros(n, jnp.float32).at[:bn].set(b.node_mask)
         memf = jnp.zeros(n, jnp.float32).at[:bn].set(b.mem_frac)
         compf = jnp.zeros(n, jnp.float32).at[:bn].set(b.comp_frac)
-        out.append(GraphBatch(op, feats, idx, mask, nmask, memf, compf,
+        df = jnp.zeros((d, NUM_DEVICE_FEATURES), jnp.float32)
+        if bd:
+            df = df.at[:bd].set(b.dev_feats)
+        out.append(GraphBatch(op, feats, idx, mask, nmask, memf, compf, df,
                               b.num_nodes))
     return out
 
@@ -111,5 +152,6 @@ def stack_batches(batches: List[GraphBatch]) -> GraphBatch:
         node_mask=jnp.stack([b.node_mask for b in padded]),
         mem_frac=jnp.stack([b.mem_frac for b in padded]),
         comp_frac=jnp.stack([b.comp_frac for b in padded]),
+        dev_feats=jnp.stack([b.dev_feats for b in padded]),
         num_nodes=max(b.num_nodes for b in padded),
     )

@@ -22,6 +22,12 @@ Design notes mapped to the paper:
 * **Superposition** gain ``c`` (Eq. 4) modulates every dense layer input;
   ``None`` disables it (Fig. 3 ablation).
 * ``use_attention=False`` removes the attention sublayer (Fig. 3 ablation).
+* **Device-aware head** (heterogeneous-topology extension): each device's
+  logit gains a bilinear term ``out·W·devfeat_d`` over the normalized
+  per-device capability table (``featurize.device_features``), so the
+  decoder can rank devices by speed/memory/connectivity per node.  On a
+  uniform pool all rows are equal, the term shifts every valid device's
+  logit identically, and the distribution reduces to the homogeneous one.
 
 The teacher-forced pass and the sampling scan share all parameters and
 masks, so logp(sampled placement) is exact for PPO.
@@ -34,6 +40,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import nn
+from repro.core.featurize import NUM_DEVICE_FEATURES
 from repro.core.superposition import modulate
 
 NEG = -1e9
@@ -41,7 +48,7 @@ NEG = -1e9
 
 def init(key, hidden: int, num_layers: int = 2, heads: int = 4,
          ffn: int = 512, max_devices: int = 16) -> Dict[str, Any]:
-    ks = nn.split_keys(key, 6 * num_layers + 3)
+    ks = nn.split_keys(key, 6 * num_layers + 4)
     layers: List[Dict[str, Any]] = []
     for l in range(num_layers):
         k = ks[6 * l: 6 * l + 6]
@@ -63,6 +70,9 @@ def init(key, hidden: int, num_layers: int = 2, heads: int = 4,
         "ctx": nn.dense_init(ks[-1], 2 * max_devices + 2, hidden, scale=0.1),
         "ln_f": nn.layernorm_init(hidden),
         "head": nn.dense_init(ks[-2], hidden, max_devices, scale=1e-2),
+        # device-capability keys for the bilinear head term
+        "dev_key": nn.dense_init(ks[-4], NUM_DEVICE_FEATURES, hidden,
+                                 scale=0.1),
     }
 
 
@@ -92,9 +102,22 @@ def _inputs(params, h, prev_dev, ctx):
     return h + params["dev_emb"][prev_dev] + nn.dense(params["ctx"], ctx)
 
 
-def _head_logits(params, x, c, num_devices):
+def _dev_keys(params, dev_feats: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """[Dmax, H] capability keys; zero-feature rows (padding, or a
+    featurize() without topo) all map to the bias row — a constant logit
+    shift that cancels in the softmax."""
+    dmax = params["head"]["b"].shape[0]
+    df = jnp.zeros((dmax, NUM_DEVICE_FEATURES))
+    if dev_feats is not None and dev_feats.shape[0]:
+        df = df.at[:dev_feats.shape[0]].set(dev_feats[:dmax])
+    return nn.dense(params["dev_key"], df)
+
+
+def _head_logits(params, x, c, num_devices, dev_keys):
     out = nn.layernorm(params["ln_f"], x)
-    logits = nn.dense(params["head"], modulate(c, out))
+    outm = modulate(c, out)
+    logits = nn.dense(params["head"], outm)
+    logits = logits + outm @ dev_keys.T / jnp.sqrt(jnp.float32(out.shape[-1]))
     dmax = logits.shape[-1]
     return jnp.where((jnp.arange(dmax) < num_devices), logits, NEG)
 
@@ -121,7 +144,8 @@ def _banded_attention(q, k, v, window: int) -> jnp.ndarray:
 
 def apply_tf(params: Dict[str, Any], h: jnp.ndarray, node_mask: jnp.ndarray,
              placements: jnp.ndarray, c: Optional[jnp.ndarray],
-             mem_frac: jnp.ndarray, comp_frac: jnp.ndarray, *,
+             mem_frac: jnp.ndarray, comp_frac: jnp.ndarray,
+             dev_feats: Optional[jnp.ndarray] = None, *,
              window: int = 256, heads: int = 4, num_devices: int = 4,
              use_attention: bool = True) -> jnp.ndarray:
     """Parallel logits for given placements (PPO ratio path).
@@ -150,13 +174,14 @@ def apply_tf(params: Dict[str, Any], h: jnp.ndarray, node_mask: jnp.ndarray,
             out = _banded_attention(q, k, v, window).reshape(n, hid)
             x = x + nn.dense(lp["wo"], modulate(c, out)) * node_mask[:, None]
         x = _ffn(lp, x, c)
-    return _head_logits(params, x, c, num_devices)
+    return _head_logits(params, x, c, num_devices, _dev_keys(params, dev_feats))
 
 
 # ------------------------------------------------------------- AR sampling
 def sample_ar(params: Dict[str, Any], h: jnp.ndarray, node_mask: jnp.ndarray,
               c: Optional[jnp.ndarray], key,
-              mem_frac: jnp.ndarray, comp_frac: jnp.ndarray, *,
+              mem_frac: jnp.ndarray, comp_frac: jnp.ndarray,
+              dev_feats: Optional[jnp.ndarray] = None, *,
               window: int = 256, heads: int = 4, num_devices: int = 4,
               use_attention: bool = True
               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -172,6 +197,7 @@ def sample_ar(params: Dict[str, Any], h: jnp.ndarray, node_mask: jnp.ndarray,
     dmax = params["head"]["b"].shape[0]
     w = min(window, n)
 
+    dev_keys = _dev_keys(params, dev_feats)        # loop-invariant
     kcache0 = jnp.zeros((nlayers, w, heads, hd))
     vcache0 = jnp.zeros((nlayers, w, heads, hd))
     poscache0 = jnp.full((w,), -10 ** 9, jnp.int32)   # absolute idx per slot
@@ -204,7 +230,7 @@ def sample_ar(params: Dict[str, Any], h: jnp.ndarray, node_mask: jnp.ndarray,
                 new_kc.append(kc[li])
                 new_vc.append(vc[li])
             x = _ffn(lp, x[None], c)[0]
-        logits = _head_logits(params, x[None], c, num_devices)[0]
+        logits = _head_logits(params, x[None], c, num_devices, dev_keys)[0]
         lpv = jax.nn.log_softmax(logits)
         d = jax.random.categorical(ki, logits)
         dev_oh = jax.nn.one_hot(d, dmax)

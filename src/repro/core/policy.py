@@ -57,8 +57,8 @@ def sample(params, cfg: PolicyConfig, gb: GraphBatch, num_devices: int,
     keys = jax.random.split(key, num_samples)
     devs, lps = jax.vmap(lambda k: placer.sample_ar(
         params["placer"], h, gb.node_mask, c, k, gb.mem_frac, gb.comp_frac,
-        window=cfg.window, heads=cfg.heads, num_devices=num_devices,
-        use_attention=cfg.use_attention))(keys)
+        gb.dev_feats, window=cfg.window, heads=cfg.heads,
+        num_devices=num_devices, use_attention=cfg.use_attention))(keys)
     return devs.astype(jnp.int32), lps
 
 
@@ -70,7 +70,7 @@ def logp_and_entropy(params, cfg: PolicyConfig, gb: GraphBatch,
 
     def one(pl):
         lg = placer.apply_tf(params["placer"], h, gb.node_mask, pl, c,
-                             gb.mem_frac, gb.comp_frac,
+                             gb.mem_frac, gb.comp_frac, gb.dev_feats,
                              window=cfg.window, heads=cfg.heads,
                              num_devices=num_devices,
                              use_attention=cfg.use_attention)
@@ -96,7 +96,7 @@ def greedy(params, cfg: PolicyConfig, gb: GraphBatch, num_devices: int,
     # temperature ~0: sharpen by scaling head params is intrusive; instead
     # draw K samples and let the caller pick the best via the simulator.
     devs, _ = placer.sample_ar(params["placer"], h, gb.node_mask, c, key,
-                               gb.mem_frac, gb.comp_frac,
+                               gb.mem_frac, gb.comp_frac, gb.dev_feats,
                                window=cfg.window, heads=cfg.heads,
                                num_devices=num_devices,
                                use_attention=cfg.use_attention)

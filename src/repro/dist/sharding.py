@@ -1,0 +1,107 @@
+"""FSDP+TP sharding rules for the dry-run and production launchers.
+
+Shape-driven (no per-layer name table): for every array leaf
+
+* rank >= 2 — tensor-parallel shard the LAST dim on ``model`` and
+  FSDP-shard the FIRST dim on the data axes (``data``, or
+  ``("pod", "data")`` on multi-pod meshes),
+* rank 0/1 — replicate (norm scales, biases, step counters).
+
+Axes that do not divide the mesh extent are dropped automatically
+(``ckpt/elastic.validate_divisibility`` documents this contract), so the
+same rules lower on the 512-device production mesh, the 16-fake-device
+regression mesh, and a 1-device CPU smoke mesh.
+
+Used by ``repro/launch/dryrun.py`` (compile-only sweep) and
+``tests/test_sharding_dryrun.py`` (16-fake-device regression).
+"""
+from __future__ import annotations
+
+from typing import Any, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+
+def _is_shaped(x: Any) -> bool:
+    return hasattr(x, "shape") and hasattr(x, "dtype")
+
+
+def _axes_size(mesh: Mesh, axes: Tuple[str, ...]) -> int:
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _entry(axes: Tuple[str, ...]):
+    return axes[0] if len(axes) == 1 else axes
+
+
+def _leaf_spec(shape: Sequence[int], mesh: Mesh) -> PartitionSpec:
+    """TP on the last dim, FSDP on the first; drop non-divisible axes."""
+    ndim = len(shape)
+    if ndim < 2:
+        return PartitionSpec()
+    spec: list = [None] * ndim
+    if shape[-1] % _axes_size(mesh, ("model",)) == 0:
+        spec[-1] = "model"
+    da = _data_axes(mesh)
+    if shape[0] % _axes_size(mesh, da) == 0 and (ndim > 1 or spec[0] is None):
+        spec[0] = _entry(da)
+    return PartitionSpec(*spec)
+
+
+def _tree_specs(tree: Any, mesh: Mesh, rule) -> Any:
+    return jax.tree_util.tree_map(
+        lambda x: rule(x.shape, mesh) if _is_shaped(x) else PartitionSpec(),
+        tree)
+
+
+def param_specs(params: Any, mesh: Mesh) -> Any:
+    """PartitionSpec per param leaf (same tree structure)."""
+    return _tree_specs(params, mesh, _leaf_spec)
+
+
+def state_specs(state: Any, mesh: Mesh) -> Any:
+    """Train-state specs: optimizer moments inherit their param's layout
+    because the rules are purely shape-driven."""
+    return _tree_specs(state, mesh, _leaf_spec)
+
+
+def _batch_leaf_spec(shape: Sequence[int], mesh: Mesh) -> PartitionSpec:
+    """Shard the first data-divisible axis (batch may sit at axis 1, e.g.
+    M-RoPE position ids [3, B, S])."""
+    da = _data_axes(mesh)
+    size = _axes_size(mesh, da)
+    spec: list = [None] * len(shape)
+    for i, dim in enumerate(shape):
+        if dim % size == 0 and dim > 1:
+            spec[i] = _entry(da)
+            break
+    return PartitionSpec(*spec)
+
+
+def batch_specs(batch: Any, mesh: Mesh) -> Any:
+    return _tree_specs(batch, mesh, _batch_leaf_spec)
+
+
+def to_shardings(specs: Any, mesh: Mesh) -> Any:
+    """PartitionSpec tree -> NamedSharding tree."""
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        specs, is_leaf=lambda x: isinstance(x, PartitionSpec))
+
+
+def with_shardings(shapes: Any, specs: Any, mesh: Mesh) -> Any:
+    """ShapeDtypeStruct tree -> same tree with shardings attached (for
+    ``jax.jit(...).lower`` without allocating)."""
+    return jax.tree_util.tree_map(
+        lambda x, s: jax.ShapeDtypeStruct(
+            x.shape, x.dtype, sharding=NamedSharding(mesh, s))
+        if _is_shaped(x) else x,
+        shapes, specs,
+        is_leaf=lambda x: isinstance(x, PartitionSpec) or not isinstance(
+            x, (dict, list, tuple)))

@@ -47,10 +47,12 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, sm_scale: float,
 
     def body(j, carry):
         acc, m_run, l_run = carry
-        k_blk = pl.load(k_ref, (0, pl.dslice(j * block_k, block_k),
-                                slice(None))).astype(jnp.float32)
-        v_blk = pl.load(v_ref, (0, pl.dslice(j * block_k, block_k),
-                                slice(None))).astype(jnp.float32)
+        # NB: slice-only indexers (pl.dslice, never a bare int) — integer
+        # indexers break interpret-mode state discharge on jax 0.4.3x.
+        k_blk = pl.load(k_ref, (pl.dslice(0, 1), pl.dslice(j * block_k, block_k),
+                                slice(None)))[0].astype(jnp.float32)
+        v_blk = pl.load(v_ref, (pl.dslice(0, 1), pl.dslice(j * block_k, block_k),
+                                slice(None)))[0].astype(jnp.float32)
         s = jax.lax.dot_general(q, k_blk, (((1,), (1,)), ((), ())))  # [bq,bk]
         k_pos = j * block_k + jax.lax.iota(jnp.int32, block_k)
         mask = jnp.ones((bq, block_k), jnp.bool_)

@@ -36,7 +36,7 @@ import numpy as np
 from repro.configs import SHAPES, cell_is_skipped, get_config, list_archs
 from repro.dist import sharding as SH
 from repro.launch import input_specs as IS
-from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.hlo_analysis import analyze_hlo, peak_memory_bytes
 from repro.launch.mesh import make_production_mesh
 from repro.models.model import build_model
 
@@ -134,7 +134,7 @@ def lower_cell(arch: str, shape_name: str, mesh) -> Dict[str, Any]:
             "output": mem.output_size_in_bytes,
             "temp": mem.temp_size_in_bytes,
             "argument": mem.argument_size_in_bytes,
-            "peak": mem.peak_memory_in_bytes,
+            "peak": peak_memory_bytes(mem),
         },
         "hlo_flops": flops,
         "hlo_bytes": hbm_bytes,

@@ -238,3 +238,17 @@ def collective_bytes(hlo: str) -> Tuple[float, Dict[str, float]]:
     """Back-compat wrapper: (total_collective_bytes, kind breakdown)."""
     r = analyze_hlo(hlo)
     return r["collective_bytes"], r["collective_kinds"]
+
+
+def peak_memory_bytes(mem) -> int:
+    """Peak per-device bytes from ``compiled.memory_analysis()``.
+
+    TPU backends expose ``peak_memory_in_bytes``; the CPU backend's
+    ``CompiledMemoryStats`` does not, so fall back to the live-set upper
+    bound arguments + outputs + temps − aliased.
+    """
+    peak = getattr(mem, "peak_memory_in_bytes", None)
+    if peak is not None:
+        return int(peak)
+    return int(mem.argument_size_in_bytes + mem.output_size_in_bytes +
+               mem.temp_size_in_bytes - mem.alias_size_in_bytes)

@@ -1,3 +1,8 @@
-from repro.sim.device import DeviceSpec, Topology, P100, TPU_V5E, p100_topology, tpu_v5e_topology  # noqa: F401
-from repro.sim.cost_model import node_compute_times  # noqa: F401
-from repro.sim.scheduler import SimGraph, prepare_sim_graph, simulate, simulate_batch, reward_from_runtime  # noqa: F401
+from repro.sim.device import (DeviceSpec, Topology, P100, V100, A100,
+                              CPU_HOST, TPU_V5E, p100_topology,
+                              tpu_v5e_topology, nvlink_host_ib_topology,
+                              cpu_gpu_topology, multi_gen_fleet)  # noqa: F401
+from repro.sim.cost_model import node_compute_times, node_compute_matrix  # noqa: F401
+from repro.sim.scheduler import (SimGraph, SimTopology, prepare_sim_graph,
+                                 simulate, simulate_batch,
+                                 reward_from_runtime)  # noqa: F401

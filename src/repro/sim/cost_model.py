@@ -13,7 +13,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.graph import DataflowGraph, OP_TYPES
-from repro.sim.device import DeviceSpec
+from repro.sim.device import DeviceSpec, Topology
 
 # Fraction of peak FLOP/s each op class achieves.
 _EFF = {
@@ -40,3 +40,15 @@ def node_compute_times(g: DataflowGraph, spec: DeviceSpec) -> np.ndarray:
     # parameters/inputs are resident, not executed
     is_static = (g.flops == 0) & (np.isin(g.op_type, [0, 1]))
     return np.where(is_static, 0.0, t)
+
+
+def node_compute_matrix(g: DataflowGraph, topo: Topology) -> np.ndarray:
+    """float64[N, D] seconds: node *i* executed on device *d*.
+
+    Column *d* is exactly :func:`node_compute_times` under ``specs[d]``, so
+    on a uniform pool every column is bit-identical to the historical
+    single-spec vector — the per-(node, device) generalization the
+    heterogeneous scheduler consumes."""
+    if g.num_nodes == 0:
+        return np.zeros((0, topo.num_devices), np.float64)
+    return np.stack([node_compute_times(g, s) for s in topo.specs], axis=1)

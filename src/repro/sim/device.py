@@ -1,43 +1,247 @@
 """Device and interconnect specifications for the execution simulator.
 
-Two device tables ship by default:
+Heterogeneous by construction: a :class:`Topology` holds one
+:class:`DeviceSpec` *per device* (mixed peak FLOP/s, HBM bandwidth and
+memory capacity) plus dense ``[D, D]`` interconnect bandwidth/latency
+matrices, so non-uniform hierarchies — NVLink islands bridged by PCIe with
+inter-host InfiniBand, CPU+GPU mixed pools, multi-generation GPU fleets —
+are first-class.  :meth:`Topology.uniform` reproduces the historical
+homogeneous pool bit-for-bit (same scalar bandwidth/latency applied to
+every pair), which the regression tests in ``tests/test_hetero.py`` pin.
+
+Shipped device tables:
 
 * ``P100``    — matches the paper's evaluation hosts (up to 8 GPUs/host),
   so reproduced step times land in the paper's 0.2–1.0 s regime.
+* ``V100`` / ``A100`` — newer generations for mixed-fleet scenarios.
+* ``CPU_HOST`` — a dual-socket host device for CPU+GPU pools (Mirhoseini
+  et al. 2017 place across exactly such mixtures).
 * ``TPU_V5E`` — the deployment target for the rest of the framework
-  (197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI), used when GDP places
-  jaxpr-extracted graphs for TPU stage assignment.
+  (197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI), used when GDP
+  places jaxpr-extracted graphs for TPU stage assignment.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Sequence, Tuple, Union
+
+import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)
 class DeviceSpec:
     name: str
     peak_flops: float      # FLOP/s at the matmul unit
-    mem_bytes: float       # usable HBM per device
+    mem_bytes: float       # usable HBM (or host DRAM) per device
     hbm_bw: float          # bytes/s
+
+
+P100 = DeviceSpec("p100", peak_flops=9.5e12, mem_bytes=15.0e9, hbm_bw=732e9)
+V100 = DeviceSpec("v100", peak_flops=15.7e12, mem_bytes=32.0e9, hbm_bw=900e9)
+A100 = DeviceSpec("a100", peak_flops=19.5e12, mem_bytes=40.0e9, hbm_bw=1555e9)
+CPU_HOST = DeviceSpec("cpu_host", peak_flops=3.0e12, mem_bytes=256.0e9,
+                      hbm_bw=150e9)
+TPU_V5E = DeviceSpec("tpu_v5e", peak_flops=197e12, mem_bytes=16.0e9,
+                     hbm_bw=819e9)
+
+
+def _finalize_links(bw: np.ndarray, latency: np.ndarray
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+    """Enforce the link-matrix invariant: same-device transfers are free
+    (diag inf bandwidth / zero latency) and matrices are frozen."""
+    bw = np.asarray(bw, np.float64).copy()
+    latency = np.asarray(latency, np.float64).copy()
+    np.fill_diagonal(bw, np.inf)
+    np.fill_diagonal(latency, 0.0)
+    bw.setflags(write=False)
+    latency.setflags(write=False)
+    return bw, latency
 
 
 @dataclasses.dataclass(frozen=True)
 class Topology:
-    """Homogeneous device pool with uniform point-to-point links."""
-    num_devices: int
-    spec: DeviceSpec
-    link_bw: float         # bytes/s per point-to-point link
-    link_latency: float    # seconds per transfer
+    """Device pool with per-device specs and pairwise interconnect.
+
+    ``bw[i, j]`` / ``latency[i, j]`` describe a transfer from device *i*
+    to device *j*; diagonals are ``inf`` bandwidth / zero latency (a
+    same-device "transfer" is free — the schedulers never charge one).
+    Matrices need not be symmetric (e.g. host→device DMA asymmetries).
+    """
+    specs: Tuple[DeviceSpec, ...]
+    bw: np.ndarray         # f64[D, D] bytes/s
+    latency: np.ndarray    # f64[D, D] seconds
+
+    def __post_init__(self):
+        d = len(self.specs)
+        assert self.bw.shape == (d, d), (self.bw.shape, d)
+        assert self.latency.shape == (d, d), (self.latency.shape, d)
+
+    # ------------------------------------------------------------ views
+    @property
+    def num_devices(self) -> int:
+        return len(self.specs)
+
+    @property
+    def is_uniform(self) -> bool:
+        """One spec and one off-diagonal bandwidth/latency for all pairs."""
+        d = self.num_devices
+        if any(s != self.specs[0] for s in self.specs):
+            return False
+        if d < 2:
+            return True
+        off = ~np.eye(d, dtype=bool)
+        return (np.unique(self.bw[off]).size == 1 and
+                np.unique(self.latency[off]).size == 1)
+
+    @property
+    def spec(self) -> DeviceSpec:
+        """Representative spec — only meaningful for uniform pools."""
+        if any(s != self.specs[0] for s in self.specs):
+            raise ValueError(
+                "Topology.spec is undefined for heterogeneous pools; use "
+                ".specs / .mem_caps / .peak_flops instead")
+        return self.specs[0]
+
+    @property
+    def link_bw(self) -> float:
+        """Uniform off-diagonal bandwidth — raises on non-uniform links."""
+        d = self.num_devices
+        if d < 2:
+            return float("inf")
+        vals = np.unique(self.bw[~np.eye(d, dtype=bool)])
+        if vals.size != 1:
+            raise ValueError("link_bw is undefined for non-uniform links; "
+                             "use .bw[i, j]")
+        return float(vals[0])
+
+    @property
+    def link_latency(self) -> float:
+        """Uniform off-diagonal latency — raises on non-uniform links."""
+        d = self.num_devices
+        if d < 2:
+            return 0.0
+        vals = np.unique(self.latency[~np.eye(d, dtype=bool)])
+        if vals.size != 1:
+            raise ValueError("link_latency is undefined for non-uniform "
+                             "links; use .latency[i, j]")
+        return float(vals[0])
+
+    @property
+    def mem_caps(self) -> np.ndarray:
+        return np.array([s.mem_bytes for s in self.specs], np.float64)
+
+    @property
+    def peak_flops(self) -> np.ndarray:
+        return np.array([s.peak_flops for s in self.specs], np.float64)
+
+    @property
+    def hbm_bw(self) -> np.ndarray:
+        return np.array([s.hbm_bw for s in self.specs], np.float64)
+
+    # ----------------------------------------------------- constructors
+    @classmethod
+    def uniform(cls, num_devices: int, spec: DeviceSpec, *, link_bw: float,
+                link_latency: float) -> "Topology":
+        """Homogeneous pool — bit-for-bit the historical scalar Topology."""
+        d = num_devices
+        bw, lat = _finalize_links(np.full((d, d), link_bw),
+                                  np.full((d, d), link_latency))
+        return cls(specs=(spec,) * d, bw=bw, latency=lat)
+
+    @classmethod
+    def from_groups(cls, groups: Sequence[Tuple[DeviceSpec, int]], *,
+                    intra_bw: float, intra_latency: float, inter_bw: float,
+                    inter_latency: float) -> "Topology":
+        """Islands of identical devices: fast links inside each group,
+        slower links between groups (the generic mixed-pool builder)."""
+        specs: list = []
+        gid: list = []
+        for i, (spec, count) in enumerate(groups):
+            specs.extend([spec] * count)
+            gid.extend([i] * count)
+        g = np.asarray(gid)
+        same = g[:, None] == g[None, :]
+        bw, lat = _finalize_links(np.where(same, intra_bw, inter_bw),
+                                  np.where(same, intra_latency, inter_latency))
+        return cls(specs=tuple(specs), bw=bw, latency=lat)
+
+    # ------------------------------------------------------- modifiers
+    def with_mem_caps(self, caps: Union[float, Sequence[float]]) -> "Topology":
+        """Replace per-device memory caps (scalar broadcasts to all).
+
+        This is how benchmarks tighten memory to the paper's constrained
+        regime; on a uniform pool it preserves uniformity (and therefore
+        bit-identical makespans for a given cap)."""
+        d = self.num_devices
+        caps_arr = np.broadcast_to(np.asarray(caps, np.float64), (d,))
+        specs = tuple(dataclasses.replace(s, mem_bytes=float(c))
+                      for s, c in zip(self.specs, caps_arr))
+        return dataclasses.replace(self, specs=specs)
+
+    def tightened(self, total_bytes: float, slack: float = 1.8,
+                  floor_frac: float = 1.4) -> "Topology":
+        """Tighten caps to the paper's memory-constrained regime.
+
+        Scales per-device caps proportionally so they sum to
+        ``slack * total_bytes``, then floors every device at
+        ``floor_frac / D`` of the graph so topology-blind baselines stay
+        *feasible* and lose on speed rather than on OOM (the regime the
+        heterogeneous benchmarks and examples share)."""
+        caps = self.mem_caps * (total_bytes * slack / self.mem_caps.sum())
+        caps = np.maximum(caps, total_bytes * floor_frac / self.num_devices)
+        return self.with_mem_caps(caps)
 
 
-P100 = DeviceSpec("p100", peak_flops=9.5e12, mem_bytes=15.0e9, hbm_bw=732e9)
-TPU_V5E = DeviceSpec("tpu_v5e", peak_flops=197e12, mem_bytes=16.0e9, hbm_bw=819e9)
-
-
+# ------------------------------------------------------- named topologies
 def p100_topology(num_devices: int) -> Topology:
     # NVLink-class intra-host links.
-    return Topology(num_devices, P100, link_bw=20e9, link_latency=5e-6)
+    return Topology.uniform(num_devices, P100, link_bw=20e9, link_latency=5e-6)
 
 
 def tpu_v5e_topology(num_devices: int) -> Topology:
-    return Topology(num_devices, TPU_V5E, link_bw=50e9, link_latency=1e-6)
+    return Topology.uniform(num_devices, TPU_V5E, link_bw=50e9,
+                            link_latency=1e-6)
+
+
+def nvlink_host_ib_topology(num_hosts: int = 2, gpus_per_host: int = 8,
+                            spec: DeviceSpec = A100, island: int = 4, *,
+                            nvlink_bw: float = 300e9, pcie_bw: float = 16e9,
+                            ib_bw: float = 12.5e9, nvlink_latency: float = 2e-6,
+                            pcie_latency: float = 5e-6,
+                            ib_latency: float = 10e-6) -> Topology:
+    """NVLink islands of ``island`` GPUs, PCIe host bridge between islands
+    on one host, InfiniBand between hosts (Placeto-style hierarchy)."""
+    d = num_hosts * gpus_per_host
+    host = np.repeat(np.arange(num_hosts), gpus_per_host)
+    isl = np.arange(d) // island
+    bw = np.where(host[:, None] == host[None, :], pcie_bw, ib_bw)
+    lat = np.where(host[:, None] == host[None, :], pcie_latency, ib_latency)
+    same_isl = isl[:, None] == isl[None, :]
+    bw, lat = _finalize_links(np.where(same_isl, nvlink_bw, bw),
+                              np.where(same_isl, nvlink_latency, lat))
+    return Topology(specs=(spec,) * d, bw=bw, latency=lat)
+
+
+def cpu_gpu_topology(num_gpus: int = 4, num_cpus: int = 1,
+                     gpu_spec: DeviceSpec = P100,
+                     cpu_spec: DeviceSpec = CPU_HOST, *,
+                     nvlink_bw: float = 20e9, pcie_bw: float = 12e9,
+                     nvlink_latency: float = 5e-6,
+                     pcie_latency: float = 8e-6) -> Topology:
+    """Mixed CPU+GPU pool: GPUs peer over NVLink, CPU reached via PCIe
+    (the Mirhoseini et al. 2017 placement setting)."""
+    return Topology.from_groups(
+        [(gpu_spec, num_gpus), (cpu_spec, num_cpus)],
+        intra_bw=nvlink_bw, intra_latency=nvlink_latency,
+        inter_bw=pcie_bw, inter_latency=pcie_latency)
+
+
+def multi_gen_fleet(groups: Sequence[Tuple[DeviceSpec, int]] = (
+        (A100, 2), (P100, 2)), *,
+        nvlink_bw: float = 100e9, pcie_bw: float = 12e9,
+        nvlink_latency: float = 3e-6, pcie_latency: float = 6e-6) -> Topology:
+    """Multi-generation GPU fleet: each generation is an NVLink island,
+    generations bridged over PCIe (default: 2 fast A100 + 2 slow P100)."""
+    return Topology.from_groups(
+        list(groups), intra_bw=nvlink_bw, intra_latency=nvlink_latency,
+        inter_bw=pcie_bw, inter_latency=pcie_latency)

@@ -2,8 +2,11 @@
 
 Semantics identical to :func:`repro.sim.scheduler.simulate`; written
 independently with explicit loops so the jitted version is checked against
-it, plus an optional sender-port serialization mode used to quantify how
-much link contention shifts makespans (reported in EXPERIMENTS.md).
+it — including the heterogeneous path: per-(node, device) compute times,
+``[D, D]`` link bandwidth/latency gathered per edge endpoint pair, and
+per-device memory caps.  An optional sender-port serialization mode is
+used to quantify how much link contention shifts makespans (reported in
+EXPERIMENTS.md).
 """
 from __future__ import annotations
 
@@ -12,20 +15,23 @@ from typing import Tuple
 import numpy as np
 
 from repro.core.graph import DataflowGraph
-from repro.sim.cost_model import node_compute_times
+from repro.sim.cost_model import node_compute_matrix
 from repro.sim.device import Topology
 
 
 def simulate_ref(g: DataflowGraph, placement: np.ndarray, topo: Topology,
                  max_deg: int = 16, sender_contention: bool = False
                  ) -> Tuple[float, float, bool]:
+    """Returns (makespan_s, mem_util, valid) — see scheduler.simulate."""
     n = g.num_nodes
-    ct = node_compute_times(g, topo.spec)
+    ct = node_compute_matrix(g, topo)                 # [N, D]
     idx, mask = g.in_neighbors_padded(max_deg)
     finish = np.zeros(n)
     dev_free = np.zeros(topo.num_devices)
     send_free = np.zeros(topo.num_devices)
-    inv_bw = 1.0 / topo.link_bw
+    with np.errstate(divide="ignore"):
+        inv_bw = 1.0 / topo.bw                        # [D, D], diag 0 (inf bw)
+    lat = topo.latency
     p = placement.astype(np.int64)
     for v in range(n):
         ready = 0.0
@@ -35,18 +41,20 @@ def simulate_ref(g: DataflowGraph, placement: np.ndarray, topo: Topology,
             u = int(idx[v, kk])
             t = finish[u]
             if p[u] != p[v]:
-                dur = g.out_bytes[u] * inv_bw
+                dur = g.out_bytes[u] * inv_bw[p[u], p[v]]
                 if sender_contention:
                     start = max(t, send_free[p[u]])
                     send_free[p[u]] = start + dur
-                    t = start + topo.link_latency + dur
+                    t = start + lat[p[u], p[v]] + dur
                 else:
-                    t = t + topo.link_latency + dur
+                    t = t + lat[p[u], p[v]] + dur
             ready = max(ready, t)
         start = max(ready, dev_free[p[v]])
-        finish[v] = start + ct[v]
+        finish[v] = start + ct[v, p[v]]
         dev_free[p[v]] = finish[v]
     mem = np.zeros(topo.num_devices)
     np.add.at(mem, p, g.mem_bytes)
-    peak = float(mem.max()) if n else 0.0
-    return float(finish.max() if n else 0.0), peak, bool(peak <= topo.spec.mem_bytes)
+    caps = topo.mem_caps
+    util = float((mem / caps).max()) if n else 0.0
+    valid = bool(np.all(mem <= caps))
+    return float(finish.max() if n else 0.0), util, valid

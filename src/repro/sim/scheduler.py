@@ -3,9 +3,17 @@
 This is the RL environment.  Nodes are visited in topological order inside a
 ``lax.fori_loop``; each node's ready time is the max over its (padded)
 in-edges of producer finish time plus a cross-device transfer cost, and each
-device executes its ops in arrival order (``dev_free``).  Per-device memory
-is the sum of resident bytes of the ops placed there; exceeding capacity
-makes the placement invalid (paper: reward −10).
+device executes its ops in arrival order (``dev_free``).
+
+Heterogeneity is native: compute times are a per-(node, device) matrix
+(mixed device generations run the same op at different speeds), transfers
+are charged through ``[D, D]`` bandwidth/latency matrices gathered per
+edge endpoint pair, and memory validity is per-device (each device has its
+own capacity).  A uniform :class:`~repro.sim.device.Topology` collapses to
+the historical homogeneous semantics bit-for-bit (pinned by
+``tests/test_hetero.py``).  Per-device memory is the sum of resident bytes
+of the ops placed there; exceeding any device's capacity makes the
+placement invalid (paper: reward −10).
 
 A pure-numpy reference with identical semantics lives in
 ``repro/sim/reference.py`` and anchors the property tests.
@@ -13,6 +21,7 @@ A pure-numpy reference with identical semantics lives in
 from __future__ import annotations
 
 import dataclasses
+from functools import cached_property
 from typing import NamedTuple, Optional, Tuple
 
 import jax
@@ -20,15 +29,31 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.graph import DataflowGraph
-from repro.sim.cost_model import node_compute_times
+from repro.sim.cost_model import node_compute_matrix
 from repro.sim.device import Topology
 
 INVALID_REWARD = -10.0
 
 
+class SimTopology(NamedTuple):
+    """Device-side arrays of a Topology, ready for the jitted scheduler."""
+    num_devices: int         # static python int
+    inv_bw: jnp.ndarray      # f32[D, D] reciprocal bandwidth (diag 0)
+    latency: jnp.ndarray     # f32[D, D] seconds (diag 0)
+    mem_caps: jnp.ndarray    # f32[D] per-device capacity bytes
+
+    @classmethod
+    def from_topology(cls, topo: Topology) -> "SimTopology":
+        with np.errstate(divide="ignore"):
+            inv_bw = (1.0 / topo.bw).astype(np.float32)
+        return cls(topo.num_devices, jnp.asarray(inv_bw),
+                   jnp.asarray(topo.latency.astype(np.float32)),
+                   jnp.asarray(topo.mem_caps.astype(np.float32)))
+
+
 class SimGraph(NamedTuple):
     """Device-ready padded arrays for one dataflow graph."""
-    compute_t: jnp.ndarray   # f32[N]    per-node seconds
+    compute_t: jnp.ndarray   # f32[N, D]  per-(node, device) seconds
     out_bytes: jnp.ndarray   # f32[N]    producer output bytes
     mem_bytes: jnp.ndarray   # f32[N]
     in_idx: jnp.ndarray      # i32[N, K] padded with N (sentinel)
@@ -39,13 +64,14 @@ class SimGraph(NamedTuple):
 def prepare_sim_graph(g: DataflowGraph, topo: Topology, max_deg: int = 16,
                       pad_to: Optional[int] = None) -> SimGraph:
     n = g.num_nodes
+    d = topo.num_devices
     pad_n = pad_to or n
     assert pad_n >= n
-    ct = node_compute_times(g, topo.spec).astype(np.float32)
+    ct = node_compute_matrix(g, topo).astype(np.float32)
     idx, mask = g.in_neighbors_padded(max_deg)
     k = idx.shape[1]
 
-    compute_t = np.zeros(pad_n, np.float32)
+    compute_t = np.zeros((pad_n, d), np.float32)
     compute_t[:n] = ct
     out_b = np.zeros(pad_n, np.float32)
     out_b[:n] = g.out_bytes
@@ -61,16 +87,16 @@ def prepare_sim_graph(g: DataflowGraph, topo: Topology, max_deg: int = 16,
                     jnp.asarray(in_idx), jnp.asarray(in_mask), jnp.asarray(node_mask))
 
 
-def simulate(sg: SimGraph, placement: jnp.ndarray, *, num_devices: int,
-             link_bw: float, link_latency: float, mem_cap: float
+def simulate(sg: SimGraph, placement: jnp.ndarray, st: SimTopology
              ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Returns (makespan_s, peak_mem_bytes, valid).
+    """Returns (makespan_s, mem_util, valid).
 
-    ``placement``: int32[N] in [0, num_devices).  Padded nodes contribute
-    zero compute/memory so their placement is irrelevant.
+    ``placement``: int32[N] in [0, st.num_devices).  Padded nodes
+    contribute zero compute/memory so their placement is irrelevant.
+    ``mem_util`` is max over devices of resident bytes / capacity; a
+    placement is valid iff every device stays within its own cap.
     """
     n = sg.compute_t.shape[0]
-    inv_bw = 1.0 / link_bw
     p = placement.astype(jnp.int32)
     p_pad = jnp.concatenate([p, jnp.array([0], jnp.int32)])  # sentinel slot
     out_b_pad = jnp.concatenate([sg.out_bytes, jnp.zeros(1, jnp.float32)])
@@ -79,29 +105,31 @@ def simulate(sg: SimGraph, placement: jnp.ndarray, *, num_devices: int,
     # per-edge communication cost out of the sequential scan (the loop body
     # is dispatch-overhead-bound on CPU; fewer ops per step ≈ 2-3x faster).
     pd = p_pad[sg.in_idx]                                        # [N, K]
-    cross = (pd != p[:, None]).astype(jnp.float32) * sg.in_mask
-    comm = cross * (link_latency + out_b_pad[sg.in_idx] * inv_bw)  # [N, K]
+    pv_col = p[:, None]
+    cross = (pd != pv_col).astype(jnp.float32) * sg.in_mask
+    comm = cross * (st.latency[pd, pv_col] +
+                    out_b_pad[sg.in_idx] * st.inv_bw[pd, pv_col])  # [N, K]
     # effective compute including the dev_free update guard
-    ct_eff = sg.compute_t * sg.node_mask
+    ct_eff = sg.compute_t * sg.node_mask[:, None]                # [N, D]
 
     def body(v, state):
         finish, dev_free = state
         ready = jnp.max(sg.in_mask[v] * finish[sg.in_idx[v]] + comm[v],
                         initial=0.0)
         pv = p[v]
-        fin = jnp.maximum(ready, dev_free[pv]) + ct_eff[v]
+        fin = jnp.maximum(ready, dev_free[pv]) + ct_eff[v, pv]
         return finish.at[v].set(fin), dev_free.at[pv].set(fin)
 
     finish0 = jnp.zeros(n + 1, jnp.float32)   # sentinel row stays 0
-    dev_free0 = jnp.zeros(num_devices, jnp.float32)
+    dev_free0 = jnp.zeros(st.num_devices, jnp.float32)
     finish, _ = jax.lax.fori_loop(0, n, body, (finish0, dev_free0))
     makespan = jnp.max(finish[:n] * sg.node_mask)
 
     mem_used = jax.ops.segment_sum(sg.mem_bytes * sg.node_mask, p,
-                                   num_segments=num_devices)
-    peak = jnp.max(mem_used)
-    valid = peak <= mem_cap
-    return makespan, peak, valid
+                                   num_segments=st.num_devices)
+    util = jnp.max(mem_used / st.mem_caps)
+    valid = jnp.all(mem_used <= st.mem_caps)
+    return makespan, util, valid
 
 
 def reward_from_runtime(makespan: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
@@ -110,31 +138,29 @@ def reward_from_runtime(makespan: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarra
                      jnp.float32(INVALID_REWARD))
 
 
-def reward_shaped(makespan: jnp.ndarray, peak: jnp.ndarray,
-                  mem_cap: float, penalty: float = 5.0) -> jnp.ndarray:
+def reward_shaped(makespan: jnp.ndarray, mem_util: jnp.ndarray,
+                  penalty: float = 5.0) -> jnp.ndarray:
     """Beyond-paper: continuous memory penalty instead of the −10 cliff.
 
-    r = −sqrt(runtime) − penalty·max(0, peak/cap − 1), floored at −10.
-    The flat −10 gives no gradient *toward* validity; the shaped form does,
-    which matters at CPU-scale trial budgets (EXPERIMENTS.md §Perf notes).
-    Valid placements score identically to the paper reward.
+    r = −sqrt(runtime) − penalty·max(0, util − 1), floored at −10, where
+    util is the worst per-device capacity utilization.  The flat −10 gives
+    no gradient *toward* validity; the shaped form does, which matters at
+    CPU-scale trial budgets (EXPERIMENTS.md §Perf notes).  Valid placements
+    score identically to the paper reward.
     """
     r = -jnp.sqrt(jnp.maximum(makespan, 1e-9)) - \
-        penalty * jnp.maximum(peak / mem_cap - 1.0, 0.0)
+        penalty * jnp.maximum(mem_util - 1.0, 0.0)
     return jnp.maximum(r, jnp.float32(INVALID_REWARD))
 
 
-def simulate_batch(sg: SimGraph, placements: jnp.ndarray, *, num_devices: int,
-                   link_bw: float, link_latency: float, mem_cap: float,
+def simulate_batch(sg: SimGraph, placements: jnp.ndarray, st: SimTopology,
                    shaped: bool = False
                    ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """vmap over M placements: returns (makespan[M], reward[M], valid[M])."""
-    fn = jax.vmap(lambda pl: simulate(sg, pl, num_devices=num_devices,
-                                      link_bw=link_bw, link_latency=link_latency,
-                                      mem_cap=mem_cap))
-    makespan, peak, valid = fn(placements)
+    fn = jax.vmap(lambda pl: simulate(sg, pl, st))
+    makespan, util, valid = fn(placements)
     if shaped:
-        return makespan, reward_shaped(makespan, peak, mem_cap), valid
+        return makespan, reward_shaped(makespan, util), valid
     return makespan, reward_from_runtime(makespan, valid), valid
 
 
@@ -145,8 +171,10 @@ class Env:
     topo: Topology
     shaped_reward: bool = False
 
+    @cached_property
+    def sim_topology(self) -> SimTopology:
+        return SimTopology.from_topology(self.topo)
+
     def rewards(self, placements: jnp.ndarray):
-        return simulate_batch(
-            self.sg, placements, num_devices=self.topo.num_devices,
-            link_bw=self.topo.link_bw, link_latency=self.topo.link_latency,
-            mem_cap=self.topo.spec.mem_bytes, shaped=self.shaped_reward)
+        return simulate_batch(self.sg, placements, self.sim_topology,
+                              shaped=self.shaped_reward)

@@ -1,6 +1,4 @@
 """Placement baselines: validity and qualitative ordering."""
-import dataclasses
-
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -15,16 +13,14 @@ from repro.sim.scheduler import Env
 @pytest.fixture(scope="module")
 def env4():
     g = S.gnmt(2, time_steps=6)
-    topo = p100_topology(4)
-    cap = g.total_mem() / 4 * 1.8
-    topo = dataclasses.replace(
-        topo, spec=dataclasses.replace(topo.spec, mem_bytes=cap))
+    topo = p100_topology(4).with_mem_caps(g.total_mem() / 4 * 1.8)
     return g, topo, Env(prepare_sim_graph(g, topo, max_deg=16), topo)
 
 
 def test_all_baselines_in_range(env4):
     g, topo, env = env4
-    for fn in (B.human_expert, B.metis_like, B.random_placement):
+    for fn in (B.human_expert, B.metis_like, B.random_placement,
+               B.round_robin):
         p = fn(g, topo)
         assert p.shape == (g.num_nodes,)
         assert p.min() >= 0 and p.max() < 4

@@ -1,0 +1,168 @@
+"""Heterogeneous topologies: jit/reference agreement, uniform bit-identity.
+
+Three guards:
+
+* property test — the jitted scheduler and the numpy oracle agree on
+  RANDOM heterogeneous topologies (random per-device specs, random
+  asymmetric bandwidth/latency matrices, random per-device caps),
+* regression — ``Topology.uniform`` reproduces the seed's homogeneous
+  makespans EXACTLY (golden float32 values captured from the pre-refactor
+  scalar simulator),
+* behavior — on a mixed-speed fleet the speed-aware expert beats the
+  topology-blind round-robin, and fast devices get more work.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import baselines as B
+from repro.core.featurize import NUM_DEVICE_FEATURES, device_features, featurize
+from repro.graphs import synthetic as S
+from repro.sim import (A100, P100, DeviceSpec, Topology, cpu_gpu_topology,
+                       multi_gen_fleet, nvlink_host_ib_topology,
+                       p100_topology, prepare_sim_graph, simulate,
+                       tpu_v5e_topology)
+from repro.sim.reference import simulate_ref
+from repro.sim.scheduler import Env, SimTopology
+
+
+def _random_hetero_topology(rng: np.random.RandomState, d: int) -> Topology:
+    specs = tuple(
+        DeviceSpec(f"dev{i}",
+                   peak_flops=float(rng.uniform(2e12, 200e12)),
+                   mem_bytes=float(rng.uniform(8e9, 64e9)),
+                   hbm_bw=float(rng.uniform(100e9, 1500e9)))
+        for i in range(d))
+    bw = rng.uniform(5e9, 300e9, (d, d))
+    lat = rng.uniform(1e-6, 2e-5, (d, d))
+    np.fill_diagonal(bw, np.inf)
+    np.fill_diagonal(lat, 0.0)
+    return Topology(specs=specs, bw=bw, latency=lat)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10 ** 6), st.integers(2, 6))
+def test_jit_matches_reference_on_random_hetero_topologies(seed, d):
+    g = S.rnnlm(2, time_steps=3)
+    rng = np.random.RandomState(seed)
+    topo = _random_hetero_topology(rng, d)
+    sg = prepare_sim_graph(g, topo, max_deg=16)
+    p = rng.randint(0, d, g.num_nodes).astype(np.int32)
+    mk, util, valid = simulate(sg, jnp.asarray(p),
+                               SimTopology.from_topology(topo))
+    mk_ref, util_ref, valid_ref = simulate_ref(g, p, topo)
+    assert np.isclose(float(mk), mk_ref, rtol=1e-4)
+    assert np.isclose(float(util), util_ref, rtol=1e-4)
+    assert bool(valid) == valid_ref
+
+
+# Golden float32 makespans captured from the seed scalar simulator
+# (commit 6f2e2a4) for random and human-expert placements: the uniform
+# constructor must reproduce the homogeneous pipeline bit-for-bit.
+_GOLDEN = {
+    ("rnnlm2", 0): 0.01842707209289074,
+    ("rnnlm2", 1): 0.020405247807502747,
+    ("rnnlm2", "hp"): 0.010003476403653622,
+    ("txl2", 0): 0.6226124167442322,
+    ("txl2", 1): 0.6110118627548218,
+    ("txl2", "hp"): 0.21069912612438202,
+    ("incep", 0): 0.085568368434906,
+    ("incep", 1): 0.07204551249742508,
+    ("incep", "hp"): 0.029290495440363884,
+}
+
+
+def _golden_cases():
+    return [("rnnlm2", S.rnnlm(2, time_steps=4), p100_topology(4)),
+            ("txl2", S.transformer_xl(2, segments=2), p100_topology(4)),
+            ("incep", S.inception(modules=3), tpu_v5e_topology(4))]
+
+
+@pytest.mark.parametrize("case", _golden_cases(), ids=lambda c: c[0])
+def test_uniform_reproduces_seed_makespans_exactly(case):
+    name, g, topo = case
+    sg = prepare_sim_graph(g, topo, max_deg=16)
+    stopo = SimTopology.from_topology(topo)
+    for key in (0, 1, "hp"):
+        if key == "hp":
+            p = B.human_expert(g, topo)
+        else:
+            p = np.random.RandomState(key).randint(
+                0, 4, g.num_nodes).astype(np.int32)
+        mk, _, valid = simulate(sg, jnp.asarray(p), stopo)
+        assert float(mk) == _GOLDEN[(name, key)], (name, key)
+        assert bool(valid)
+
+
+def test_uniform_flag_and_scalar_views():
+    topo = p100_topology(4)
+    assert topo.is_uniform
+    assert topo.link_bw == 20e9 and topo.link_latency == 5e-6
+    assert topo.spec.name == "p100"
+    het = multi_gen_fleet(((A100, 2), (P100, 2)))
+    assert not het.is_uniform
+    with pytest.raises(ValueError):
+        _ = het.spec
+    with pytest.raises(ValueError):
+        _ = het.link_bw
+
+
+def test_hierarchy_constructors_shapes():
+    t = nvlink_host_ib_topology(num_hosts=2, gpus_per_host=4, island=2)
+    assert t.num_devices == 8
+    # NVLink island > PCIe same-host > IB cross-host
+    assert t.bw[0, 1] > t.bw[0, 2] > t.bw[0, 4]
+    c = cpu_gpu_topology(num_gpus=3, num_cpus=1)
+    assert c.specs[-1].name == "cpu_host"
+    assert c.bw[0, 1] > c.bw[0, 3]       # GPU peer > PCIe to the CPU
+
+
+def test_device_feature_table():
+    het = multi_gen_fleet(((A100, 2), (P100, 2)))
+    f = device_features(het)
+    assert f.shape == (4, NUM_DEVICE_FEATURES)
+    assert np.all(f[0] == f[1]) and np.all(f[2] == f[3])
+    assert f[0, 0] == 1.0 and f[2, 0] < 1.0      # A100 is the flops leader
+    uni = p100_topology(4)
+    fu = device_features(uni)
+    assert np.allclose(fu, fu[0])                 # identical rows
+    gb = featurize(S.rnnlm(2, time_steps=3), max_deg=8, topo=het)
+    assert gb.dev_feats.shape == (4, NUM_DEVICE_FEATURES)
+
+
+def test_speed_aware_expert_beats_round_robin_on_mixed_fleet():
+    g = S.transformer_xl(2, segments=2)
+    topo = multi_gen_fleet(((A100, 2), (P100, 2)))
+    env = Env(prepare_sim_graph(g, topo, max_deg=16), topo)
+    hp = B.human_expert(g, topo)
+    rr = B.round_robin(g, topo)
+    mk_hp, _, ok_hp = env.rewards(jnp.asarray(hp)[None])
+    mk_rr, _, ok_rr = env.rewards(jnp.asarray(rr)[None])
+    assert bool(ok_hp[0]) and bool(ok_rr[0])
+    assert float(mk_hp[0]) < float(mk_rr[0])
+    # throughput-proportional split: the fast A100 island gets more nodes
+    from repro.sim.cost_model import node_compute_matrix
+    ct = node_compute_matrix(g, topo).min(axis=1)
+    fast = ct[np.isin(hp, [0, 1])].sum()
+    slow = ct[np.isin(hp, [2, 3])].sum()
+    assert fast > slow
+
+
+def test_per_device_memory_caps_enforced():
+    """A placement overflowing only the small device is invalid even though
+    total memory fits the pool."""
+    g = S.rnnlm(2, time_steps=3)
+    total = g.total_mem()
+    big = DeviceSpec("big", 10e12, mem_bytes=4 * total, hbm_bw=700e9)
+    small = DeviceSpec("small", 10e12, mem_bytes=total / 100, hbm_bw=700e9)
+    topo = Topology.from_groups([(big, 1), (small, 1)], intra_bw=20e9,
+                                intra_latency=5e-6, inter_bw=20e9,
+                                inter_latency=5e-6)
+    env = Env(prepare_sim_graph(g, topo, max_deg=16), topo)
+    all_small = jnp.ones((1, g.num_nodes), jnp.int32)
+    all_big = jnp.zeros((1, g.num_nodes), jnp.int32)
+    _, _, v_small = env.rewards(all_small)
+    _, _, v_big = env.rewards(all_big)
+    assert not bool(v_small[0])
+    assert bool(v_big[0])

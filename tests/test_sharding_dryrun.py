@@ -35,8 +35,8 @@ with mesh:
         SH.with_shardings(state_sh, st, mesh),
         SH.with_shardings(batch_sh, bt, mesh))
     compiled = lowered.compile()
-mem = compiled.memory_analysis()
-print("PEAK", mem.peak_memory_in_bytes)
+from repro.launch.hlo_analysis import peak_memory_bytes
+print("PEAK", peak_memory_bytes(compiled.memory_analysis()))
 from repro.launch.hlo_analysis import analyze_hlo
 r = analyze_hlo(compiled.as_text())
 print("COLL", r["collective_bytes"])

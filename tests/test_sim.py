@@ -1,6 +1,4 @@
 """Simulator: jitted scheduler vs pure-numpy oracle + reward semantics."""
-import dataclasses
-
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -10,15 +8,14 @@ from repro.core import baselines as B
 from repro.graphs import synthetic as S
 from repro.sim import p100_topology, prepare_sim_graph, simulate
 from repro.sim.reference import simulate_ref
-from repro.sim.scheduler import Env, reward_from_runtime, reward_shaped
+from repro.sim.scheduler import (Env, SimTopology, reward_from_runtime,
+                                 reward_shaped)
 
 
 def _env(g, d=4, tighten=None):
     topo = p100_topology(d)
     if tighten:
-        cap = g.total_mem() / d * tighten
-        topo = dataclasses.replace(
-            topo, spec=dataclasses.replace(topo.spec, mem_bytes=cap))
+        topo = topo.with_mem_caps(g.total_mem() / d * tighten)
     sg = prepare_sim_graph(g, topo, max_deg=16)
     return sg, topo
 
@@ -33,13 +30,11 @@ def test_jit_matches_reference(g, seed):
     sg, topo = _env(g)
     rng = np.random.RandomState(seed)
     p = rng.randint(0, 4, g.num_nodes).astype(np.int32)
-    mk, peak, valid = simulate(sg, jnp.asarray(p), num_devices=4,
-                               link_bw=topo.link_bw,
-                               link_latency=topo.link_latency,
-                               mem_cap=topo.spec.mem_bytes)
-    mk_ref, peak_ref, valid_ref = simulate_ref(g, p, topo)
+    mk, util, valid = simulate(sg, jnp.asarray(p),
+                               SimTopology.from_topology(topo))
+    mk_ref, util_ref, valid_ref = simulate_ref(g, p, topo)
     assert np.isclose(float(mk), mk_ref, rtol=1e-4)
-    assert np.isclose(float(peak), peak_ref, rtol=1e-5)
+    assert np.isclose(float(util), util_ref, rtol=1e-5)
     assert bool(valid) == valid_ref
 
 
@@ -50,10 +45,7 @@ def test_jit_matches_reference_random_placements(seed):
     sg, topo = _env(g, d=3)
     rng = np.random.RandomState(seed)
     p = rng.randint(0, 3, g.num_nodes).astype(np.int32)
-    mk, _, _ = simulate(sg, jnp.asarray(p), num_devices=3,
-                        link_bw=topo.link_bw,
-                        link_latency=topo.link_latency,
-                        mem_cap=topo.spec.mem_bytes)
+    mk, _, _ = simulate(sg, jnp.asarray(p), SimTopology.from_topology(topo))
     mk_ref, _, _ = simulate_ref(g, p, topo, max_deg=16)
     assert np.isclose(float(mk), mk_ref, rtol=1e-4)
 
@@ -64,9 +56,8 @@ def test_single_device_no_comm_cost():
     sg, topo = _env(g, d=2)
     from repro.sim.cost_model import node_compute_times
     ct = node_compute_times(g, topo.spec)
-    mk, _, _ = simulate(sg, jnp.zeros(g.num_nodes, jnp.int32), num_devices=2,
-                        link_bw=topo.link_bw, link_latency=topo.link_latency,
-                        mem_cap=topo.spec.mem_bytes)
+    mk, _, _ = simulate(sg, jnp.zeros(g.num_nodes, jnp.int32),
+                        SimTopology.from_topology(topo))
     assert np.isclose(float(mk), ct.sum(), rtol=1e-4)
 
 
@@ -86,8 +77,8 @@ def test_memory_validity_and_rewards():
 
 def test_shaped_reward_continuity():
     mk = jnp.asarray([1.0, 1.0])
-    peak = jnp.asarray([0.9e9, 1.1e9])
-    r = reward_shaped(mk, peak, 1e9)
+    util = jnp.asarray([0.9, 1.1])
+    r = reward_shaped(mk, util)
     assert float(r[0]) == pytest.approx(-1.0)
     assert float(r[1]) < -1.0            # penalized but not cliff -10
     assert float(r[1]) > -10.0

@@ -1,8 +1,6 @@
 """End-to-end system behaviour: GDP search loop improves placements and the
 whole pipeline (graph -> featurize -> policy -> simulator -> PPO -> export)
 holds together."""
-import dataclasses
-
 import jax.numpy as jnp
 import numpy as np
 
@@ -22,10 +20,7 @@ PPO = PPOConfig(num_samples=16, lr=2e-3, epochs=2, canonicalize=True,
 
 
 def _task(g, d=2, tighten=1.8):
-    topo = p100_topology(d)
-    cap = g.total_mem() / d * tighten
-    topo = dataclasses.replace(
-        topo, spec=dataclasses.replace(topo.spec, mem_bytes=cap))
+    topo = p100_topology(d).with_mem_caps(g.total_mem() / d * tighten)
     sg = prepare_sim_graph(g, topo, max_deg=16)
     return topo, Env(sg, topo, shaped_reward=True), Env(sg, topo), \
         featurize(g, max_deg=8, topo=topo)
