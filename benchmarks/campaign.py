@@ -43,6 +43,11 @@ def main():
     cached["hetero"] = hetero.run(iterations=max(args.iters // 2, 60),
                                   full=True)
     C.save_cached(cached)
+
+    print("[campaign] serve", flush=True)
+    from benchmarks import serve
+    cached["serve"] = serve.run(quick=False)
+    C.save_cached(cached)
     print("[campaign] done", flush=True)
 
 

@@ -102,6 +102,20 @@ def main() -> None:
                   f"rr={r['round_robin']:.5f};"
                   f"dRR={r['gdp_vs_round_robin']*100:+.1f}%")
 
+    _section("Serving: batched throughput / latency sweep / regret")
+    if not args.skip_rl:
+        from benchmarks import serve
+        serve.run(quick=quick)     # prints serve.* CSV lines itself
+    if "serve" in cached:
+        s = cached["serve"]
+        th = s.get("throughput", {})
+        print(f"serve.campaign.throughput,{th.get('speedup', float('nan')):.2f},"
+              f"shapes={th.get('distinct_shapes', 0)}")
+        reg = s.get("regret", {})
+        print(f"serve.campaign.regret,"
+              f"{';'.join(f'{x:.3f}' for x in reg.get('per_pass_regret', []))},"
+              f"monotone={reg.get('monotone_shrink')}")
+
     _section("Roofline: dry-run terms per (arch x shape x mesh)")
     try:
         from benchmarks import roofline

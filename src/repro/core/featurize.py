@@ -22,7 +22,7 @@ is N (a zero/-inf feature row is appended where needed).
 """
 from __future__ import annotations
 
-from typing import List, NamedTuple, Optional
+from typing import List, NamedTuple, Optional, Tuple
 
 import numpy as np
 import jax.numpy as jnp
@@ -115,43 +115,82 @@ def featurize(g: DataflowGraph, max_deg: int = 8,
                       jnp.asarray(dev_feats), n)
 
 
-def pad_to_common(batches: List[GraphBatch]) -> List[GraphBatch]:
-    """Re-pad a list of GraphBatches to identical (N, K, D) for stacking."""
-    n = max(b.op.shape[0] for b in batches)
-    k = max(b.nbr_idx.shape[1] for b in batches)
-    d = max(b.dev_feats.shape[0] for b in batches)
+# Padded-size ladder for micro-batched serving: bucketing request graphs
+# to a few canonical sizes keeps the number of distinct compiled shapes
+# (and therefore jit recompiles) bounded regardless of workload mix.
+BUCKET_SIZES = (32, 64, 128, 256, 512, 1024, 2048, 4096)
+
+
+def bucket_size(n: int, buckets: Tuple[int, ...] = BUCKET_SIZES) -> int:
+    """Smallest bucket >= n; beyond the ladder, the next power of two."""
+    for b in buckets:
+        if n <= b:
+            return b
+    out = buckets[-1]
+    while out < n:
+        out *= 2
+    return out
+
+
+def pad_to_common(batches: List[GraphBatch],
+                  pad_n: Optional[int] = None, pad_k: Optional[int] = None,
+                  pad_d: Optional[int] = None) -> List[GraphBatch]:
+    """Re-pad a list of GraphBatches to identical (N, K, D) for stacking.
+
+    Explicit ``pad_n/pad_k/pad_d`` targets (must dominate every batch)
+    override the per-list maxima — the serving batcher pins them to bucket
+    sizes so every flush of a bucket reuses one compiled shape.
+
+    Padding runs in numpy (the serving hot path calls this per request;
+    eager jnp scatter ops would pay an XLA dispatch — and a first-call
+    compile — per field); ``stack_batches`` converts to device arrays once.
+    """
+    n = max(max(b.op.shape[0] for b in batches), pad_n or 0)
+    k = max(max(b.nbr_idx.shape[1] for b in batches), pad_k or 0)
+    d = max(max(b.dev_feats.shape[0] for b in batches), pad_d or 0)
     out = []
     for b in batches:
         bn, bk, bd = b.op.shape[0], b.nbr_idx.shape[1], b.dev_feats.shape[0]
-        op = jnp.zeros(n, jnp.int32).at[:bn].set(b.op)
-        feats = jnp.zeros((n, b.feats.shape[1]), jnp.float32).at[:bn].set(b.feats)
-        idx = jnp.full((n, k), n, jnp.int32)
+        op = np.zeros(n, np.int32)
+        op[:bn] = np.asarray(b.op)
+        feats = np.zeros((n, b.feats.shape[1]), np.float32)
+        feats[:bn] = np.asarray(b.feats)
+        idx = np.full((n, k), n, np.int32)
         # remap old sentinel (bn) -> new sentinel (n)
-        old = jnp.where(b.nbr_idx == bn, n, b.nbr_idx)
-        idx = idx.at[:bn, :bk].set(old)
-        mask = jnp.zeros((n, k), jnp.float32).at[:bn, :bk].set(b.nbr_mask)
-        nmask = jnp.zeros(n, jnp.float32).at[:bn].set(b.node_mask)
-        memf = jnp.zeros(n, jnp.float32).at[:bn].set(b.mem_frac)
-        compf = jnp.zeros(n, jnp.float32).at[:bn].set(b.comp_frac)
-        df = jnp.zeros((d, NUM_DEVICE_FEATURES), jnp.float32)
+        old = np.asarray(b.nbr_idx)
+        idx[:bn, :bk] = np.where(old == bn, n, old)
+        mask = np.zeros((n, k), np.float32)
+        mask[:bn, :bk] = np.asarray(b.nbr_mask)
+        nmask = np.zeros(n, np.float32)
+        nmask[:bn] = np.asarray(b.node_mask)
+        memf = np.zeros(n, np.float32)
+        memf[:bn] = np.asarray(b.mem_frac)
+        compf = np.zeros(n, np.float32)
+        compf[:bn] = np.asarray(b.comp_frac)
+        df = np.zeros((d, NUM_DEVICE_FEATURES), np.float32)
         if bd:
-            df = df.at[:bd].set(b.dev_feats)
+            df[:bd] = np.asarray(b.dev_feats)
         out.append(GraphBatch(op, feats, idx, mask, nmask, memf, compf, df,
                               b.num_nodes))
     return out
 
 
-def stack_batches(batches: List[GraphBatch]) -> GraphBatch:
-    """Stack equal-shape GraphBatches along a leading axis (for GDP-batch)."""
-    padded = pad_to_common(batches)
+def stack_batches(batches: List[GraphBatch],
+                  pad_n: Optional[int] = None, pad_k: Optional[int] = None,
+                  pad_d: Optional[int] = None) -> GraphBatch:
+    """Stack equal-shape GraphBatches along a leading axis (for GDP-batch
+    training and micro-batched serving; see ``pad_to_common`` for the
+    bucketed-padding targets)."""
+    padded = pad_to_common(batches, pad_n, pad_k, pad_d)
+
+    def stk(field):
+        return jnp.asarray(np.stack([np.asarray(getattr(b, field))
+                                     for b in padded]))
+
     return GraphBatch(
-        op=jnp.stack([b.op for b in padded]),
-        feats=jnp.stack([b.feats for b in padded]),
-        nbr_idx=jnp.stack([b.nbr_idx for b in padded]),
-        nbr_mask=jnp.stack([b.nbr_mask for b in padded]),
-        node_mask=jnp.stack([b.node_mask for b in padded]),
-        mem_frac=jnp.stack([b.mem_frac for b in padded]),
-        comp_frac=jnp.stack([b.comp_frac for b in padded]),
-        dev_feats=jnp.stack([b.dev_feats for b in padded]),
+        op=stk("op"), feats=stk("feats"), nbr_idx=stk("nbr_idx"),
+        nbr_mask=stk("nbr_mask"), node_mask=stk("node_mask"),
+        mem_frac=stk("mem_frac"), comp_frac=stk("comp_frac"),
+        dev_feats=stk("dev_feats"),
         num_nodes=max(b.num_nodes for b in padded),
     )

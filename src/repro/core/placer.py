@@ -183,13 +183,17 @@ def sample_ar(params: Dict[str, Any], h: jnp.ndarray, node_mask: jnp.ndarray,
               mem_frac: jnp.ndarray, comp_frac: jnp.ndarray,
               dev_feats: Optional[jnp.ndarray] = None, *,
               window: int = 256, heads: int = 4, num_devices: int = 4,
-              use_attention: bool = True
+              use_attention: bool = True, temperature: float = 1.0
               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Exact autoregressive sampling; returns (placement [N], logp [N]).
 
     Ring-buffer KV caches of size ``window`` per layer reproduce the
     teacher-forced mask exactly (causal, i-j < window, inclusive self);
     per-device mem/comp accumulators reproduce the teacher-forced cumsum.
+
+    ``temperature`` sharpens the per-node device distribution (the serving
+    path decodes near-greedily at ~0.1); the returned logp is that of the
+    *tempered* distribution, so PPO callers must keep the default 1.0.
     """
     n, hid = h.shape
     hd = hid // heads
@@ -231,6 +235,7 @@ def sample_ar(params: Dict[str, Any], h: jnp.ndarray, node_mask: jnp.ndarray,
                 new_vc.append(vc[li])
             x = _ffn(lp, x[None], c)[0]
         logits = _head_logits(params, x[None], c, num_devices, dev_keys)[0]
+        logits = logits / jnp.float32(temperature)
         lpv = jax.nn.log_softmax(logits)
         d = jax.random.categorical(ki, logits)
         dev_oh = jax.nn.one_hot(d, dmax)

@@ -51,15 +51,44 @@ def _embed(params, cfg: PolicyConfig, gb: GraphBatch):
 
 
 def sample(params, cfg: PolicyConfig, gb: GraphBatch, num_devices: int,
-           key, num_samples: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+           key, num_samples: int, temperature: float = 1.0
+           ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Returns (placements i32[M, N], per-node logp f32[M, N])."""
     h, c = _embed(params, cfg, gb)
     keys = jax.random.split(key, num_samples)
     devs, lps = jax.vmap(lambda k: placer.sample_ar(
         params["placer"], h, gb.node_mask, c, k, gb.mem_frac, gb.comp_frac,
         gb.dev_feats, window=cfg.window, heads=cfg.heads,
-        num_devices=num_devices, use_attention=cfg.use_attention))(keys)
+        num_devices=num_devices, use_attention=cfg.use_attention,
+        temperature=temperature))(keys)
     return devs.astype(jnp.int32), lps
+
+
+def sample_batch(params, cfg: PolicyConfig, sgb: GraphBatch,
+                 num_devices: int, key, num_samples: int = 1,
+                 temperature: float = 1.0
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Batched zero-shot inference: one call serves B stacked graphs.
+
+    ``sgb`` is a ``stack_batches(...)`` result whose arrays carry a leading
+    batch axis [B, ...]; the whole embed+AR-decode pipeline is vmapped over
+    it so a micro-batching server amortizes dispatch (and, with bucketed
+    padding, compilation) across requests like a continuous-batching LM
+    server.  Returns (placements i32[B, M, N], logp f32[B, M, N]).
+    """
+    b = sgb.op.shape[0]
+    keys = jax.random.split(key, b)
+
+    def one(op, feats, nbr_idx, nbr_mask, node_mask, mem_frac, comp_frac,
+            dev_feats, k):
+        gb = GraphBatch(op, feats, nbr_idx, nbr_mask, node_mask, mem_frac,
+                        comp_frac, dev_feats, op.shape[0])
+        return sample(params, cfg, gb, num_devices, k, num_samples,
+                      temperature)
+
+    return jax.vmap(one)(sgb.op, sgb.feats, sgb.nbr_idx, sgb.nbr_mask,
+                         sgb.node_mask, sgb.mem_frac, sgb.comp_frac,
+                         sgb.dev_feats, keys)
 
 
 def logp_and_entropy(params, cfg: PolicyConfig, gb: GraphBatch,

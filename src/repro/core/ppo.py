@@ -74,6 +74,16 @@ def init_state(key, pcfg: PolicyConfig, ocfg: AdamConfig) -> TrainState:
                       baselines={}, baseline_counts={})
 
 
+def clone_state(state: TrainState) -> TrainState:
+    """Independent copy of a TrainState (superposition fine-tune forks the
+    shared pre-trained policy per graph without mutating the original)."""
+    copy = jax.tree_util.tree_map(lambda x: x, (state.params, state.opt_state))
+    return TrainState(params=copy[0], opt_state=copy[1],
+                      baselines=dict(state.baselines),
+                      baseline_counts=dict(state.baseline_counts),
+                      step=state.step, entropy_scale=state.entropy_scale)
+
+
 def _loss_fn(params, pcfg: PolicyConfig, gb: GraphBatch, num_devices: int,
              placements, old_logp, adv, clip_eps, entropy_coef):
     new_lp, ent = policy_mod.logp_and_entropy(params, pcfg, gb, num_devices,
@@ -219,10 +229,12 @@ class PPOTrainer:
             self.state.params, self.state.opt_state = p, o
         self.state.step += 1
         self.state.entropy_scale *= self.ppo.entropy_decay
-        best = float(np.where(np.asarray(valid), np.asarray(makespans),
-                              np.inf).min())
+        mk_valid = np.where(np.asarray(valid), np.asarray(makespans), np.inf)
+        best = float(mk_valid.min())
+        best_pl = (np.asarray(placements[int(mk_valid.argmin())], np.int32)
+                   if np.isfinite(best) else None)
         return {"graph": name, "reward_mean": float(rewards_np.mean()),
-                "best_makespan": best,
+                "best_makespan": best, "best_placement": best_pl,
                 "valid_frac": float(np.asarray(valid).mean()),
                 "loss": float(aux.get("loss", 0.0)),
                 "entropy": float(aux.get("entropy", 0.0))}
@@ -242,7 +254,8 @@ class PPOTrainer:
                     best[name] = min(best.get(name, np.inf), m["best_makespan"])
                 m["iter"] = it
                 m["elapsed_s"] = time.time() - t0
-                self.history.append(m)
+                self.history.append(
+                    {k: v for k, v in m.items() if k != "best_placement"})
                 if callback:
                     callback(it, m)
                 if log_every and it % log_every == 0:
@@ -251,6 +264,31 @@ class PPOTrainer:
                           f"best={best.get(name, np.inf):.4f}s "
                           f"valid={m['valid_frac']:.2f}")
         return best
+
+    # ------------------------------------------------------------------
+    def finetune(self, name: str, gb: GraphBatch, env, num_devices: int,
+                 iterations: int, target: Optional[float] = None,
+                 ) -> Dict[str, Any]:
+        """Reusable fine-tune hook (paper §3.3 superposition fine-tuning).
+
+        Runs up to ``iterations`` PPO iterations on one graph, tracking the
+        best *valid placement* seen across all sampled trials — the
+        artifact a serving cache wants back, not just the scalar makespan.
+        Early-stops once ``target`` (e.g. the best-baseline makespan) is
+        beaten.  Callers that must not mutate a shared policy fork the
+        trainer first via ``clone_state`` /
+        ``PPOTrainer(pcfg, ppo, state=clone_state(base.state))``.
+        """
+        best_mk, best_pl, it_run = np.inf, None, 0
+        for it_run in range(1, iterations + 1):
+            m = self.iteration(name, gb, env, num_devices)
+            if m["best_makespan"] < best_mk:
+                best_mk = m["best_makespan"]
+                best_pl = m["best_placement"]
+            if target is not None and best_mk <= target:
+                break
+        return {"best_makespan": float(best_mk), "best_placement": best_pl,
+                "iterations": it_run}
 
     # ------------------------------------------------------------------
     def eval_greedy(self, gb: GraphBatch, env, num_devices: int

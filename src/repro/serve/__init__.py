@@ -1,0 +1,15 @@
+"""Placement-as-a-service: cached, batched, async placement serving.
+
+Escalation ladder (cheap -> expensive): canonical-fingerprint cache hit ->
+micro-batched zero-shot policy inference -> background superposition
+fine-tune, publishing improved placements back into the cache.
+"""
+from repro.serve.fingerprint import (cache_key, canonical_order,  # noqa: F401
+                                     fingerprint_and_order, from_canonical,
+                                     graph_fingerprint, to_canonical,
+                                     topology_fingerprint)
+from repro.serve.cache import CacheEntry, CacheStats, PlacementCache  # noqa: F401
+from repro.serve.batcher import Flush, MicroBatcher  # noqa: F401
+from repro.serve.service import (PlacementService, Request,  # noqa: F401
+                                 ServeConfig, ServiceCosts, SimulatedClock,
+                                 WallClock)

@@ -1,0 +1,98 @@
+"""Micro-batching queue for cache-miss placement requests.
+
+Continuous-batching LM servers amortize weight reads and kernel dispatch by
+packing concurrent requests into one forward pass; the same economics hold
+for the AR placer, whose per-node decode step is dispatch-bound at serving
+graph sizes.  The batcher groups pending requests by *compiled shape* —
+(topology fingerprint, device count, node bucket) with the neighbor width
+pinned to ``2 * max_deg`` — pads each group to the bucket via the
+featurizer's bucketed padding, and flushes a group when it reaches
+``max_batch`` requests or its oldest request has waited ``max_wait_s``.
+
+Flushes are always padded to exactly ``max_batch`` rows (stragglers are
+backfilled with copies of the first graph and their outputs discarded), so
+a group compiles **one** XLA program ever, no matter how traffic arrives.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Hashable, List, NamedTuple, Tuple
+
+from repro.core.featurize import GraphBatch, bucket_size, stack_batches
+
+
+class Flush(NamedTuple):
+    """One ready micro-batch: ``sgb`` rows beyond ``real`` are backfill."""
+    key: Hashable
+    items: List[Any]
+    sgb: GraphBatch
+    real: int
+
+
+@dataclasses.dataclass
+class _Group:
+    items: List[Any]
+    gbs: List[GraphBatch]
+    times: List[float]
+
+
+class MicroBatcher:
+    def __init__(self, max_batch: int = 8, max_wait_s: float = 0.05,
+                 max_deg: int = 8):
+        assert max_batch >= 1
+        self.max_batch = max_batch
+        self.max_wait_s = max_wait_s
+        self.pad_k = 2 * max_deg   # featurize() concatenates in+out neighbors
+        self._groups: Dict[Hashable, _Group] = {}
+        self.enqueued = 0
+        self.flushes = 0
+
+    def __len__(self) -> int:
+        return sum(len(g.items) for g in self._groups.values())
+
+    def pending_items(self):
+        for g in self._groups.values():
+            yield from g.items
+
+    @staticmethod
+    def group_key(topo_fp: str, num_devices: int, num_nodes: int) -> Tuple:
+        return (topo_fp, num_devices, bucket_size(num_nodes))
+
+    # -------------------------------------------------------------- queue
+    def add(self, key: Hashable, item: Any, gb: GraphBatch,
+            now: float) -> None:
+        grp = self._groups.get(key)
+        if grp is None:
+            grp = self._groups[key] = _Group([], [], [])
+        grp.items.append(item)
+        grp.gbs.append(gb)
+        grp.times.append(now)
+        self.enqueued += 1
+
+    # -------------------------------------------------------------- flush
+    def ready(self, now: float, force: bool = False) -> List[Flush]:
+        """Pop every group that is full or has waited out ``max_wait_s``
+        (``force`` drains everything, e.g. at shutdown)."""
+        out: List[Flush] = []
+        for key in list(self._groups):
+            grp = self._groups[key]
+            while len(grp.items) >= self.max_batch:
+                out.append(self._make_flush(key, grp, self.max_batch))
+            if grp.items and (force or
+                              now - grp.times[0] >= self.max_wait_s):
+                out.append(self._make_flush(key, grp, len(grp.items)))
+            if not grp.items:
+                del self._groups[key]
+        return out
+
+    def _make_flush(self, key: Hashable, grp: _Group, take: int) -> Flush:
+        items, grp.items = grp.items[:take], grp.items[take:]
+        gbs, grp.gbs = grp.gbs[:take], grp.gbs[take:]
+        grp.times = grp.times[take:]
+        # pad the batch dimension to max_batch so each group key maps to a
+        # single compiled shape; pad node dim to the group's bucket
+        backfill = self.max_batch - len(gbs)
+        sgb = stack_batches(gbs + [gbs[0]] * backfill,
+                            pad_n=key[2], pad_k=self.pad_k, pad_d=key[1])
+        self.flushes += 1
+        return Flush(key, items, sgb, len(items))

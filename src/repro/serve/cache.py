@@ -1,0 +1,137 @@
+"""Capacity-bounded placement cache keyed by (graph_fp, topology_fp).
+
+An entry stores the placement **in canonical node order** (see
+``serve.fingerprint``) so any relabeling of the same graph can consume it,
+plus the simulator's predicted makespan at insert time and the best
+*measured* makespan published so far (zero-shot at first; fine-tune
+escalations overwrite it monotonically via :meth:`PlacementCache.publish`).
+
+Eviction is LRU or LFU (ties broken by recency) over a hard entry
+capacity.  The cache keeps running hit/miss/eviction/publish counters and
+accumulated lookup latency so the service can report hit rate and mean
+lookup cost without instrumenting callers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import OrderedDict
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+Key = Tuple[str, str]
+
+
+@dataclasses.dataclass
+class CacheEntry:
+    placement: np.ndarray        # i32[N] in canonical node order
+    predicted_makespan: float    # simulator estimate at insert time
+    measured_makespan: float     # best confirmed makespan so far
+    source: str = "zero_shot"    # "zero_shot" | "finetuned" | "external"
+    hits: int = 0
+    publishes: int = 0
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    publishes: int = 0
+    lookup_s: float = 0.0        # accumulated wall time spent in get()
+
+    @property
+    def requests(self) -> int:
+        return self.hits + self.misses
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.requests if self.requests else 0.0
+
+    def as_dict(self) -> Dict[str, float]:
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions, "publishes": self.publishes,
+                "hit_rate": self.hit_rate, "lookup_s": self.lookup_s}
+
+
+class PlacementCache:
+    """LRU ("lru") or LFU ("lfu", recency tie-break) placement cache."""
+
+    def __init__(self, capacity: int = 1024, policy: str = "lru"):
+        if policy not in ("lru", "lfu"):
+            raise ValueError(f"unknown eviction policy {policy!r}")
+        assert capacity >= 1
+        self.capacity = capacity
+        self.policy = policy
+        self.stats = CacheStats()
+        # OrderedDict gives LRU recency for free; LFU scans entry.hits
+        # (capacity is small enough that an O(C) eviction scan beats the
+        # bookkeeping of a frequency heap at serving rates).
+        self._entries: "OrderedDict[Key, CacheEntry]" = OrderedDict()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: Key) -> bool:
+        return key in self._entries
+
+    # ------------------------------------------------------------- lookup
+    def get(self, key: Key) -> Optional[CacheEntry]:
+        t0 = time.perf_counter()
+        entry = self._entries.get(key)
+        if entry is None:
+            self.stats.misses += 1
+        else:
+            entry.hits += 1
+            self.stats.hits += 1
+            self._entries.move_to_end(key)
+        self.stats.lookup_s += time.perf_counter() - t0
+        return entry
+
+    def peek(self, key: Key) -> Optional[CacheEntry]:
+        """Lookup without touching counters or recency (for inspection)."""
+        return self._entries.get(key)
+
+    # ------------------------------------------------------------- insert
+    def put(self, key: Key, entry: CacheEntry) -> None:
+        if key in self._entries:
+            self._entries[key] = entry
+            self._entries.move_to_end(key)
+            return
+        while len(self._entries) >= self.capacity:
+            self._evict_one()
+        self._entries[key] = entry
+
+    def publish(self, key: Key, placement: np.ndarray, measured: float,
+                source: str = "finetuned") -> bool:
+        """Install an improved placement; refuses regressions.
+
+        Returns True iff the entry was updated (absent key -> inserted).
+        The monotone-improvement guarantee the regret benchmark leans on
+        lives here: a published makespan never exceeds the stored one.
+        """
+        cur = self._entries.get(key)
+        if cur is not None and measured >= cur.measured_makespan:
+            return False
+        if cur is None:
+            self.put(key, CacheEntry(np.asarray(placement, np.int32),
+                                     measured, measured, source=source,
+                                     publishes=1))
+        else:
+            cur.placement = np.asarray(placement, np.int32)
+            cur.measured_makespan = float(measured)
+            cur.source = source
+            cur.publishes += 1
+        self.stats.publishes += 1
+        return True
+
+    # ------------------------------------------------------------evict
+    def _evict_one(self) -> None:
+        if self.policy == "lru":
+            self._entries.popitem(last=False)
+        else:  # lfu: least hits, least-recently-used among ties
+            victim = min(enumerate(self._entries.items()),
+                         key=lambda kv: (kv[1][1].hits, kv[0]))[1][0]
+            del self._entries[victim]
+        self.stats.evictions += 1

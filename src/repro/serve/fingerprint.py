@@ -1,0 +1,194 @@
+"""Canonical graph fingerprints for the placement cache.
+
+Two requests should hit the same cache line iff they describe the *same
+placement problem*: the same dataflow graph up to node relabeling, on the
+same device topology.  ``topo_relabel`` (and any client re-tracing a model)
+can emit the identical computation with nodes in a different topological
+order, so a byte hash of the arrays would miss; instead we hash a
+relabeling-invariant canonical form built by Weisfeiler-Leman color
+refinement:
+
+* each node's initial color digests its *local* data — op type, exact cost
+  scalars (flops / out_bytes / mem_bytes), output shape, and its
+  longest-path depth from sources / height to sinks (both invariant under
+  relabeling, and they split structurally-repeated stages such as unrolled
+  time steps that bounded-round WL alone cannot) — so any cost
+  perturbation changes every downstream fingerprint;
+* colors are refined for ``rounds`` iterations with the sorted multisets of
+  in- and out-neighbor colors (directed WL), binding structure into them;
+* the fingerprint digests the sorted node-color multiset plus the sorted
+  multiset of (src_color, dst_color) edge pairs — both independent of node
+  numbering by construction.
+
+WL is a sound hash (isomorphic graphs always collide) but not a complete
+isomorphism test; for the regular-ish dataflow graphs the service places,
+spurious collisions would additionally need identical op/cost multisets,
+which makes them vanishingly unlikely — and a "collision" then serves a
+placement for an equal-cost twin, degrading quality, never correctness.
+
+For *placement transfer* the cache stores placements in the canonical node
+order: ``canonical_order`` sorts nodes by (final color, initial color, topo
+index).  Two relabelings of one graph sort same-color nodes consistently up
+to WL-symmetric ties, and swapping placements across WL-indistinguishable
+nodes is cost-neutral to first order (they share op, costs and refined
+neighborhoods).
+
+Topologies are hashed exactly (device order matters to a placement), no
+canonicalization: specs tuple + bandwidth/latency matrices.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Tuple
+
+import numpy as np
+
+from repro.core.graph import DataflowGraph
+from repro.sim.device import Topology
+
+_WL_ROUNDS = 4
+
+
+def _digest(data: bytes) -> int:
+    return int.from_bytes(hashlib.blake2b(data, digest_size=8).digest(), "big")
+
+
+def _hash_rows(mat: np.ndarray) -> np.ndarray:
+    """u64[N] — one blake2b digest per row of a contiguous 2-D byte view."""
+    out = np.empty(mat.shape[0], np.uint64)
+    row_bytes = np.ascontiguousarray(mat)
+    for i in range(mat.shape[0]):
+        out[i] = _digest(row_bytes[i].tobytes())
+    return out
+
+
+def _depth_height(g: DataflowGraph) -> Tuple[np.ndarray, np.ndarray]:
+    """Longest-path node depth (from sources) and height (to sinks)."""
+    n = g.num_nodes
+    depth = np.zeros(n, np.int64)
+    height = np.zeros(n, np.int64)
+    # edges satisfy src < dst but arrive in arbitrary order; sorting by
+    # endpoint makes each single-pass recurrence see finalized inputs
+    by_dst = np.argsort(g.dst, kind="stable")
+    for s, d in zip(g.src[by_dst], g.dst[by_dst]):
+        depth[d] = max(depth[d], depth[s] + 1)
+    by_src_desc = np.argsort(g.src, kind="stable")[::-1]
+    for s, d in zip(g.src[by_src_desc], g.dst[by_src_desc]):
+        height[s] = max(height[s], height[d] + 1)
+    return depth, height
+
+
+def node_colors(g: DataflowGraph, rounds: int = _WL_ROUNDS
+                ) -> Tuple[np.ndarray, np.ndarray]:
+    """(initial u64[N], refined u64[N]) WL colors.
+
+    Refinement is directed: a node's new color hashes (old color, sorted
+    in-neighbor colors, sorted out-neighbor colors), so producer/consumer
+    roles stay distinguished.
+    """
+    n = g.num_nodes
+    depth, height = _depth_height(g)
+    local = np.concatenate([
+        g.op_type.astype(np.int64)[:, None],
+        g.flops.astype(np.float64).view(np.int64)[:, None],
+        g.out_bytes.astype(np.float64).view(np.int64)[:, None],
+        g.mem_bytes.astype(np.float64).view(np.int64)[:, None],
+        depth[:, None], height[:, None],
+        g.out_shape.astype(np.int64),
+    ], axis=1)
+    init = _hash_rows(local)
+    color = init.copy()
+    if n == 0:
+        return init, color
+    src, dst = g.src, g.dst
+    for _ in range(rounds):
+        in_lists: list = [[] for _ in range(n)]
+        out_lists: list = [[] for _ in range(n)]
+        for s, d in zip(src, dst):
+            out_lists[s].append(color[d])
+            in_lists[d].append(color[s])
+        nxt = np.empty(n, np.uint64)
+        for v in range(n):
+            payload = (color[v].tobytes() +
+                       np.sort(np.asarray(in_lists[v], np.uint64)).tobytes() +
+                       b"|" +
+                       np.sort(np.asarray(out_lists[v], np.uint64)).tobytes())
+            nxt[v] = _digest(payload)
+        color = nxt
+    return init, color
+
+
+def _order_from_colors(g: DataflowGraph, init: np.ndarray,
+                       refined: np.ndarray) -> np.ndarray:
+    return np.lexsort((np.arange(g.num_nodes), init, refined))
+
+
+def _fingerprint_from_colors(g: DataflowGraph, refined: np.ndarray) -> str:
+    h = hashlib.blake2b(digest_size=16)
+    h.update(np.int64(g.num_nodes).tobytes())
+    h.update(np.int64(g.num_edges).tobytes())
+    h.update(np.sort(refined).tobytes())
+    if g.num_edges:
+        pairs = np.stack([refined[g.src], refined[g.dst]], axis=1)
+        flat = pairs[np.lexsort((pairs[:, 1], pairs[:, 0]))]
+        h.update(flat.tobytes())
+    return h.hexdigest()
+
+
+def canonical_order(g: DataflowGraph, rounds: int = _WL_ROUNDS) -> np.ndarray:
+    """i64[N] permutation: ``order[c]`` = node at canonical position ``c``.
+
+    Stable sort by (refined color, initial color, topo index); the topo
+    index only breaks ties between WL-indistinguishable nodes.
+    """
+    init, refined = node_colors(g, rounds)
+    return _order_from_colors(g, init, refined)
+
+
+def graph_fingerprint(g: DataflowGraph, rounds: int = _WL_ROUNDS) -> str:
+    """Hex digest, invariant to topological relabeling of ``g``."""
+    _, refined = node_colors(g, rounds)
+    return _fingerprint_from_colors(g, refined)
+
+
+def fingerprint_and_order(g: DataflowGraph, rounds: int = _WL_ROUNDS
+                          ) -> Tuple[str, np.ndarray]:
+    """(graph_fingerprint, canonical_order) from ONE WL refinement — the
+    serving front end needs both per request; computing the colors once
+    halves the per-request hashing cost."""
+    init, refined = node_colors(g, rounds)
+    return (_fingerprint_from_colors(g, refined),
+            _order_from_colors(g, init, refined))
+
+
+def topology_fingerprint(topo: Topology) -> str:
+    """Hex digest of the exact device pool (order-sensitive by design).
+
+    Raw float64 bytes are hashed — inf (free same-device links) has its
+    own bit pattern, so a free link never aliases a 0 B/s dead link.
+    """
+    h = hashlib.blake2b(digest_size=16)
+    for s in topo.specs:
+        h.update(s.name.encode())
+        h.update(np.float64([s.peak_flops, s.mem_bytes, s.hbm_bw]).tobytes())
+    h.update(topo.bw.astype(np.float64).tobytes())
+    h.update(topo.latency.astype(np.float64).tobytes())
+    return h.hexdigest()
+
+
+def cache_key(g: DataflowGraph, topo: Topology) -> Tuple[str, str]:
+    return graph_fingerprint(g), topology_fingerprint(topo)
+
+
+def to_canonical(placement: np.ndarray, order: np.ndarray) -> np.ndarray:
+    """Reindex a placement from graph order into canonical order."""
+    return np.asarray(placement)[order]
+
+
+def from_canonical(canon_placement: np.ndarray, order: np.ndarray
+                   ) -> np.ndarray:
+    """Reindex a cached canonical placement back onto a graph whose
+    ``canonical_order`` is ``order``."""
+    out = np.empty_like(np.asarray(canon_placement))
+    out[order] = canon_placement
+    return out

@@ -1,0 +1,378 @@
+"""Placement-as-a-service: cached, batched, async placement serving.
+
+The serving ladder, cheapest rung first (GDP's generalization story turned
+into a system):
+
+1. **Cache hit** — the request's (graph, topology) fingerprint is known:
+   return the stored placement remapped through the request graph's
+   canonical order.  O(lookup).
+2. **Zero-shot batch inference** — cache misses are micro-batched by
+   compiled shape and served by ONE jitted policy call per flush
+   (``policy.sample_batch``); the best *valid* sampled placement (falling
+   back to the best feasible baseline if none is valid) is returned and
+   inserted into the cache.
+3. **Fine-tune escalation** — if the zero-shot makespan trails the best
+   baseline by more than ``escalate_margin``, the graph is queued for a
+   background superposition fine-tune (a PPO fork of the shared policy via
+   ``ppo.clone_state``; the base policy is never mutated).  Improved
+   placements are *published* back into the cache, so repeat traffic picks
+   them up — the cache warms toward fine-tuned quality.
+
+Determinism: with ``simulated=True`` the service charges a deterministic
+service-time model (``ServiceCosts``) against a :class:`SimulatedClock`
+instead of reading wall time, so throughput / latency / hit-rate are exact
+functions of the request trace and unit-testable.  Batches flush when full
+at submit time or when their oldest request has out-waited ``max_wait_s``
+at the next ``step()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from functools import partial
+from typing import Any, Deque, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core import baselines as B
+from repro.core import policy as policy_mod
+from repro.core.featurize import bucket_size, featurize
+from repro.core.policy import PolicyConfig
+from repro.core.ppo import PPOTrainer, clone_state
+from repro.sim.device import Topology
+from repro.sim.scheduler import Env, prepare_sim_graph
+from repro.serve import fingerprint as FP
+from repro.serve.batcher import MicroBatcher
+from repro.serve.cache import PlacementCache
+
+
+# ------------------------------------------------------------------ clocks
+class WallClock:
+    """Real time; latency is whatever the hardware delivers."""
+    simulated = False
+
+    def now(self) -> float:
+        return time.perf_counter()
+
+    def advance(self, dt: float) -> None:   # wall time advances itself
+        pass
+
+
+class SimulatedClock:
+    """Deterministic logical time the driver and service advance explicitly."""
+    simulated = True
+
+    def __init__(self, t0: float = 0.0):
+        self._t = float(t0)
+
+    def now(self) -> float:
+        return self._t
+
+    def advance(self, dt: float) -> None:
+        assert dt >= 0.0, dt
+        self._t += dt
+
+    def advance_to(self, t: float) -> None:
+        self._t = max(self._t, float(t))
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceCosts:
+    """Deterministic service-time model charged in simulated-clock mode."""
+    lookup_s: float = 1e-4            # cache probe + canonical remap
+    batch_base_s: float = 0.05        # one jitted policy call
+    batch_per_graph_s: float = 0.01   # marginal slot cost inside the call
+    single_per_graph_s: float = 0.04  # unbatched call, for rate modeling
+    finetune_iter_s: float = 0.5      # one PPO iteration
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    cache_capacity: int = 512
+    cache_policy: str = "lru"          # "lru" | "lfu"
+    max_batch: int = 8
+    max_wait_s: float = 0.05
+    num_samples: int = 4               # sampled placements per request
+    temperature: float = 0.25          # near-greedy serving decode
+    escalate_margin: float = 0.10      # fine-tune if zs > (1+margin)*baseline
+    finetune_iters: int = 8
+    finetune_per_step: int = 1         # graphs fine-tuned per step()
+    max_deg: int = 8
+    seed: int = 0
+    simulated: bool = False
+    costs: ServiceCosts = dataclasses.field(default_factory=ServiceCosts)
+
+
+@dataclasses.dataclass
+class Request:
+    req_id: int
+    graph: Any
+    topo: Topology
+    arrival_t: float
+    key: Tuple[str, str]
+    order: np.ndarray                      # canonical node order
+    done_t: Optional[float] = None
+    placement: Optional[np.ndarray] = None  # graph node order
+    makespan: float = float("inf")
+    source: str = "pending"    # cache | zero_shot | baseline | pending
+    entry_source: str = ""     # provenance of the cache line that served it
+
+    @property
+    def latency(self) -> float:
+        assert self.done_t is not None, "request not resolved yet"
+        return self.done_t - self.arrival_t
+
+
+@dataclasses.dataclass
+class _GraphCtx:
+    """Per-(graph_fp, topo_fp) working state, built on first miss.
+
+    ``order`` is the canonical node order of the *specific relabeling* that
+    populated ``gb`` — fine-tuned placements (produced in that graph's node
+    order) are re-indexed through it before entering the cache, so later
+    relabelings of the same graph decode them correctly.
+    """
+    gb: Any                    # featurized GraphBatch (unpadded)
+    env_true: Env              # paper reward (evaluation / serving)
+    env_shaped: Env            # shaped reward (fine-tune)
+    num_devices: int
+    baseline_best: float
+    baseline_pl: Optional[np.ndarray]
+    order: np.ndarray
+    escalated: bool = False
+
+
+@partial(jax.jit, static_argnames=("pcfg", "num_devices", "num_samples"))
+def _sample_batch_jit(params, pcfg: PolicyConfig, sgb, num_devices: int,
+                      key, num_samples: int, temperature):
+    return policy_mod.sample_batch(params, pcfg, sgb, num_devices, key,
+                                   num_samples, temperature)
+
+
+class PlacementService:
+    """Synchronous-submit / async-worker placement server.
+
+    ``trainer`` carries the shared (ideally pre-trained) GDP policy used
+    for zero-shot inference; fine-tune escalations fork it per graph and
+    publish only placements, never parameters.
+    """
+
+    def __init__(self, trainer: PPOTrainer, config: ServeConfig = ServeConfig(),
+                 clock=None):
+        self.trainer = trainer
+        self.pcfg = trainer.pcfg
+        self.cfg = config
+        self.clock = clock or (SimulatedClock() if config.simulated
+                               else WallClock())
+        self.cache = PlacementCache(config.cache_capacity, config.cache_policy)
+        self.batcher = MicroBatcher(config.max_batch, config.max_wait_s,
+                                    config.max_deg)
+        self._ctx: Dict[Tuple[str, str], _GraphCtx] = {}
+        # in-flight coalescing: requests for a key already queued for
+        # inference wait on that flush instead of re-entering the batcher
+        # (classic cache-stampede protection; one model call per key).
+        self._inflight: Dict[Tuple[str, str], List[Request]] = {}
+        self._ft_queue: Deque[Tuple[Tuple[str, str], str]] = deque()
+        # topology digests memoized by object identity (strong refs pin
+        # the ids): serving traffic reuses a handful of Topology objects,
+        # no need to re-hash the [D, D] matrices per request
+        self._topo_fps: Dict[int, Tuple[Topology, str]] = {}
+        self._key = jax.random.PRNGKey(config.seed)
+        self._next_id = 0
+        self.completed: List[Request] = []
+        self.counts: Dict[str, int] = {"cache": 0, "zero_shot": 0,
+                                       "baseline": 0, "finetunes": 0,
+                                       "finetune_published": 0}
+
+    # ---------------------------------------------------------------- rng
+    def _split(self):
+        self._key, k = jax.random.split(self._key)
+        return k
+
+    def _topo_fp(self, topo: Topology) -> str:
+        hit = self._topo_fps.get(id(topo))
+        if hit is not None and hit[0] is topo:
+            return hit[1]
+        fp = FP.topology_fingerprint(topo)
+        self._topo_fps[id(topo)] = (topo, fp)
+        return fp
+
+    # ------------------------------------------------------------- submit
+    def submit(self, g, topo: Topology, arrival_t: Optional[float] = None
+               ) -> Request:
+        """Register one request; resolves immediately on a cache hit or a
+        full micro-batch, otherwise parks it with the batcher."""
+        if arrival_t is not None and self.clock.simulated:
+            self.clock.advance_to(arrival_t)
+        now = self.clock.now()
+        graph_fp, order = FP.fingerprint_and_order(g)
+        key = (graph_fp, self._topo_fp(topo))
+        req = Request(self._next_id, g, topo, now, key, order)
+        self._next_id += 1
+
+        entry = self.cache.get(key)
+        if self.clock.simulated:
+            self.clock.advance(self.cfg.costs.lookup_s)
+        if entry is not None:
+            self._resolve(req, FP.from_canonical(entry.placement, order),
+                          entry.measured_makespan, "cache",
+                          entry_source=entry.source)
+            return req
+
+        if key in self._inflight:              # coalesce concurrent misses
+            self._inflight[key].append(req)
+            return req
+        self._inflight[key] = []
+        ctx = self._context(key, g, topo, order)
+        self.batcher.add(
+            MicroBatcher.group_key(key[1], ctx.num_devices, g.num_nodes),
+            req, ctx.gb, now)
+        self._flush(self.batcher.ready(now))   # full groups flush instantly
+        return req
+
+    # --------------------------------------------------------------- step
+    def step(self, force: bool = False) -> None:
+        """One async-worker turn: flush timed-out batches, then spend the
+        fine-tune budget.  ``force`` drains regardless of wait deadlines."""
+        self._flush(self.batcher.ready(self.clock.now(), force=force))
+        for _ in range(self.cfg.finetune_per_step):
+            if not self._ft_queue:
+                break
+            self._finetune_one(*self._ft_queue.popleft())
+
+    def drain(self) -> None:
+        """Flush every queue (end of trace / shutdown)."""
+        self.step(force=True)
+        while self._ft_queue:
+            self._finetune_one(*self._ft_queue.popleft())
+
+    # ---------------------------------------------------------- internals
+    def _context(self, key, g, topo: Topology,
+                 order: np.ndarray) -> _GraphCtx:
+        ctx = self._ctx.get(key)
+        if ctx is not None:
+            return ctx
+        # contexts are a warm-start side table (envs, featurized arrays,
+        # baselines); bound them like the cache, sparing in-flight keys
+        if len(self._ctx) >= 4 * self.cfg.cache_capacity:
+            busy = set(self._inflight) | {k for k, _ in self._ft_queue} | \
+                {r.key for r in self.batcher.pending_items()}
+            for k in list(self._ctx):
+                if k not in busy:
+                    del self._ctx[k]
+                    if len(self._ctx) < 4 * self.cfg.cache_capacity:
+                        break
+        nd = topo.num_devices
+        assert nd <= self.pcfg.max_devices, (nd, self.pcfg.max_devices)
+        # Bucket-pad EVERYTHING — featurizer, simulator, baselines — so the
+        # whole serving path (policy call, sample selection, fine-tune PPO
+        # programs) compiles once per (bucket, D) instead of once per
+        # distinct graph size; padded nodes are masked throughout.
+        pad_n = bucket_size(g.num_nodes)
+        sg = prepare_sim_graph(g, topo, max_deg=16, pad_to=pad_n, pad_k=16)
+        env_true = Env(sg, topo)
+        env_shaped = Env(sg, topo, shaped_reward=True)
+        gb = featurize(g, max_deg=self.cfg.max_deg, pad_to=pad_n, topo=topo)
+        base_best, base_pl = np.inf, None
+        for fn in (B.human_expert, B.round_robin):
+            pl = fn(g, topo)
+            pl_pad = np.zeros(pad_n, np.int32)
+            pl_pad[:g.num_nodes] = pl
+            mk, _, ok = env_true.rewards(pl_pad[None])
+            if bool(ok[0]) and float(mk[0]) < base_best:
+                base_best, base_pl = float(mk[0]), pl.astype(np.int32)
+        ctx = _GraphCtx(gb, env_true, env_shaped, nd, base_best, base_pl,
+                        order)
+        self._ctx[key] = ctx
+        return ctx
+
+    def _resolve(self, req: Request, placement: np.ndarray, makespan: float,
+                 source: str, entry_source: str = "") -> None:
+        req.done_t = self.clock.now()
+        req.placement = np.asarray(placement, np.int32)
+        req.makespan = float(makespan)
+        req.source = source
+        req.entry_source = entry_source or source
+        self.counts[source] += 1
+        self.completed.append(req)
+
+    def _flush(self, flushes) -> None:
+        for fl in flushes:
+            if self.clock.simulated:
+                self.clock.advance(self.cfg.costs.batch_base_s +
+                                   self.cfg.costs.batch_per_graph_s * fl.real)
+            placements, _ = _sample_batch_jit(
+                self.trainer.state.params, self.pcfg, fl.sgb, fl.key[1],
+                self._split(), self.cfg.num_samples,
+                self.cfg.temperature)
+            placements = np.asarray(placements, np.int32)   # [B, M, Npad]
+            for i, req in enumerate(fl.items):
+                self._serve_zero_shot(req, placements[i])
+
+    def _serve_zero_shot(self, req: Request, sampled: np.ndarray) -> None:
+        """Pick the best valid sample, fall back to the best baseline, cache
+        the winner, and escalate if it trails the baseline badly."""
+        ctx = self._ctx[req.key]
+        n = req.graph.num_nodes
+        pad_n = ctx.gb.op.shape[0]        # ctx arrays live at bucket width
+        mks, _, valid = ctx.env_true.rewards(sampled[:, :pad_n])
+        mks = np.where(np.asarray(valid), np.asarray(mks), np.inf)
+        best = int(mks.argmin())
+        pl, mk, source = sampled[best, :n], float(mks[best]), "zero_shot"
+        if not np.isfinite(mk) and ctx.baseline_pl is not None:
+            pl, mk, source = ctx.baseline_pl, ctx.baseline_best, "baseline"
+        if np.isfinite(mk):
+            # publish (not put): an unlucky later sample of the same key
+            # must never overwrite a better stored placement
+            self.cache.publish(req.key, FP.to_canonical(pl, req.order),
+                               mk, source=source)
+        self._resolve(req, pl, mk, source)
+        for waiter in self._inflight.pop(req.key, []):
+            self._resolve(waiter,
+                          FP.from_canonical(FP.to_canonical(pl, req.order),
+                                            waiter.order),
+                          mk, source, entry_source="coalesced")
+        trails = mk > (1.0 + self.cfg.escalate_margin) * ctx.baseline_best
+        if (not ctx.escalated and (trails or not np.isfinite(mk))
+                and self.cfg.finetune_iters > 0):
+            ctx.escalated = True
+            self._ft_queue.append((req.key, req.graph.name))
+
+    def _finetune_one(self, key: Tuple[str, str], name: str) -> None:
+        """Background worker: superposition fine-tune one graph from the
+        shared base policy; publish the placement iff it improves the
+        cached one (PlacementCache.publish enforces monotonicity)."""
+        ctx = self._ctx[key]
+        fork = PPOTrainer(self.pcfg, self.trainer.ppo,
+                          seed=self.cfg.seed + 17,
+                          state=clone_state(self.trainer.state))
+        res = fork.finetune(name, ctx.gb, ctx.env_shaped, ctx.num_devices,
+                            self.cfg.finetune_iters)
+        self.counts["finetunes"] += 1
+        if self.clock.simulated:
+            self.clock.advance(self.cfg.costs.finetune_iter_s *
+                               res["iterations"])
+        if res["best_placement"] is None:
+            return
+        n = ctx.gb.num_nodes
+        if self.cache.publish(key,
+                              FP.to_canonical(res["best_placement"][:n],
+                                              ctx.order),
+                              res["best_makespan"], source="finetuned"):
+            self.counts["finetune_published"] += 1
+
+    # -------------------------------------------------------------- stats
+    def stats(self) -> Dict[str, Any]:
+        lats = np.asarray([r.latency for r in self.completed], np.float64)
+        out: Dict[str, Any] = dict(self.counts)
+        out.update(self.cache.stats.as_dict())
+        out["served"] = len(self.completed)
+        out["pending"] = len(self.batcher)
+        out["ft_queue"] = len(self._ft_queue)
+        if lats.size:
+            out["latency_p50_s"] = float(np.percentile(lats, 50))
+            out["latency_p99_s"] = float(np.percentile(lats, 99))
+            out["latency_mean_s"] = float(lats.mean())
+        return out

@@ -21,7 +21,7 @@ A pure-numpy reference with identical semantics lives in
 from __future__ import annotations
 
 import dataclasses
-from functools import cached_property
+from functools import cached_property, partial
 from typing import NamedTuple, Optional, Tuple
 
 import jax
@@ -62,7 +62,11 @@ class SimGraph(NamedTuple):
 
 
 def prepare_sim_graph(g: DataflowGraph, topo: Topology, max_deg: int = 16,
-                      pad_to: Optional[int] = None) -> SimGraph:
+                      pad_to: Optional[int] = None,
+                      pad_k: Optional[int] = None) -> SimGraph:
+    """``pad_to``/``pad_k`` pin the node and in-edge dims (sentinel-padded)
+    so graphs of different sizes share one compiled simulator — the serving
+    path pads both to its bucket."""
     n = g.num_nodes
     d = topo.num_devices
     pad_n = pad_to or n
@@ -70,6 +74,13 @@ def prepare_sim_graph(g: DataflowGraph, topo: Topology, max_deg: int = 16,
     ct = node_compute_matrix(g, topo).astype(np.float32)
     idx, mask = g.in_neighbors_padded(max_deg)
     k = idx.shape[1]
+    if pad_k is not None:
+        assert pad_k >= k, (pad_k, k)
+        k = pad_k
+        idx = np.concatenate(
+            [idx, np.full((n, pad_k - idx.shape[1]), n, np.int32)], axis=1)
+        mask = np.concatenate(
+            [mask, np.zeros((n, pad_k - mask.shape[1]), mask.dtype)], axis=1)
 
     compute_t = np.zeros((pad_n, d), np.float32)
     compute_t[:n] = ct
@@ -87,7 +98,8 @@ def prepare_sim_graph(g: DataflowGraph, topo: Topology, max_deg: int = 16,
                     jnp.asarray(in_idx), jnp.asarray(in_mask), jnp.asarray(node_mask))
 
 
-def simulate(sg: SimGraph, placement: jnp.ndarray, st: SimTopology
+def simulate(sg: SimGraph, placement: jnp.ndarray, st: SimTopology,
+             sender_contention: bool = False
              ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Returns (makespan_s, mem_util, valid).
 
@@ -95,34 +107,76 @@ def simulate(sg: SimGraph, placement: jnp.ndarray, st: SimTopology
     contribute zero compute/memory so their placement is irrelevant.
     ``mem_util`` is max over devices of resident bytes / capacity; a
     placement is valid iff every device stays within its own cap.
+
+    ``sender_contention=True`` serializes each device's outgoing
+    transfers on a single send port (numpy-oracle semantics,
+    ``reference.simulate_ref(..., sender_contention=True)``): transfer k
+    out of device *d* starts at ``max(producer_finish, send_free[d])``
+    and occupies the port for its duration.  Edges are consumed in the
+    same padded in-neighbor order as the oracle, so makespans match it
+    exactly.  The contended inner loop is sequential per edge (the port
+    state carries between edges), so prefer the default hoisted path
+    when contention does not matter.
     """
     n = sg.compute_t.shape[0]
     p = placement.astype(jnp.int32)
     p_pad = jnp.concatenate([p, jnp.array([0], jnp.int32)])  # sentinel slot
     out_b_pad = jnp.concatenate([sg.out_bytes, jnp.zeros(1, jnp.float32)])
-
-    # Everything except producer finish times is loop-independent: hoist the
-    # per-edge communication cost out of the sequential scan (the loop body
-    # is dispatch-overhead-bound on CPU; fewer ops per step ≈ 2-3x faster).
-    pd = p_pad[sg.in_idx]                                        # [N, K]
-    pv_col = p[:, None]
-    cross = (pd != pv_col).astype(jnp.float32) * sg.in_mask
-    comm = cross * (st.latency[pd, pv_col] +
-                    out_b_pad[sg.in_idx] * st.inv_bw[pd, pv_col])  # [N, K]
     # effective compute including the dev_free update guard
     ct_eff = sg.compute_t * sg.node_mask[:, None]                # [N, D]
-
-    def body(v, state):
-        finish, dev_free = state
-        ready = jnp.max(sg.in_mask[v] * finish[sg.in_idx[v]] + comm[v],
-                        initial=0.0)
-        pv = p[v]
-        fin = jnp.maximum(ready, dev_free[pv]) + ct_eff[v, pv]
-        return finish.at[v].set(fin), dev_free.at[pv].set(fin)
-
     finish0 = jnp.zeros(n + 1, jnp.float32)   # sentinel row stays 0
     dev_free0 = jnp.zeros(st.num_devices, jnp.float32)
-    finish, _ = jax.lax.fori_loop(0, n, body, (finish0, dev_free0))
+
+    if sender_contention:
+        k = sg.in_idx.shape[1]
+
+        def body_c(v, state):
+            finish, dev_free, send_free = state
+            pv = p[v]
+
+            def edge(kk, acc):
+                ready, sf = acc
+                u = sg.in_idx[v, kk]
+                m = sg.in_mask[v, kk]
+                pu = p_pad[u]
+                t = finish[u]
+                dur = out_b_pad[u] * st.inv_bw[pu, pv]
+                start = jnp.maximum(t, sf[pu])
+                crossing = (m > 0) & (pu != pv)
+                sf = jnp.where(crossing, sf.at[pu].set(start + dur), sf)
+                t_edge = jnp.where(pu != pv,
+                                   start + st.latency[pu, pv] + dur, t)
+                return jnp.maximum(ready, jnp.where(m > 0, t_edge, 0.0)), sf
+
+            ready, send_free = jax.lax.fori_loop(
+                0, k, edge, (jnp.float32(0.0), send_free))
+            fin = jnp.maximum(ready, dev_free[pv]) + ct_eff[v, pv]
+            return (finish.at[v].set(fin), dev_free.at[pv].set(fin),
+                    send_free)
+
+        finish, _, _ = jax.lax.fori_loop(
+            0, n, body_c, (finish0, dev_free0,
+                           jnp.zeros(st.num_devices, jnp.float32)))
+    else:
+        # Everything except producer finish times is loop-independent:
+        # hoist the per-edge communication cost out of the sequential scan
+        # (the loop body is dispatch-overhead-bound on CPU; fewer ops per
+        # step ≈ 2-3x faster).
+        pd = p_pad[sg.in_idx]                                      # [N, K]
+        pv_col = p[:, None]
+        cross = (pd != pv_col).astype(jnp.float32) * sg.in_mask
+        comm = cross * (st.latency[pd, pv_col] +
+                        out_b_pad[sg.in_idx] * st.inv_bw[pd, pv_col])  # [N, K]
+
+        def body(v, state):
+            finish, dev_free = state
+            ready = jnp.max(sg.in_mask[v] * finish[sg.in_idx[v]] + comm[v],
+                            initial=0.0)
+            pv = p[v]
+            fin = jnp.maximum(ready, dev_free[pv]) + ct_eff[v, pv]
+            return finish.at[v].set(fin), dev_free.at[pv].set(fin)
+
+        finish, _ = jax.lax.fori_loop(0, n, body, (finish0, dev_free0))
     makespan = jnp.max(finish[:n] * sg.node_mask)
 
     mem_used = jax.ops.segment_sum(sg.mem_bytes * sg.node_mask, p,
@@ -154,14 +208,28 @@ def reward_shaped(makespan: jnp.ndarray, mem_util: jnp.ndarray,
 
 
 def simulate_batch(sg: SimGraph, placements: jnp.ndarray, st: SimTopology,
-                   shaped: bool = False
+                   shaped: bool = False, sender_contention: bool = False
                    ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """vmap over M placements: returns (makespan[M], reward[M], valid[M])."""
-    fn = jax.vmap(lambda pl: simulate(sg, pl, st))
+    fn = jax.vmap(lambda pl: simulate(sg, pl, st, sender_contention))
     makespan, util, valid = fn(placements)
     if shaped:
         return makespan, reward_shaped(makespan, util), valid
     return makespan, reward_from_runtime(makespan, valid), valid
+
+
+@partial(jax.jit, static_argnames=("num_devices", "shaped",
+                                   "sender_contention"))
+def _simulate_batch_jit(sg: SimGraph, placements, inv_bw, latency, mem_caps,
+                        num_devices: int, shaped: bool,
+                        sender_contention: bool):
+    """Stable-identity jitted wrapper so repeated Env.rewards calls with
+    the same shapes hit the pjit cache instead of re-tracing the scan
+    (eager fori_loop re-compiles per call — ~0.5 s each at serving sizes;
+    SimTopology.num_devices must stay static, hence the unpacking)."""
+    st = SimTopology(num_devices, inv_bw, latency, mem_caps)
+    return simulate_batch(sg, placements, st, shaped=shaped,
+                          sender_contention=sender_contention)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -170,11 +238,15 @@ class Env:
     sg: SimGraph
     topo: Topology
     shaped_reward: bool = False
+    sender_contention: bool = False
 
     @cached_property
     def sim_topology(self) -> SimTopology:
         return SimTopology.from_topology(self.topo)
 
     def rewards(self, placements: jnp.ndarray):
-        return simulate_batch(self.sg, placements, self.sim_topology,
-                              shaped=self.shaped_reward)
+        st = self.sim_topology
+        return _simulate_batch_jit(self.sg, jnp.asarray(placements),
+                                   st.inv_bw, st.latency, st.mem_caps,
+                                   st.num_devices, self.shaped_reward,
+                                   self.sender_contention)

@@ -1,0 +1,111 @@
+"""Fingerprint canonicalization: relabeling-invariance and sensitivity.
+
+The cache contract: isomorphic relabelings of one graph MUST collide (same
+fingerprint, and the canonical order must transfer placements through the
+true node correspondence); perturbed costs or topologies must NOT.
+"""
+import numpy as np
+import pytest
+
+from repro.core.graph import topo_relabel
+from repro.graphs import synthetic as S
+from repro.serve import fingerprint as FP
+from repro.sim.device import (A100, P100, Topology, multi_gen_fleet,
+                              p100_topology)
+
+GRAPHS = [S.rnnlm(2, time_steps=3), S.transformer_xl(2, segments=2),
+          S.inception(modules=3)]
+
+
+def relabeled(g, seed):
+    """Random node permutation pushed through topo_relabel (the public
+    path any client re-tracing a model would hit)."""
+    rng = np.random.RandomState(seed)
+    perm = rng.permutation(g.num_nodes)
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(g.num_nodes)
+    return topo_relabel(g.name + "-rl", g.op_type[perm], g.flops[perm],
+                        g.out_bytes[perm], g.mem_bytes[perm],
+                        g.out_shape[perm], inv[g.src], inv[g.dst])
+
+
+@pytest.mark.parametrize("g", GRAPHS, ids=lambda g: g.name)
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_isomorphic_relabelings_collide(g, seed):
+    assert FP.graph_fingerprint(relabeled(g, seed)) == FP.graph_fingerprint(g)
+
+
+@pytest.mark.parametrize("g", GRAPHS, ids=lambda g: g.name)
+def test_canonical_transfer_matches_true_correspondence(g):
+    """With unique per-node costs the node correspondence is recoverable
+    exactly; the canonical-order placement transfer must reproduce it."""
+    gu = topo_relabel(g.name, g.op_type, g.flops + np.arange(g.num_nodes) * 1e-3,
+                      g.out_bytes, g.mem_bytes, g.out_shape, g.src, g.dst)
+    rng = np.random.RandomState(7)
+    perm = rng.permutation(gu.num_nodes)
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(gu.num_nodes)
+    g2 = topo_relabel("rl", gu.op_type[perm], gu.flops[perm],
+                      gu.out_bytes[perm], gu.mem_bytes[perm],
+                      gu.out_shape[perm], inv[gu.src], inv[gu.dst])
+    lookup = {f: i for i, f in enumerate(g2.flops)}
+    corr = np.array([lookup[f] for f in gu.flops])       # gu node -> g2 node
+    p1 = rng.randint(0, 4, gu.num_nodes).astype(np.int32)
+    expected = np.empty_like(p1)
+    expected[corr] = p1
+    got = FP.from_canonical(FP.to_canonical(p1, FP.canonical_order(gu)),
+                            FP.canonical_order(g2))
+    assert np.array_equal(got, expected)
+
+
+@pytest.mark.parametrize("g", GRAPHS, ids=lambda g: g.name)
+def test_cost_perturbation_changes_fingerprint(g):
+    f0 = FP.graph_fingerprint(g)
+    hot = int(np.argmax(g.flops))                         # a real compute op
+    for field in ("flops", "out_bytes", "mem_bytes"):
+        g2 = relabeled(g, 0)
+        arr = getattr(g2, field).copy()
+        # the relabeled twin moved node `hot`; perturb its counterpart
+        tgt = int(np.argmax(g2.flops)) if field == "flops" else \
+            int(np.argmax(g2.out_bytes))
+        arr[tgt] = arr[tgt] * 1.0001 + 1.0
+        setattr(g2, field, arr)
+        assert FP.graph_fingerprint(g2) != f0, field
+
+
+def test_topology_perturbations_change_fingerprint():
+    t0 = p100_topology(4)
+    f0 = FP.topology_fingerprint(t0)
+    assert FP.topology_fingerprint(p100_topology(4)) == f0
+    assert FP.topology_fingerprint(p100_topology(2)) != f0
+    assert FP.topology_fingerprint(t0.with_mem_caps(1e9)) != f0
+    assert FP.topology_fingerprint(
+        Topology.uniform(4, P100, link_bw=25e9, link_latency=5e-6)) != f0
+    assert FP.topology_fingerprint(
+        Topology.uniform(4, P100, link_bw=20e9, link_latency=6e-6)) != f0
+    assert FP.topology_fingerprint(multi_gen_fleet(((A100, 2), (P100, 2)))) \
+        != FP.topology_fingerprint(multi_gen_fleet(((P100, 2), (A100, 2))))
+    # a 0 B/s dead link must not alias an inf-bandwidth free link
+    bw_dead = t0.bw.copy()
+    bw_dead[0, 1] = 0.0
+    assert FP.topology_fingerprint(
+        Topology(specs=t0.specs, bw=bw_dead, latency=t0.latency)) != \
+        FP.topology_fingerprint(
+            Topology(specs=t0.specs,
+                     bw=np.where(bw_dead == 0.0, np.inf, bw_dead),
+                     latency=t0.latency))
+
+
+def test_fingerprint_and_order_matches_separate_calls():
+    g = GRAPHS[0]
+    fp, order = FP.fingerprint_and_order(g)
+    assert fp == FP.graph_fingerprint(g)
+    assert np.array_equal(order, FP.canonical_order(g))
+
+
+def test_roundtrip_identity_same_graph():
+    g = GRAPHS[0]
+    order = FP.canonical_order(g)
+    p = np.arange(g.num_nodes) % 4
+    assert np.array_equal(FP.from_canonical(FP.to_canonical(p, order), order),
+                          p)

@@ -1,0 +1,180 @@
+"""Placement service: cache semantics, micro-batching, escalation ladder.
+
+The integration test drives the full ladder under a simulated clock, so
+latency/hit-rate assertions are exact functions of the request trace.
+"""
+import numpy as np
+import pytest
+
+from repro.core.featurize import bucket_size, featurize
+from repro.core.graph import topo_relabel
+from repro.core.policy import PolicyConfig
+from repro.core.ppo import PPOConfig, PPOTrainer
+from repro.graphs import synthetic as S
+from repro.serve import (MicroBatcher, PlacementService, PlacementCache,
+                         ServeConfig, SimulatedClock)
+from repro.serve.cache import CacheEntry
+from repro.sim.device import p100_topology
+
+
+def _entry(mk, pl_len=4):
+    return CacheEntry(np.zeros(pl_len, np.int32), mk, mk)
+
+
+# ------------------------------------------------------------------- cache
+def test_cache_lru_eviction_and_stats():
+    c = PlacementCache(capacity=2, policy="lru")
+    c.put(("a", "t"), _entry(1.0))
+    c.put(("b", "t"), _entry(2.0))
+    assert c.get(("a", "t")) is not None      # refresh a
+    c.put(("c", "t"), _entry(3.0))            # evicts b (LRU)
+    assert c.get(("b", "t")) is None
+    assert c.get(("c", "t")) is not None
+    assert c.stats.evictions == 1
+    assert c.stats.hits == 2 and c.stats.misses == 1
+    assert c.stats.hit_rate == pytest.approx(2 / 3)
+
+
+def test_cache_lfu_prefers_hot_entries():
+    c = PlacementCache(capacity=2, policy="lfu")
+    c.put(("hot", "t"), _entry(1.0))
+    for _ in range(5):
+        assert c.get(("hot", "t")) is not None
+    c.put(("cold", "t"), _entry(2.0))
+    c.put(("new", "t"), _entry(3.0))          # evicts cold (0 hits), not hot
+    assert c.peek(("hot", "t")) is not None
+    assert c.peek(("cold", "t")) is None
+
+
+def test_cache_publish_is_monotone():
+    c = PlacementCache(capacity=4)
+    key = ("g", "t")
+    assert c.publish(key, np.zeros(4, np.int32), 2.0, source="zero_shot")
+    assert not c.publish(key, np.ones(4, np.int32), 2.5)   # regression refused
+    assert c.peek(key).measured_makespan == 2.0
+    assert c.publish(key, np.ones(4, np.int32), 1.5, source="finetuned")
+    e = c.peek(key)
+    assert e.measured_makespan == 1.5 and e.source == "finetuned"
+    assert np.all(e.placement == 1)
+
+
+# ----------------------------------------------------------------- batcher
+def _gb(g, topo):
+    return featurize(g, max_deg=8, topo=topo)
+
+
+def test_batcher_flushes_full_groups_and_backfills():
+    topo = p100_topology(4)
+    g = S.rnnlm(2, time_steps=3)
+    mb = MicroBatcher(max_batch=3, max_wait_s=1.0)
+    key = MicroBatcher.group_key("tfp", 4, g.num_nodes)
+    for i in range(4):
+        mb.add(key, f"r{i}", _gb(g, topo), now=0.0)
+    flushes = mb.ready(now=0.0)
+    assert len(flushes) == 1 and flushes[0].real == 3      # full batch only
+    assert len(mb) == 1
+    fl = mb.ready(now=2.0)[0]                              # timeout flush
+    assert fl.real == 1
+    # batch dim always padded to max_batch; node dim to the bucket
+    assert fl.sgb.op.shape == (3, bucket_size(g.num_nodes))
+    assert fl.sgb.nbr_idx.shape[2] == 16                   # pinned 2*max_deg
+    assert len(mb) == 0
+
+
+def test_batcher_groups_by_compiled_shape():
+    topo = p100_topology(4)
+    small, big = S.rnnlm(2, time_steps=3), S.rnnlm(2, time_steps=8)
+    assert bucket_size(small.num_nodes) != bucket_size(big.num_nodes)
+    mb = MicroBatcher(max_batch=4, max_wait_s=0.0)
+    for g in (small, big):
+        mb.add(MicroBatcher.group_key("tfp", 4, g.num_nodes), g.name,
+               _gb(g, topo), now=0.0)
+    flushes = mb.ready(now=0.0)
+    assert len(flushes) == 2                               # one per bucket
+    assert {f.sgb.op.shape[1] for f in flushes} == \
+        {bucket_size(small.num_nodes), bucket_size(big.num_nodes)}
+
+
+# ---------------------------------------------------- escalation ladder
+def _relabeled(g, seed):
+    rng = np.random.RandomState(seed)
+    perm = rng.permutation(g.num_nodes)
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(g.num_nodes)
+    return topo_relabel(g.name + "-rl", g.op_type[perm], g.flops[perm],
+                        g.out_bytes[perm], g.mem_bytes[perm],
+                        g.out_shape[perm], inv[g.src], inv[g.dst])
+
+
+def test_escalation_ladder_under_simulated_clock():
+    """Zipf-skewed stream: steady-state hit rate is exact, latencies follow
+    the deterministic cost model, and fine-tune escalation strictly
+    improves the cached makespan it republishes."""
+    pcfg = PolicyConfig(hidden=32, gnn_layers=2, placer_layers=1, ffn=64,
+                        window=32, max_devices=8)
+    ppo = PPOConfig(num_samples=8, epochs=1)
+    trainer = PPOTrainer(pcfg, ppo, seed=0)
+    cfg = ServeConfig(max_batch=1, num_samples=2, simulated=True,
+                      finetune_iters=6, escalate_margin=0.0, seed=0)
+    clock = SimulatedClock()
+    svc = PlacementService(trainer, cfg, clock)
+
+    g_hot = S.rnnlm(2, time_steps=3)
+    g_cold = topo_relabel("rnnlm-scaled", g_hot.op_type, g_hot.flops * 1.5,
+                          g_hot.out_bytes, g_hot.mem_bytes, g_hot.out_shape,
+                          g_hot.src, g_hot.dst)
+    topo = p100_topology(4).tightened(g_hot.total_mem())
+
+    # zipf-ish two-key stream: hot key (incl. relabelings) dominates
+    trace = [g_hot, g_cold, _relabeled(g_hot, 1), g_hot, _relabeled(g_hot, 2),
+             g_cold, g_hot, _relabeled(g_hot, 3), g_hot, g_cold,
+             _relabeled(g_hot, 4), g_hot]
+    reqs = []
+    zs_after_first = {}
+    for i, g in enumerate(trace):
+        r = svc.submit(g, topo, arrival_t=i * 1.0)
+        reqs.append(r)
+        if r.key not in zs_after_first and svc.cache.peek(r.key) is not None:
+            zs_after_first[r.key] = \
+                svc.cache.peek(r.key).measured_makespan
+        svc.step()      # async worker turn: lets fine-tunes land mid-trace
+    svc.drain()
+
+    # ---- steady-state hit rate: exactly 2 misses (one per unique key)
+    stats = svc.stats()
+    assert stats["misses"] == 2
+    assert stats["hit_rate"] == pytest.approx((len(trace) - 2) / len(trace))
+    second_half = reqs[len(reqs) // 2:]
+    assert all(r.source == "cache" for r in second_half)
+
+    # ---- deterministic latencies from the service-time model
+    c = cfg.costs
+    for r in reqs:
+        if r.source == "cache":
+            assert r.latency == pytest.approx(c.lookup_s)
+        else:
+            assert r.latency == pytest.approx(
+                c.lookup_s + c.batch_base_s + c.batch_per_graph_s)
+
+    # ---- every response is a feasible placement of the right arity
+    for r in reqs:
+        assert np.isfinite(r.makespan)
+        assert r.placement.shape == (r.graph.num_nodes,)
+        assert r.placement.min() >= 0 and r.placement.max() < 4
+
+    # ---- escalation ran and only ever improved the cached entries
+    assert svc.counts["finetunes"] >= 1
+    assert svc.counts["finetune_published"] >= 1
+    improved = 0
+    for key, zs_mk in zs_after_first.items():
+        entry = svc.cache.peek(key)
+        assert entry.measured_makespan <= zs_mk + 1e-12
+        if entry.source == "finetuned":
+            assert entry.measured_makespan < zs_mk   # strict improvement
+            improved += 1
+    assert improved >= 1
+    # cache hits after the publish serve the fine-tuned makespan
+    ft_served = [r for r in reqs if r.entry_source == "finetuned"]
+    for r in ft_served:
+        key_entry = svc.cache.peek(r.key)
+        assert r.makespan == pytest.approx(key_entry.measured_makespan)

@@ -38,6 +38,27 @@ def test_jit_matches_reference(g, seed):
     assert bool(valid) == valid_ref
 
 
+@pytest.mark.parametrize("g", GRAPHS, ids=lambda g: g.name)
+@pytest.mark.parametrize("seed", [0, 1])
+def test_jit_matches_reference_sender_contention(g, seed):
+    """PR-1 follow-up: the oracle's sender-port serialization mode, ported
+    into the jit scheduler, matches it on the tier-1 graph set."""
+    sg, topo = _env(g)
+    rng = np.random.RandomState(seed)
+    p = rng.randint(0, 4, g.num_nodes).astype(np.int32)
+    mk, util, valid = simulate(sg, jnp.asarray(p),
+                               SimTopology.from_topology(topo),
+                               sender_contention=True)
+    mk_ref, util_ref, valid_ref = simulate_ref(g, p, topo,
+                                               sender_contention=True)
+    assert np.isclose(float(mk), mk_ref, rtol=1e-4)
+    assert np.isclose(float(util), util_ref, rtol=1e-5)
+    assert bool(valid) == valid_ref
+    # contention can only delay: contended makespan >= uncontended
+    mk0, _, _ = simulate(sg, jnp.asarray(p), SimTopology.from_topology(topo))
+    assert float(mk) >= float(mk0) - 1e-9
+
+
 @settings(max_examples=10, deadline=None)
 @given(st.integers(0, 10 ** 6))
 def test_jit_matches_reference_random_placements(seed):
