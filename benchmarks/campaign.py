@@ -48,6 +48,10 @@ def main():
     from benchmarks import serve
     cached["serve"] = serve.run(quick=False)
     C.save_cached(cached)
+
+    print("[campaign] serve_cluster", flush=True)
+    cached["serve_cluster"] = serve.run_cluster(quick=False)
+    C.save_cached(cached)
     print("[campaign] done", flush=True)
 
 

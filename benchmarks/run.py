@@ -116,6 +116,21 @@ def main() -> None:
               f"{';'.join(f'{x:.3f}' for x in reg.get('per_pass_regret', []))},"
               f"monotone={reg.get('monotone_shrink')}")
 
+    _section("Serving cluster: 1->4 worker scaling / restart / overload")
+    if not args.skip_rl:
+        from benchmarks import serve as serve_mod
+        serve_mod.run_cluster(quick=quick)   # prints serve.cluster.* lines
+    if "serve_cluster" in cached:
+        sc = cached["serve_cluster"]
+        sca = sc.get("scaling", {})
+        print(f"serve_cluster.campaign.speedup,"
+              f"{sca.get('speedup_4w', float('nan')):.2f},target>=3x")
+        wr = sc.get("warm_restart", {})
+        print(f"serve_cluster.campaign.restart,"
+              f"{wr.get('restart_first_sweep_hit_rate', float('nan')):.2f},"
+              f"recovered={wr.get('recovered')};"
+              f"stale_served={wr.get('bump_stale_served')}")
+
     _section("Roofline: dry-run terms per (arch x shape x mesh)")
     try:
         from benchmarks import roofline

@@ -21,12 +21,24 @@ Three sections:
 
 Results are printed as ``name,value,derived`` CSV lines and written to
 ``BENCH_serve.json`` (CI uploads ``BENCH_*.json`` as artifacts).
+
+``--cluster`` runs the **multi-host tier** instead (``serve.cluster``)
+and writes ``BENCH_serve_cluster.json``: 1->4 worker throughput scaling
+(target >=3x at 4 workers), warm-restart hit-rate recovery from the
+persistent store, policy-bump provenance invalidation (zero stale
+placements served), and overload p99 with vs without admission control.
+All cluster numbers run under simulated clocks, so they are exact
+functions of the trace.  ``docs/serving.md`` explains how to read both
+artifacts.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import math
 import os
+import shutil
+import tempfile
 import time
 from functools import partial
 from typing import Any, Dict, List
@@ -39,7 +51,8 @@ from repro.core.featurize import bucket_size, featurize
 from repro.core.policy import PolicyConfig
 from repro.core.ppo import PPOConfig, PPOTrainer, clone_state
 from repro.graphs import synthetic as S
-from repro.serve import PlacementService, ServeConfig, SimulatedClock
+from repro.serve import (AdmissionConfig, ClusterConfig, PlacementCluster,
+                         PlacementService, ServeConfig, SimulatedClock)
 from repro.sim.device import p100_topology
 from repro.sim.scheduler import Env, prepare_sim_graph
 
@@ -48,6 +61,8 @@ POLICY = PolicyConfig(hidden=32, gnn_layers=2, placer_layers=1, ffn=64,
 PPO = PPOConfig(num_samples=8, epochs=1)
 
 OUT_PATH = os.environ.get("BENCH_SERVE_OUT", "BENCH_serve.json")
+CLUSTER_OUT_PATH = os.environ.get("BENCH_SERVE_CLUSTER_OUT",
+                                  "BENCH_serve_cluster.json")
 
 
 def _mixed_workload(count: int) -> List[Any]:
@@ -236,6 +251,182 @@ def run_regret(pool_size: int = 3, passes: int = 3, reqs_per_pass: int = 8,
             "monotone_shrink": monotone, "stats": svc.stats()}
 
 
+# ---------------------------------------------------------------- cluster
+def _cluster_pool(num_keys: int) -> List[Any]:
+    """``num_keys`` distinct-fingerprint rnnlm variants in ONE padding
+    bucket: cost perturbations change the WL fingerprint (each variant is
+    its own cache key) but not the compiled shape, so the whole pool
+    shares one XLA program per (batch, D) and the cluster numbers measure
+    serving, not compilation."""
+    out = []
+    for i in range(num_keys):
+        g = S.rnnlm(2, time_steps=3)
+        g.flops = g.flops * (1.0 + 0.002 * (i + 1))
+        g.name = f"rnnlm-k{i}"
+        out.append(g)
+    return out
+
+
+def _mk_cluster(trainer: PPOTrainer, num_workers: int, store_root=None,
+                max_lag_s: float = math.inf,
+                max_batch: int = 1) -> PlacementCluster:
+    return PlacementCluster(trainer, ClusterConfig(
+        num_workers=num_workers, virtual_nodes=128,
+        serve=ServeConfig(max_batch=max_batch, max_wait_s=0.0,
+                          num_samples=2, finetune_iters=0, simulated=True),
+        admission=AdmissionConfig(max_lag_s=max_lag_s)),
+        store_root=store_root)
+
+
+def run_cluster_scaling(trainer: PPOTrainer, pool: List[Any], topo,
+                        repeats: int = 3) -> Dict[str, Any]:
+    """One burst trace replayed through 1/2/4-worker clusters; aggregate
+    throughput must scale near-linearly (>=3x at 4 workers)."""
+    trace = pool * repeats
+    rows: Dict[str, Any] = {}
+    for n in (1, 2, 4):
+        cl = _mk_cluster(trainer, n)
+        for g in trace:
+            cl.submit(g, topo, arrival_t=0.0)
+        cl.drain()
+        st = cl.stats()
+        assert st["served_total"] == len(trace)
+        rows[f"{n}w"] = {
+            "workers": n, "makespan_s": st["makespan_s"],
+            "throughput_rps": len(trace) / st["makespan_s"],
+            "keys_per_worker": [p["unique_keys"] for p in st["per_worker"]],
+            "zero_shot": st["zero_shot"], "hit_rate": st["hit_rate"],
+            "stale_served": st["stale_served"],
+        }
+        print(f"serve.cluster.scaling.{n}w,"
+              f"{rows[f'{n}w']['throughput_rps']:.1f},"
+              f"makespan={st['makespan_s']:.3f}s;"
+              f"keys={rows[f'{n}w']['keys_per_worker']}", flush=True)
+    rows["speedup_4w"] = (rows["4w"]["throughput_rps"] /
+                          rows["1w"]["throughput_rps"])
+    rows["speedup_2w"] = (rows["2w"]["throughput_rps"] /
+                          rows["1w"]["throughput_rps"])
+    print(f"serve.cluster.scaling.speedup,{rows['speedup_4w']:.2f},"
+          f"2w={rows['speedup_2w']:.2f};target>=3x", flush=True)
+    return rows
+
+
+def run_cluster_restart(trainer: PPOTrainer, pool: List[Any], topo,
+                        store_root, sweeps: int = 3) -> Dict[str, Any]:
+    """Warm-restart recovery: steady-state hit rate before shutdown vs
+    the FIRST sweep after restarting from the persistent store, then a
+    policy bump that must invalidate (not serve) every stored entry."""
+    def sweep(cl, t0):
+        srcs = []
+        for j, g in enumerate(pool):
+            srcs.append(cl.submit(g, topo, arrival_t=t0 + j * 0.01).source)
+        cl.drain()
+        return sum(s in ("cache", "disk") for s in srcs) / len(srcs)
+
+    cl = _mk_cluster(trainer, 2, store_root=store_root)
+    rates = [sweep(cl, p * 10.0) for p in range(sweeps)]
+    steady = rates[-1]
+    cl.shutdown()
+
+    # every worker replays ALL segments under the shared root, so each
+    # store's invalidation counter already covers the whole cluster:
+    # take max, not sum (sum would multiply by num_workers)
+    warm = _mk_cluster(trainer, 2, store_root=store_root)
+    recovery = sweep(warm, 0.0)
+    stw = warm.stats()
+    inval_warm = max(svc.store.stats.records_invalidated
+                     for svc in warm.workers)
+    warm.shutdown()
+
+    bumped_tr = _trainer(seed=1234)
+    bumped = _mk_cluster(bumped_tr, 2, store_root=store_root)
+    bump_rate = sweep(bumped, 0.0)
+    stb = bumped.stats()
+    inval_bump = max(svc.store.stats.records_invalidated
+                     for svc in bumped.workers)
+    row = {
+        "per_sweep_hit_rate": rates, "steady_hit_rate": steady,
+        "restart_first_sweep_hit_rate": recovery,
+        "recovered": recovery >= steady - 1e-9,
+        "restart_zero_shot": stw["zero_shot"],
+        "restart_invalidated": inval_warm,
+        "restart_stale_served": stw["stale_served"],
+        "bump_invalidated": inval_bump,
+        "bump_zero_shot": stb["zero_shot"],
+        "bump_first_sweep_hit_rate": bump_rate,
+        "bump_stale_served": stb["stale_served"],
+    }
+    print(f"serve.cluster.restart,{recovery:.2f},"
+          f"steady={steady:.2f};recovered={row['recovered']};"
+          f"restart_infer={stw['zero_shot']}", flush=True)
+    print(f"serve.cluster.policy_bump,{inval_bump},"
+          f"reinfer={stb['zero_shot']};"
+          f"stale_served={stb['stale_served']};target_stale=0", flush=True)
+    return row
+
+
+def run_cluster_overload(trainer: PPOTrainer, pool: List[Any], topo,
+                         num_requests: int = 200, rate_rps: float = 1000.0,
+                         max_lag_s: float = 0.2) -> Dict[str, Any]:
+    """Single worker far past capacity, with vs without admission
+    control: shedding to the degraded baseline fast path must bound p99
+    near ``max_lag_s`` + one flush while the unbounded run's tail grows
+    with the backlog."""
+    trace = _zipf_trace(pool, num_requests, skew=1.1, rate_rps=rate_rps,
+                        seed=3)
+    rows: Dict[str, Any] = {}
+    for label, lag in (("admission", max_lag_s), ("unbounded", math.inf)):
+        cl = _mk_cluster(trainer, 1, max_lag_s=lag)
+        for t, g in trace:
+            cl.submit(g, topo, arrival_t=t)
+        cl.drain()
+        st = cl.stats()
+        served = [r for r in cl.completed() if r.source != "shed"]
+        lat = np.asarray([r.latency for r in served], np.float64)
+        rows[label] = {
+            "p50_s": st["latency_p50_s"], "p99_s": st["latency_p99_s"],
+            "p99_served_s": float(np.percentile(lat, 99)),
+            "shed_fraction": st["shed"] / num_requests,
+            "served": len(served),
+        }
+        print(f"serve.cluster.overload.{label},{st['latency_p99_s']:.4f},"
+              f"p99_served={rows[label]['p99_served_s']:.4f};"
+              f"shed={rows[label]['shed_fraction']:.2f}", flush=True)
+    costs = ServeConfig().costs
+    bound = (max_lag_s + costs.batch_base_s + costs.batch_per_graph_s +
+             costs.lookup_s + costs.store_lookup_s)
+    rows["p99_bound_s"] = bound
+    rows["bounded"] = rows["admission"]["p99_s"] <= bound + 1e-9
+    rows["tail_ratio"] = (rows["unbounded"]["p99_s"] /
+                          max(rows["admission"]["p99_s"], 1e-12))
+    print(f"serve.cluster.overload.bounded,{int(rows['bounded'])},"
+          f"bound={bound:.3f}s;tail_ratio={rows['tail_ratio']:.1f}x",
+          flush=True)
+    return rows
+
+
+def run_cluster(quick: bool = True) -> Dict[str, Any]:
+    """All cluster sections; returns the BENCH_serve_cluster.json dict."""
+    num_keys = 48 if quick else 64
+    pool = _cluster_pool(num_keys)
+    topo = p100_topology(4)
+    topo = topo.with_mem_caps(max(g.total_mem() for g in pool) * 2)
+    trainer = _trainer()
+    results: Dict[str, Any] = {}
+    results["scaling"] = run_cluster_scaling(
+        trainer, pool, topo, repeats=3 if quick else 5)
+    store_root = tempfile.mkdtemp(prefix="bench_serve_cluster_store_")
+    try:
+        results["warm_restart"] = run_cluster_restart(
+            trainer, pool[:12], topo, store_root)
+    finally:
+        shutil.rmtree(store_root, ignore_errors=True)
+    results["overload"] = run_cluster_overload(
+        trainer, pool[:24], topo,
+        num_requests=200 if quick else 1000)
+    return results
+
+
 # ------------------------------------------------------------------- main
 def run(quick: bool = True) -> Dict[str, Any]:
     results: Dict[str, Any] = {}
@@ -254,16 +445,25 @@ def run(quick: bool = True) -> Dict[str, Any]:
 
 
 def main():
+    """CLI: default runs the single-worker sections; ``--cluster`` runs
+    the multi-host tier and writes BENCH_serve_cluster.json instead."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
-    ap.add_argument("--out", default=OUT_PATH)
+    ap.add_argument("--cluster", action="store_true",
+                    help="run the multi-host cluster sections")
+    ap.add_argument("--out", default=None)
     args = ap.parse_args()
     t0 = time.time()
-    results = run(quick=not args.full)
+    if args.cluster:
+        out = args.out or CLUSTER_OUT_PATH
+        results = run_cluster(quick=not args.full)
+    else:
+        out = args.out or OUT_PATH
+        results = run(quick=not args.full)
     results["wall_s"] = time.time() - t0
-    with open(args.out, "w") as f:
+    with open(out, "w") as f:
         json.dump(results, f, indent=1, default=float)
-    print(f"[serve] wrote {args.out} in {results['wall_s']:.0f}s", flush=True)
+    print(f"[serve] wrote {out} in {results['wall_s']:.0f}s", flush=True)
 
 
 if __name__ == "__main__":

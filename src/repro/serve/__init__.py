@@ -1,8 +1,18 @@
-"""Placement-as-a-service: cached, batched, async placement serving.
+"""Placement-as-a-service: cached, batched, sharded placement serving.
 
-Escalation ladder (cheap -> expensive): canonical-fingerprint cache hit ->
-micro-batched zero-shot policy inference -> background superposition
-fine-tune, publishing improved placements back into the cache.
+Single-worker escalation ladder (cheap -> expensive): canonical-
+fingerprint cache hit -> persistent-store disk hit -> micro-batched
+zero-shot policy inference -> background superposition fine-tune,
+publishing improved placements back into the cache (monotonically).
+
+Multi-host tier (``serve.cluster``): N workers behind a consistent-hash
+router — zero-shot policy replicated, caches/fine-tunes sharded by graph
+fingerprint, cross-shard hits forwarded, admission control shedding
+overload to a degraded baseline fast path.  ``serve.persist`` backs every
+shard with an append-only, provenance-versioned on-disk store so restarts
+and rescales warm-start from disk and policy bumps invalidate stale
+entries.  See ``docs/serving.md`` for the operator guide and
+``docs/architecture.md`` for how the tier fits the whole reproduction.
 """
 from repro.serve.fingerprint import (cache_key, canonical_order,  # noqa: F401
                                      fingerprint_and_order, from_canonical,
@@ -10,6 +20,13 @@ from repro.serve.fingerprint import (cache_key, canonical_order,  # noqa: F401
                                      topology_fingerprint)
 from repro.serve.cache import CacheEntry, CacheStats, PlacementCache  # noqa: F401
 from repro.serve.batcher import Flush, MicroBatcher  # noqa: F401
+from repro.serve.persist import (PersistentStore, StoredEntry,  # noqa: F401
+                                 StoreStats, policy_hash)
+from repro.serve.admission import (AdmissionConfig,  # noqa: F401
+                                   AdmissionController, AdmissionStats,
+                                   degraded_placement)
 from repro.serve.service import (PlacementService, Request,  # noqa: F401
                                  ServeConfig, ServiceCosts, SimulatedClock,
                                  WallClock)
+from repro.serve.cluster import (ClusterConfig, HashRing,  # noqa: F401
+                                 PlacementCluster)

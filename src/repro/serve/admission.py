@@ -1,0 +1,115 @@
+"""Admission control for the placement-serving router.
+
+A single worker under overload grows its backlog without bound — and with
+it the tail latency of *every* request, including cheap cache hits queued
+behind expensive inference.  The router therefore gates each request
+before handing it to its home shard:
+
+* **lag shedding** — in simulated-clock mode a worker's clock running
+  ahead of the request's arrival time *is* its queue backlog in seconds;
+  a request whose home worker lags more than ``max_lag_s`` is shed.
+* **depth shedding** — a bound on the count of unresolved requests parked
+  at the worker (batcher + coalesced waiters + fine-tune queue).
+
+A shed request is not an error: it gets a **degraded fast-path answer**
+from a cheap baseline placer (the throughput-aware ``human_expert``
+heuristic, ``round_robin`` if that fails) at a fixed small cost, with
+``source == "shed"`` and an unknown (NaN) makespan — the placement is
+feasible-by-construction but unverified, which is exactly the contract of
+a load-shed response.  Bounding the queue this way is what bounds p99
+latency under overload (see ``BENCH_serve_cluster.json``'s overload
+section).
+
+Deadline pressure is handled one layer down: the worker's
+:class:`~repro.serve.batcher.MicroBatcher` flushes a group early when a
+member's deadline leaves only one batch's worth of slack
+(``ServeConfig.deadline_s``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict
+
+import numpy as np
+
+from repro.core import baselines as B
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionConfig:
+    """Router-side load-shedding knobs.
+
+    ``max_lag_s``/``max_queue_depth`` default to unlimited (admit all);
+    ``shed_s`` is the simulated cost of producing a degraded answer.
+    """
+    max_lag_s: float = math.inf        # shed if worker clock lags arrival
+    max_queue_depth: int = 10 ** 9     # shed if unresolved work exceeds
+    shed_s: float = 2e-4               # cost of the baseline fast path
+
+
+@dataclasses.dataclass
+class AdmissionStats:
+    """Counters for admission decisions at one router."""
+    admitted: int = 0
+    shed_lag: int = 0
+    shed_depth: int = 0
+
+    @property
+    def shed(self) -> int:
+        """Total shed requests (lag + depth)."""
+        return self.shed_lag + self.shed_depth
+
+    def as_dict(self) -> Dict[str, int]:
+        """Plain-dict view for merging into cluster stats."""
+        return {"admitted": self.admitted, "shed": self.shed,
+                "shed_lag": self.shed_lag, "shed_depth": self.shed_depth}
+
+
+class AdmissionController:
+    """Decides admit-vs-shed per request from the home worker's load.
+
+    Args:
+        config: thresholds and shed-path cost (:class:`AdmissionConfig`).
+    """
+
+    def __init__(self, config: AdmissionConfig = AdmissionConfig()):
+        self.cfg = config
+        self.stats = AdmissionStats()
+
+    def admit(self, lag_s: float, queue_depth: int) -> bool:
+        """True iff a request may enter a worker with the given load.
+
+        Args:
+            lag_s: seconds the worker's clock runs ahead of the request's
+                arrival (its queueing delay were it admitted now).
+            queue_depth: unresolved requests parked at the worker.
+        """
+        if lag_s > self.cfg.max_lag_s:
+            self.stats.shed_lag += 1
+            return False
+        if queue_depth > self.cfg.max_queue_depth:
+            self.stats.shed_depth += 1
+            return False
+        self.stats.admitted += 1
+        return True
+
+
+def degraded_placement(g, topo) -> np.ndarray:
+    """Cheap baseline placement for a shed request (no policy call).
+
+    Uses the throughput-aware ``human_expert`` heuristic and falls back to
+    ``round_robin`` if it raises; the result is a legal device assignment
+    but its makespan is *not* simulated (shed responses report NaN).
+
+    Args:
+        g: dataflow graph to place.
+        topo: target topology.
+
+    Returns:
+        i32[N] device assignment in the request graph's node order.
+    """
+    try:
+        return np.asarray(B.human_expert(g, topo), np.int32)
+    except Exception:
+        return np.asarray(B.round_robin(g, topo), np.int32)

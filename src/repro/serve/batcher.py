@@ -12,10 +12,17 @@ featurizer's bucketed padding, and flushes a group when it reaches
 Flushes are always padded to exactly ``max_batch`` rows (stragglers are
 backfilled with copies of the first graph and their outputs discarded), so
 a group compiles **one** XLA program ever, no matter how traffic arrives.
+
+Batching is also **deadline-aware**: requests may carry an absolute
+deadline, and a group whose earliest deadline is within ``flush_slack_s``
+(the caller's estimate of one batch's service time) flushes immediately
+instead of waiting out ``max_wait_s`` — so admission-control deadlines are
+honored without giving up batching for unhurried traffic.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any, Dict, Hashable, List, NamedTuple, Tuple
 
 from repro.core.featurize import GraphBatch, bucket_size, stack_batches
@@ -34,15 +41,28 @@ class _Group:
     items: List[Any]
     gbs: List[GraphBatch]
     times: List[float]
+    deadlines: List[float]
 
 
 class MicroBatcher:
+    """Shape-keyed queue that flushes full, timed-out, or deadline-pressed
+    groups of cache-miss requests as fixed-shape micro-batches.
+
+    Args:
+        max_batch: rows per flush (batch dim always padded to this).
+        max_wait_s: max queueing delay for a group's oldest request.
+        max_deg: featurizer degree cap; neighbor width pins to ``2*max_deg``.
+        flush_slack_s: estimated service time of one batch — a group
+            flushes early when its earliest deadline is this close.
+    """
+
     def __init__(self, max_batch: int = 8, max_wait_s: float = 0.05,
-                 max_deg: int = 8):
+                 max_deg: int = 8, flush_slack_s: float = 0.0):
         assert max_batch >= 1
         self.max_batch = max_batch
         self.max_wait_s = max_wait_s
         self.pad_k = 2 * max_deg   # featurize() concatenates in+out neighbors
+        self.flush_slack_s = flush_slack_s
         self._groups: Dict[Hashable, _Group] = {}
         self.enqueued = 0
         self.flushes = 0
@@ -51,35 +71,50 @@ class MicroBatcher:
         return sum(len(g.items) for g in self._groups.values())
 
     def pending_items(self):
+        """Yield every queued (not yet flushed) request item."""
         for g in self._groups.values():
             yield from g.items
 
     @staticmethod
     def group_key(topo_fp: str, num_devices: int, num_nodes: int) -> Tuple:
+        """Compiled-shape bucket key: (topology fp, D, node bucket)."""
         return (topo_fp, num_devices, bucket_size(num_nodes))
 
     # -------------------------------------------------------------- queue
-    def add(self, key: Hashable, item: Any, gb: GraphBatch,
-            now: float) -> None:
+    def add(self, key: Hashable, item: Any, gb: GraphBatch, now: float,
+            deadline: float = math.inf) -> None:
+        """Queue ``item`` (with its featurized ``gb``) under shape ``key``.
+
+        Args:
+            key: value from :meth:`group_key`.
+            item: opaque request handle returned in the flush.
+            gb: unpadded featurized graph for the request.
+            now: submit timestamp (drives ``max_wait_s``).
+            deadline: absolute response deadline, +inf when none.
+        """
         grp = self._groups.get(key)
         if grp is None:
-            grp = self._groups[key] = _Group([], [], [])
+            grp = self._groups[key] = _Group([], [], [], [])
         grp.items.append(item)
         grp.gbs.append(gb)
         grp.times.append(now)
+        grp.deadlines.append(deadline)
         self.enqueued += 1
 
     # -------------------------------------------------------------- flush
     def ready(self, now: float, force: bool = False) -> List[Flush]:
-        """Pop every group that is full or has waited out ``max_wait_s``
-        (``force`` drains everything, e.g. at shutdown)."""
+        """Pop every group that is full, has waited out ``max_wait_s``, or
+        has a member deadline within ``flush_slack_s`` (``force`` drains
+        everything, e.g. at shutdown)."""
         out: List[Flush] = []
         for key in list(self._groups):
             grp = self._groups[key]
             while len(grp.items) >= self.max_batch:
                 out.append(self._make_flush(key, grp, self.max_batch))
             if grp.items and (force or
-                              now - grp.times[0] >= self.max_wait_s):
+                              now - grp.times[0] >= self.max_wait_s or
+                              now >= min(grp.deadlines) -
+                              self.flush_slack_s):
                 out.append(self._make_flush(key, grp, len(grp.items)))
             if not grp.items:
                 del self._groups[key]
@@ -89,6 +124,7 @@ class MicroBatcher:
         items, grp.items = grp.items[:take], grp.items[take:]
         gbs, grp.gbs = grp.gbs[:take], grp.gbs[take:]
         grp.times = grp.times[take:]
+        grp.deadlines = grp.deadlines[take:]
         # pad the batch dimension to max_batch so each group key maps to a
         # single compiled shape; pad node dim to the group's bucket
         backfill = self.max_batch - len(gbs)

@@ -10,6 +10,11 @@ Eviction is LRU or LFU (ties broken by recency) over a hard entry
 capacity.  The cache keeps running hit/miss/eviction/publish counters and
 accumulated lookup latency so the service can report hit rate and mean
 lookup cost without instrumenting callers.
+
+Entries also carry **provenance** (``policy_hash``, ``finetune_step``) so
+they can round-trip through the persistent store (``serve.persist``) and
+be invalidated — not served — after a policy-version bump; see
+``docs/serving.md`` for the provenance model.
 """
 from __future__ import annotations
 
@@ -25,16 +30,20 @@ Key = Tuple[str, str]
 
 @dataclasses.dataclass
 class CacheEntry:
+    """One cached placement plus its quality and provenance metadata."""
     placement: np.ndarray        # i32[N] in canonical node order
     predicted_makespan: float    # simulator estimate at insert time
     measured_makespan: float     # best confirmed makespan so far
     source: str = "zero_shot"    # "zero_shot" | "finetuned" | "external"
     hits: int = 0
     publishes: int = 0
+    finetune_step: int = 0       # fine-tune iterations behind the placement
+    policy_hash: str = ""        # version of the policy that produced it
 
 
 @dataclasses.dataclass
 class CacheStats:
+    """Running hit/miss/eviction/publish counters for one cache."""
     hits: int = 0
     misses: int = 0
     evictions: int = 0
@@ -43,13 +52,16 @@ class CacheStats:
 
     @property
     def requests(self) -> int:
+        """Total lookups (hits + misses)."""
         return self.hits + self.misses
 
     @property
     def hit_rate(self) -> float:
+        """Fraction of lookups served from the cache (0.0 when idle)."""
         return self.hits / self.requests if self.requests else 0.0
 
     def as_dict(self) -> Dict[str, float]:
+        """Plain-dict view for merging into service stats."""
         return {"hits": self.hits, "misses": self.misses,
                 "evictions": self.evictions, "publishes": self.publishes,
                 "hit_rate": self.hit_rate, "lookup_s": self.lookup_s}
@@ -76,8 +88,16 @@ class PlacementCache:
     def __contains__(self, key: Key) -> bool:
         return key in self._entries
 
+    def items(self):
+        """Iterate (key, entry) pairs in recency order, oldest first
+        (no stats/recency side effects — used for shutdown snapshots)."""
+        return iter(self._entries.items())
+
     # ------------------------------------------------------------- lookup
     def get(self, key: Key) -> Optional[CacheEntry]:
+        """Lookup ``key``; counts a hit/miss and refreshes recency.
+
+        Returns the stored entry or None on a miss."""
         t0 = time.perf_counter()
         entry = self._entries.get(key)
         if entry is None:
@@ -95,6 +115,7 @@ class PlacementCache:
 
     # ------------------------------------------------------------- insert
     def put(self, key: Key, entry: CacheEntry) -> None:
+        """Insert/replace ``entry`` unconditionally, evicting as needed."""
         if key in self._entries:
             self._entries[key] = entry
             self._entries.move_to_end(key)
@@ -104,8 +125,17 @@ class PlacementCache:
         self._entries[key] = entry
 
     def publish(self, key: Key, placement: np.ndarray, measured: float,
-                source: str = "finetuned") -> bool:
+                source: str = "finetuned", finetune_step: int = 0,
+                policy_hash: str = "") -> bool:
         """Install an improved placement; refuses regressions.
+
+        Args:
+            key: (graph fingerprint, topology fingerprint) cache key.
+            placement: i32[N] devices in **canonical** node order.
+            measured: simulator-confirmed makespan of ``placement``.
+            source: provenance label ("zero_shot", "finetuned", ...).
+            finetune_step: fine-tune iterations behind the placement.
+            policy_hash: version of the policy that produced it.
 
         Returns True iff the entry was updated (absent key -> inserted).
         The monotone-improvement guarantee the regret benchmark leans on
@@ -117,11 +147,15 @@ class PlacementCache:
         if cur is None:
             self.put(key, CacheEntry(np.asarray(placement, np.int32),
                                      measured, measured, source=source,
-                                     publishes=1))
+                                     publishes=1,
+                                     finetune_step=finetune_step,
+                                     policy_hash=policy_hash))
         else:
             cur.placement = np.asarray(placement, np.int32)
             cur.measured_makespan = float(measured)
             cur.source = source
+            cur.finetune_step = finetune_step
+            cur.policy_hash = policy_hash
             cur.publishes += 1
         self.stats.publishes += 1
         return True

@@ -1,0 +1,280 @@
+"""Simulated multi-host placement-serving tier: router + sharded workers.
+
+One :class:`~repro.serve.service.PlacementService` is one worker; this
+module scales the tier horizontally the way the GDP serving story wants
+it scaled:
+
+* the cheap **zero-shot policy is replicated** — every worker reads the
+  same shared parameter tree (fine-tune escalations fork it per graph and
+  never mutate it, so replication is free and always consistent);
+* the expensive **learned state is sharded** — graph fingerprints are
+  consistent-hashed onto workers, so a graph's cache line, fine-tune
+  escalation, and persisted placements all live on its *home shard*:
+  repeat traffic always lands where the warm state is, aggregate cache
+  capacity grows with the worker count, and no two shards ever fine-tune
+  the same key;
+* **cross-shard hits are forwarded** — when routing moved a key (e.g.
+  after a rescale) and its home shard is cold, the router peeks sibling
+  caches and lets the home shard *adopt* the entry (a monotone publish,
+  also persisted) instead of re-paying inference or a duplicate
+  fine-tune;
+* each worker owns a :class:`~repro.serve.service.SimulatedClock`; a
+  worker clock running ahead of arrivals is that shard's backlog, which
+  the router's :class:`~repro.serve.admission.AdmissionController` reads
+  to shed overload onto a degraded baseline fast path.
+
+With a ``store_root`` attached every worker appends to its own segment
+files of one shared :class:`~repro.serve.persist.PersistentStore` root,
+and a restarted — or **rescaled** — cluster replays all segments and
+warms each shard with exactly the keys that now route to it.  Provenance
+versioning (policy hash) makes a policy bump invalidate stale entries at
+load instead of serving them.
+
+The whole tier is deterministic: routing is a blake2b hash ring, clocks
+are logical, and service times come from ``ServiceCosts`` — so the
+cluster benchmark's scaling/restart/overload numbers are exact functions
+of the request trace.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Any, Dict, List, Optional, Set, Tuple
+
+import numpy as np
+
+from repro.core.ppo import PPOTrainer
+from repro.serve import fingerprint as FP
+from repro.serve.admission import (AdmissionConfig, AdmissionController,
+                                   degraded_placement)
+from repro.serve.cache import CacheEntry
+from repro.serve.persist import PersistentStore, policy_hash
+from repro.serve.service import (PlacementService, Request, ServeConfig,
+                                 SimulatedClock)
+from repro.sim.device import Topology
+
+Key = Tuple[str, str]
+
+
+def _hash64(s: str) -> int:
+    """Deterministic 64-bit hash (process-independent, unlike ``hash``)."""
+    return int.from_bytes(hashlib.blake2b(s.encode(),
+                                          digest_size=8).digest(), "big")
+
+
+class HashRing:
+    """Consistent-hash ring mapping graph fingerprints to worker ids.
+
+    Each worker owns ``virtual_nodes`` points on a 64-bit ring; a
+    fingerprint routes to the owner of the first point at or after its
+    hash.  Virtual nodes smooth the key distribution, and rescaling from
+    N to N+1 workers only moves the keys the new worker's points capture
+    (~1/(N+1) of them) — everything else keeps its home shard, which is
+    what lets a rescaled cluster keep most of its warm state.
+
+    Args:
+        num_workers: worker count (ring owners ``0..num_workers-1``).
+        virtual_nodes: ring points per worker.
+    """
+
+    def __init__(self, num_workers: int, virtual_nodes: int = 64):
+        assert num_workers >= 1 and virtual_nodes >= 1
+        self.num_workers = num_workers
+        points = sorted((_hash64(f"worker-{w}#vn-{v}"), w)
+                        for w in range(num_workers)
+                        for v in range(virtual_nodes))
+        self._hashes = np.asarray([p[0] for p in points], np.uint64)
+        self._owners = np.asarray([p[1] for p in points], np.int64)
+
+    def route(self, graph_fp: str) -> int:
+        """Home worker id for ``graph_fp`` (deterministic)."""
+        h = np.uint64(_hash64(graph_fp))
+        i = int(np.searchsorted(self._hashes, h, side="left"))
+        return int(self._owners[i % len(self._owners)])
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterConfig:
+    """Knobs for the simulated multi-host tier.
+
+    ``serve`` is the per-worker template — each worker gets a copy with a
+    distinct RNG seed, forced to simulated-clock mode.  ``forward_s`` is
+    the simulated cost of fetching a cross-shard entry.
+    """
+    num_workers: int = 2
+    virtual_nodes: int = 64
+    serve: ServeConfig = dataclasses.field(
+        default_factory=lambda: ServeConfig(simulated=True))
+    admission: AdmissionConfig = dataclasses.field(
+        default_factory=AdmissionConfig)
+    forward_s: float = 1e-3
+
+
+class PlacementCluster:
+    """Router + N sharded :class:`PlacementService` workers (simulated).
+
+    Args:
+        trainer: PPO trainer whose parameters are the replicated
+            zero-shot policy (read-only to the serving tier).
+        config: cluster knobs (:class:`ClusterConfig`).
+        store_root: optional directory of a shared persistent store; when
+            given, each worker warm-starts its shard from it and mirrors
+            publishes into its own segment files there.
+    """
+
+    def __init__(self, trainer: PPOTrainer, config: ClusterConfig,
+                 store_root=None):
+        self.cfg = config
+        self.trainer = trainer
+        self.policy_hash = policy_hash(trainer.state.params)
+        self.ring = HashRing(config.num_workers, config.virtual_nodes)
+        self.admission = AdmissionController(config.admission)
+        self.workers: List[PlacementService] = []
+        for w in range(config.num_workers):
+            scfg = dataclasses.replace(config.serve, simulated=True,
+                                       seed=config.serve.seed + 1009 * w)
+            store = (PersistentStore(store_root, self.policy_hash,
+                                     worker_tag=f"w{w}")
+                     if store_root is not None else None)
+            self.workers.append(PlacementService(
+                trainer, scfg, SimulatedClock(), store=store,
+                preload=lambda key, w=w: self.ring.route(key[0]) == w))
+        self.shed_completed: List[Request] = []
+        self.counts: Dict[str, int] = {"forwarded": 0, "shed": 0}
+        self._next_shed_id = -1          # negative ids: router-made answers
+        self._keys_per_worker: List[Set[Key]] = [
+            set() for _ in range(config.num_workers)]
+        self._topo_fp = FP.TopologyFingerprinter()
+
+    # ------------------------------------------------------------ routing
+    def home(self, g) -> int:
+        """Home worker id for graph ``g`` (fingerprints it)."""
+        return self.ring.route(FP.graph_fingerprint(g))
+
+    def _sibling_entry(self, key: Key, home: int) -> Optional[CacheEntry]:
+        """Best entry for ``key`` cached on any non-home shard."""
+        best: Optional[CacheEntry] = None
+        for w, svc in enumerate(self.workers):
+            if w == home:
+                continue
+            ent = svc.cache.peek(key)
+            if ent is not None and (best is None or
+                                    ent.measured_makespan <
+                                    best.measured_makespan):
+                best = ent
+        return best
+
+    # ------------------------------------------------------------- submit
+    def submit(self, g, topo: Topology, arrival_t: float = 0.0) -> Request:
+        """Route one request to its home shard through admission control.
+
+        Args:
+            g: dataflow graph to place.
+            topo: target topology.
+            arrival_t: logical arrival time at the router.
+
+        Returns the home worker's :class:`Request`, or a router-resolved
+        degraded one (``source == "shed"``, NaN makespan) when admission
+        sheds it.
+        """
+        fp, order = FP.fingerprint_and_order(g)
+        w = self.ring.route(fp)
+        svc = self.workers[w]
+        key = (fp, self._topo_fp(topo))
+        lag = max(0.0, svc.clock.now() - arrival_t)
+        if not self.admission.admit(lag, svc.queue_depth()):
+            return self._shed(g, topo, arrival_t, key, order)
+        self._keys_per_worker[w].add(key)
+        if svc.cache.peek(key) is None:
+            sib = self._sibling_entry(key, w)
+            if sib is not None:        # cross-shard forward, no re-infer
+                svc.clock.advance_to(arrival_t)
+                svc.clock.advance(self.cfg.forward_s)
+                svc.adopt(key, sib)
+                self.counts["forwarded"] += 1
+        req = svc.submit(g, topo, arrival_t=arrival_t,
+                         fp_order=(fp, order), topo_fp=key[1])
+        # the worker stamps arrival at the time it *saw* the request (its
+        # clock may already be ahead); the router knows the true arrival,
+        # so cluster latencies include time queued behind a busy shard
+        req.arrival_t = min(req.arrival_t, arrival_t)
+        return req
+
+    def _shed(self, g, topo: Topology, arrival_t: float, key: Key,
+              order: np.ndarray) -> Request:
+        """Resolve a shed request with the degraded baseline fast path."""
+        req = Request(self._next_shed_id, g, topo, arrival_t, key, order)
+        self._next_shed_id -= 1
+        req.placement = degraded_placement(g, topo)
+        req.makespan = float("nan")     # unverified by construction
+        req.done_t = arrival_t + self.cfg.admission.shed_s
+        req.source = req.entry_source = "shed"
+        self.counts["shed"] += 1
+        self.shed_completed.append(req)
+        return req
+
+    # ------------------------------------------------------------ workers
+    def step(self, force: bool = False) -> None:
+        """One async turn on every worker (timed-out flushes, fine-tunes)."""
+        for svc in self.workers:
+            svc.step(force=force)
+
+    def drain(self) -> None:
+        """Flush every queue on every worker (end of trace)."""
+        for svc in self.workers:
+            svc.drain()
+
+    def shutdown(self) -> None:
+        """Drain, checkpoint every shard's cache to the store, compact and
+        close the segment files.  Stats remain readable afterwards."""
+        for svc in self.workers:
+            svc.shutdown()
+
+    # -------------------------------------------------------------- stats
+    def completed(self) -> List[Request]:
+        """Every resolved request: worker-served plus router-shed."""
+        out: List[Request] = []
+        for svc in self.workers:
+            out.extend(svc.completed)
+        out.extend(self.shed_completed)
+        return out
+
+    def makespan(self) -> float:
+        """Cluster busy time: the latest worker clock (logical seconds)."""
+        return max(svc.clock.now() for svc in self.workers)
+
+    def stats(self) -> Dict[str, Any]:
+        """Aggregate tier stats: merged ladder counts, cluster-wide
+        latency percentiles (shed answers included), admission and
+        forwarding counters, and a per-worker breakdown for shard
+        balance."""
+        out: Dict[str, Any] = dict(self.counts)
+        out.update(self.admission.stats.as_dict())
+        agg: Dict[str, float] = {}
+        per_worker = []
+        for w, svc in enumerate(self.workers):
+            st = svc.stats()
+            for k in ("cache", "disk", "zero_shot", "baseline", "finetunes",
+                      "finetune_published", "forward_adopted",
+                      "stale_served", "hits", "misses", "evictions",
+                      "publishes", "served"):
+                agg[k] = agg.get(k, 0) + st.get(k, 0)
+            per_worker.append({
+                "worker": w, "clock_s": svc.clock.now(),
+                "served": st["served"], "hit_rate": st["hit_rate"],
+                "unique_keys": len(self._keys_per_worker[w]),
+                "cache_entries": len(svc.cache),
+            })
+        out.update(agg)
+        reqs = out.get("hits", 0) + out.get("misses", 0)
+        out["hit_rate"] = out.get("hits", 0) / reqs if reqs else 0.0
+        done = self.completed()
+        out["served_total"] = len(done)
+        lats = np.asarray([r.latency for r in done], np.float64)
+        if lats.size:
+            out["latency_p50_s"] = float(np.percentile(lats, 50))
+            out["latency_p99_s"] = float(np.percentile(lats, 99))
+            out["latency_mean_s"] = float(lats.mean())
+        out["makespan_s"] = self.makespan()
+        out["per_worker"] = per_worker
+        return out

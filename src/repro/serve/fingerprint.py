@@ -176,7 +176,30 @@ def topology_fingerprint(topo: Topology) -> str:
     return h.hexdigest()
 
 
+class TopologyFingerprinter:
+    """Identity-memoized :func:`topology_fingerprint`.
+
+    Serving traffic reuses a handful of ``Topology`` objects, so hashing
+    the ``[D, D]`` matrices once per *object* (strong refs pin the ids)
+    beats re-hashing per request.  Both the service and the cluster
+    router hold one of these."""
+
+    def __init__(self):
+        self._memo: dict = {}
+
+    def __call__(self, topo: Topology) -> str:
+        """Fingerprint ``topo``, memoized by object identity."""
+        hit = self._memo.get(id(topo))
+        if hit is not None and hit[0] is topo:
+            return hit[1]
+        fp = topology_fingerprint(topo)
+        self._memo[id(topo)] = (topo, fp)
+        return fp
+
+
 def cache_key(g: DataflowGraph, topo: Topology) -> Tuple[str, str]:
+    """(graph fingerprint, topology fingerprint) — the cache/store key
+    identifying one placement problem up to node relabeling."""
     return graph_fingerprint(g), topology_fingerprint(topo)
 
 

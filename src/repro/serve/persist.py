@@ -1,0 +1,295 @@
+"""Persistent, provenance-versioned placement store (disk rung of the cache).
+
+The in-memory :class:`~repro.serve.cache.PlacementCache` dies with its
+process; this module backs it with an **append-only log of publish events**
+so a restarted (or rescaled) serving cluster warm-starts from disk instead
+of re-paying zero-shot inference and fine-tune escalations for every key.
+
+Layout and invariants:
+
+* A store *root* directory holds JSONL **segments** named
+  ``seg-<worker>-<nnnnnn>.jsonl``.  Every segment line is one publish (or
+  shutdown-snapshot) record: the canonical-order placement, predicted and
+  best-measured makespans, cache hit/publish counters, and a
+  **provenance** triple — policy hash, fine-tune step, topology digest.
+* Writers are single-owner: a store instance appends only to its own
+  ``<worker>`` segments, but :meth:`PersistentStore.load` replays *every*
+  segment under the root, so any worker (including one that joined after a
+  rescale) sees the whole cluster's history.
+* Replay is **monotone**: for each key the best measured makespan wins,
+  and hit/publish counters take the per-key maximum (they only grow), so
+  the monotone-publish guarantee of the in-memory cache survives the
+  round-trip regardless of record order or duplication.
+* Records whose policy hash differs from the loading store's
+  ``policy_hash`` are **invalidated** (counted, never surfaced): after a
+  policy-version bump the cluster re-infers rather than serving stale
+  placements.  A topology digest that disagrees with the record's own key
+  marks the record corrupt and it is skipped.
+* A torn tail (crash mid-append) must not poison a restart: the first
+  undecodable line of a segment abandons *that segment's remainder* and
+  replay continues with the next segment.
+
+:meth:`PersistentStore.compact` rewrites the owner's live view as a single
+fresh segment and deletes the owner's old segments (other workers' files
+are never touched, so concurrent owners cannot clobber each other).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+from pathlib import Path
+from typing import Dict, Iterator, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.serve.cache import CacheEntry
+
+Key = Tuple[str, str]
+
+
+def policy_hash(params) -> str:
+    """Hex digest identifying an exact policy parameter pytree.
+
+    Args:
+        params: pytree of arrays (e.g. ``trainer.state.params``).
+
+    Returns:
+        16-hex-char blake2b digest over the tree structure and the raw
+        bytes of every leaf — any weight change changes the hash, so it
+        versions cached placements produced by that policy.
+    """
+    h = hashlib.blake2b(digest_size=8)
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    h.update(repr(treedef).encode())
+    for leaf in leaves:
+        arr = np.asarray(leaf)
+        h.update(str(arr.dtype).encode())
+        h.update(np.int64(arr.shape).tobytes())
+        h.update(arr.tobytes())
+    return h.hexdigest()
+
+
+@dataclasses.dataclass
+class StoredEntry:
+    """Merged on-disk state for one (graph_fp, topology_fp) key."""
+    placement: np.ndarray     # i32[N] in canonical node order
+    predicted_makespan: float
+    measured_makespan: float
+    source: str               # "zero_shot" | "finetuned" | ...
+    hits: int
+    publishes: int
+    finetune_step: int        # fine-tune iterations behind this placement
+    policy_hash: str          # hash of the policy that produced it
+
+    def to_cache_entry(self) -> CacheEntry:
+        """Materialize as an in-memory cache entry (counters preserved)."""
+        return CacheEntry(np.asarray(self.placement, np.int32),
+                          self.predicted_makespan, self.measured_makespan,
+                          source=self.source, hits=self.hits,
+                          publishes=self.publishes,
+                          finetune_step=self.finetune_step,
+                          policy_hash=self.policy_hash)
+
+
+@dataclasses.dataclass
+class StoreStats:
+    """Replay/append counters for one :class:`PersistentStore` instance."""
+    records_loaded: int = 0       # fresh records merged into the view
+    records_invalidated: int = 0  # stale policy hash — dropped on load
+    records_corrupt: int = 0      # undecodable / self-inconsistent lines
+    records_written: int = 0
+    compactions: int = 0
+
+    def as_dict(self) -> Dict[str, int]:
+        """Plain-dict view for merging into service/cluster stats."""
+        return dataclasses.asdict(self)
+
+
+class PersistentStore:
+    """Append-only JSONL placement store with provenance versioning.
+
+    Args:
+        root: directory holding the segment files (created if absent).
+        policy_hash: version of the policy this process serves; records
+            carrying any other hash are invalidated at load time.
+        worker_tag: namespace for segments this instance appends/compacts
+            (one tag per concurrent writer, e.g. ``"w3"``).
+        compact_min_records: :meth:`maybe_compact` triggers once this many
+            owned records exist and they exceed twice the owned key count.
+    """
+
+    def __init__(self, root, policy_hash: str, worker_tag: str = "w0",
+                 compact_min_records: int = 512):
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.policy_hash = policy_hash
+        self.worker_tag = worker_tag
+        self.compact_min_records = compact_min_records
+        self.stats = StoreStats()
+        self._view: Dict[Key, StoredEntry] = {}     # global merged view
+        self._own: Dict[Key, StoredEntry] = {}      # owned segments only
+        self._own_records = 0
+        self._fh = None
+        self._load()
+
+    # -------------------------------------------------------------- segments
+    def _segments(self, own_only: bool = False):
+        pat = (f"seg-{self.worker_tag}-*.jsonl" if own_only
+               else "seg-*.jsonl")
+        return sorted(self.root.glob(pat))
+
+    def _next_segment_path(self) -> Path:
+        nums = [int(p.stem.rsplit("-", 1)[1])
+                for p in self._segments(own_only=True)]
+        return self.root / f"seg-{self.worker_tag}-{max(nums, default=-1) + 1:06d}.jsonl"
+
+    def _open_for_append(self) -> None:
+        if self._fh is None:
+            self._fh = open(self._next_segment_path(), "a")
+
+    # ----------------------------------------------------------------- load
+    def _merge(self, view: Dict[Key, StoredEntry], key: Key,
+               rec: StoredEntry) -> None:
+        cur = view.get(key)
+        if cur is None:
+            view[key] = rec
+        elif rec.measured_makespan < cur.measured_makespan:
+            rec.hits = max(rec.hits, cur.hits)
+            rec.publishes = max(rec.publishes, cur.publishes)
+            view[key] = rec
+        else:
+            cur.hits = max(cur.hits, rec.hits)
+            cur.publishes = max(cur.publishes, rec.publishes)
+
+    def _parse(self, line: str) -> Tuple[Key, StoredEntry]:
+        d = json.loads(line)
+        key = (str(d["gfp"]), str(d["tfp"]))
+        if d["td"] != key[1]:           # provenance/key mixup => corrupt
+            raise ValueError("topology digest does not match record key")
+        entry = StoredEntry(np.asarray(d["pl"], np.int32),
+                            float(d["pred"]), float(d["mk"]),
+                            str(d["src"]), int(d["hits"]), int(d["pubs"]),
+                            int(d["fts"]), str(d["ph"]))
+        if not np.isfinite(entry.measured_makespan):
+            raise ValueError("non-finite measured makespan")
+        return key, entry
+
+    @staticmethod
+    def _dump(key: Key, rec: StoredEntry) -> str:
+        """One JSONL line — the single writer of the segment schema
+        (``_parse`` is the single reader)."""
+        return json.dumps({
+            "gfp": key[0], "tfp": key[1], "td": key[1],
+            "pl": rec.placement.tolist(), "pred": rec.predicted_makespan,
+            "mk": rec.measured_makespan, "src": rec.source,
+            "hits": rec.hits, "pubs": rec.publishes,
+            "fts": rec.finetune_step, "ph": rec.policy_hash,
+        }) + "\n"
+
+    def _load(self) -> None:
+        for seg in self._segments():
+            own = seg.name.startswith(f"seg-{self.worker_tag}-")
+            with open(seg) as f:
+                for line in f:
+                    if not line.endswith("\n"):   # torn tail: no newline
+                        self.stats.records_corrupt += 1
+                        break
+                    try:
+                        key, rec = self._parse(line)
+                    except (json.JSONDecodeError, KeyError, ValueError,
+                            TypeError):
+                        # everything after a torn/corrupt line in an
+                        # append-only segment is untrusted — skip the rest
+                        self.stats.records_corrupt += 1
+                        break
+                    if own:
+                        self._own_records += 1
+                        self._merge(self._own, key,
+                                    dataclasses.replace(rec))
+                    if rec.policy_hash != self.policy_hash:
+                        self.stats.records_invalidated += 1
+                        continue
+                    self.stats.records_loaded += 1
+                    self._merge(self._view, key, rec)
+
+    # --------------------------------------------------------------- lookup
+    def __len__(self) -> int:
+        return len(self._view)
+
+    def lookup(self, key: Key) -> Optional[StoredEntry]:
+        """Best fresh (current-policy) entry for ``key``, else None."""
+        return self._view.get(key)
+
+    def items(self) -> Iterator[Tuple[Key, StoredEntry]]:
+        """Iterate the fresh merged view (for cache preloading)."""
+        return iter(self._view.items())
+
+    # --------------------------------------------------------------- append
+    def record(self, key: Key, entry: CacheEntry,
+               finetune_step: int = 0) -> None:
+        """Append one publish/snapshot record for ``key``.
+
+        Args:
+            key: (graph fingerprint, topology fingerprint) cache key.
+            entry: in-memory cache entry to persist; its placement must be
+                in canonical node order.
+            finetune_step: fine-tune iterations behind this placement
+                (0 for zero-shot / baseline placements).
+        """
+        ph = entry.policy_hash or self.policy_hash
+        rec = StoredEntry(np.asarray(entry.placement, np.int32),
+                          float(entry.predicted_makespan),
+                          float(entry.measured_makespan), entry.source,
+                          int(entry.hits), int(entry.publishes),
+                          int(finetune_step), ph)
+        self._open_for_append()
+        self._fh.write(self._dump(key, rec))
+        self._fh.flush()
+        self.stats.records_written += 1
+        self._own_records += 1
+        self._merge(self._own, key, dataclasses.replace(rec))
+        if ph == self.policy_hash:
+            self._merge(self._view, key, rec)
+
+    # -------------------------------------------------------------- compact
+    def compact(self) -> int:
+        """Rewrite this worker's segments as one merged segment.
+
+        Only segments owned by ``worker_tag`` are merged and deleted —
+        concurrent writers' files are left alone.  Merged records keep the
+        monotone-best placement and the max hit/publish counters, so
+        LRU/LFU state survives.  Returns the number of records written.
+        """
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None
+        old = self._segments(own_only=True)
+        path = self.root / f"seg-{self.worker_tag}-{0 if not old else int(old[-1].stem.rsplit('-', 1)[1]) + 1:06d}.jsonl"
+        tmp = path.with_suffix(".tmp")
+        with open(tmp, "w") as f:
+            for key, rec in sorted(self._own.items()):
+                f.write(self._dump(key, rec))
+        os.replace(tmp, path)
+        for seg in old:
+            seg.unlink()
+        self._own_records = len(self._own)
+        self.stats.compactions += 1
+        return len(self._own)
+
+    def maybe_compact(self) -> bool:
+        """Compact when owned records outnumber owned keys 2:1 past the
+        configured floor.  Returns True iff a compaction ran."""
+        if (self._own_records >= self.compact_min_records
+                and self._own_records > 2 * max(1, len(self._own))):
+            self.compact()
+            return True
+        return False
+
+    def close(self) -> None:
+        """Flush and release the append handle (load view stays usable)."""
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None

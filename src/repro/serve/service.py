@@ -6,32 +6,45 @@ into a system):
 1. **Cache hit** — the request's (graph, topology) fingerprint is known:
    return the stored placement remapped through the request graph's
    canonical order.  O(lookup).
-2. **Zero-shot batch inference** — cache misses are micro-batched by
+2. **Disk hit** — when a persistent store (``serve.persist``) is attached,
+   a memory miss probes the on-disk view before paying inference; fresh
+   (current-policy) entries are re-admitted to the cache and served.
+3. **Zero-shot batch inference** — remaining misses are micro-batched by
    compiled shape and served by ONE jitted policy call per flush
    (``policy.sample_batch``); the best *valid* sampled placement (falling
    back to the best feasible baseline if none is valid) is returned and
    inserted into the cache.
-3. **Fine-tune escalation** — if the zero-shot makespan trails the best
+4. **Fine-tune escalation** — if the zero-shot makespan trails the best
    baseline by more than ``escalate_margin``, the graph is queued for a
    background superposition fine-tune (a PPO fork of the shared policy via
    ``ppo.clone_state``; the base policy is never mutated).  Improved
    placements are *published* back into the cache, so repeat traffic picks
    them up — the cache warms toward fine-tuned quality.
 
+Every publish is mirrored to the persistent store (when attached) with
+versioned provenance (policy hash, fine-tune step, topology digest), so a
+restarted service warm-starts from disk and a policy-version bump
+invalidates stale entries instead of serving them.
+
 Determinism: with ``simulated=True`` the service charges a deterministic
 service-time model (``ServiceCosts``) against a :class:`SimulatedClock`
 instead of reading wall time, so throughput / latency / hit-rate are exact
 functions of the request trace and unit-testable.  Batches flush when full
-at submit time or when their oldest request has out-waited ``max_wait_s``
-at the next ``step()``.
+at submit time, when their oldest request has out-waited ``max_wait_s`` at
+the next ``step()``, or early when a request's deadline (``deadline_s``)
+leaves only one batch's worth of slack.
+
+One ``PlacementService`` is one worker; ``serve.cluster`` shards a fleet
+of them behind a consistent-hash router with admission control.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from collections import deque
 from functools import partial
-from typing import Any, Deque, Dict, List, Optional, Tuple
+from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
@@ -45,7 +58,9 @@ from repro.sim.device import Topology
 from repro.sim.scheduler import Env, prepare_sim_graph
 from repro.serve import fingerprint as FP
 from repro.serve.batcher import MicroBatcher
-from repro.serve.cache import PlacementCache
+from repro.serve.cache import CacheEntry, PlacementCache
+from repro.serve.persist import PersistentStore
+from repro.serve.persist import policy_hash as _policy_hash
 
 
 # ------------------------------------------------------------------ clocks
@@ -54,27 +69,36 @@ class WallClock:
     simulated = False
 
     def now(self) -> float:
+        """Current wall time in seconds (monotonic)."""
         return time.perf_counter()
 
-    def advance(self, dt: float) -> None:   # wall time advances itself
+    def advance(self, dt: float) -> None:
+        """No-op: wall time advances itself."""
         pass
 
 
 class SimulatedClock:
-    """Deterministic logical time the driver and service advance explicitly."""
+    """Deterministic logical time the driver and service advance explicitly.
+
+    In a multi-host cluster each worker owns one of these — a worker's
+    clock running ahead of arrivals *is* its queue backlog, which the
+    router's admission control reads as load."""
     simulated = True
 
     def __init__(self, t0: float = 0.0):
         self._t = float(t0)
 
     def now(self) -> float:
+        """Current logical time in seconds."""
         return self._t
 
     def advance(self, dt: float) -> None:
+        """Charge ``dt`` seconds of work (must be non-negative)."""
         assert dt >= 0.0, dt
         self._t += dt
 
     def advance_to(self, t: float) -> None:
+        """Fast-forward to ``t`` if it is in the future (never rewinds)."""
         self._t = max(self._t, float(t))
 
 
@@ -82,6 +106,7 @@ class SimulatedClock:
 class ServiceCosts:
     """Deterministic service-time model charged in simulated-clock mode."""
     lookup_s: float = 1e-4            # cache probe + canonical remap
+    store_lookup_s: float = 5e-4      # on-disk view probe + re-admit
     batch_base_s: float = 0.05        # one jitted policy call
     batch_per_graph_s: float = 0.01   # marginal slot cost inside the call
     single_per_graph_s: float = 0.04  # unbatched call, for rate modeling
@@ -90,10 +115,12 @@ class ServiceCosts:
 
 @dataclasses.dataclass(frozen=True)
 class ServeConfig:
+    """Knobs for one serving worker (cache, batching, escalation)."""
     cache_capacity: int = 512
     cache_policy: str = "lru"          # "lru" | "lfu"
     max_batch: int = 8
     max_wait_s: float = 0.05
+    deadline_s: float = math.inf       # per-request deadline (early flush)
     num_samples: int = 4               # sampled placements per request
     temperature: float = 0.25          # near-greedy serving decode
     escalate_margin: float = 0.10      # fine-tune if zs > (1+margin)*baseline
@@ -107,6 +134,7 @@ class ServeConfig:
 
 @dataclasses.dataclass
 class Request:
+    """One placement request and, once resolved, its response."""
     req_id: int
     graph: Any
     topo: Topology
@@ -116,11 +144,12 @@ class Request:
     done_t: Optional[float] = None
     placement: Optional[np.ndarray] = None  # graph node order
     makespan: float = float("inf")
-    source: str = "pending"    # cache | zero_shot | baseline | pending
+    source: str = "pending"    # cache | disk | zero_shot | baseline | shed
     entry_source: str = ""     # provenance of the cache line that served it
 
     @property
     def latency(self) -> float:
+        """Response time (done - arrival); requires a resolved request."""
         assert self.done_t is not None, "request not resolved yet"
         return self.done_t - self.arrival_t
 
@@ -157,58 +186,84 @@ class PlacementService:
     ``trainer`` carries the shared (ideally pre-trained) GDP policy used
     for zero-shot inference; fine-tune escalations fork it per graph and
     publish only placements, never parameters.
+
+    Args:
+        trainer: PPO trainer holding the zero-shot policy parameters.
+        config: serving knobs (:class:`ServeConfig`).
+        clock: explicit clock; defaults to a fresh simulated/wall clock
+            per ``config.simulated``.
+        store: optional :class:`~repro.serve.persist.PersistentStore` —
+            the cache warm-starts from its fresh entries, every publish is
+            mirrored to it, and memory misses probe it before inference.
+        preload: optional key predicate limiting which store entries are
+            re-admitted at startup (a cluster passes its shard router so
+            each worker only warms its own shard).
     """
 
     def __init__(self, trainer: PPOTrainer, config: ServeConfig = ServeConfig(),
-                 clock=None):
+                 clock=None, store: Optional[PersistentStore] = None,
+                 preload: Optional[Callable[[Tuple[str, str]], bool]] = None):
         self.trainer = trainer
         self.pcfg = trainer.pcfg
         self.cfg = config
         self.clock = clock or (SimulatedClock() if config.simulated
                                else WallClock())
+        self.store = store
+        self.policy_hash = (store.policy_hash if store is not None
+                            else _policy_hash(trainer.state.params))
         self.cache = PlacementCache(config.cache_capacity, config.cache_policy)
-        self.batcher = MicroBatcher(config.max_batch, config.max_wait_s,
-                                    config.max_deg)
+        self.batcher = MicroBatcher(
+            config.max_batch, config.max_wait_s, config.max_deg,
+            flush_slack_s=(config.costs.batch_base_s +
+                           config.max_batch * config.costs.batch_per_graph_s))
         self._ctx: Dict[Tuple[str, str], _GraphCtx] = {}
         # in-flight coalescing: requests for a key already queued for
         # inference wait on that flush instead of re-entering the batcher
         # (classic cache-stampede protection; one model call per key).
         self._inflight: Dict[Tuple[str, str], List[Request]] = {}
         self._ft_queue: Deque[Tuple[Tuple[str, str], str]] = deque()
-        # topology digests memoized by object identity (strong refs pin
-        # the ids): serving traffic reuses a handful of Topology objects,
-        # no need to re-hash the [D, D] matrices per request
-        self._topo_fps: Dict[int, Tuple[Topology, str]] = {}
+        self._topo_fp = FP.TopologyFingerprinter()
         self._key = jax.random.PRNGKey(config.seed)
         self._next_id = 0
         self.completed: List[Request] = []
-        self.counts: Dict[str, int] = {"cache": 0, "zero_shot": 0,
+        self.counts: Dict[str, int] = {"cache": 0, "disk": 0, "zero_shot": 0,
                                        "baseline": 0, "finetunes": 0,
-                                       "finetune_published": 0}
+                                       "finetune_published": 0,
+                                       "forward_adopted": 0,
+                                       "stale_served": 0}
+        if self.store is not None:
+            for key, se in self.store.items():
+                if preload is None or preload(key):
+                    self.cache.put(key, se.to_cache_entry())
 
     # ---------------------------------------------------------------- rng
     def _split(self):
         self._key, k = jax.random.split(self._key)
         return k
 
-    def _topo_fp(self, topo: Topology) -> str:
-        hit = self._topo_fps.get(id(topo))
-        if hit is not None and hit[0] is topo:
-            return hit[1]
-        fp = FP.topology_fingerprint(topo)
-        self._topo_fps[id(topo)] = (topo, fp)
-        return fp
-
     # ------------------------------------------------------------- submit
-    def submit(self, g, topo: Topology, arrival_t: Optional[float] = None
-               ) -> Request:
-        """Register one request; resolves immediately on a cache hit or a
-        full micro-batch, otherwise parks it with the batcher."""
+    def submit(self, g, topo: Topology, arrival_t: Optional[float] = None,
+               fp_order: Optional[Tuple[str, np.ndarray]] = None,
+               topo_fp: Optional[str] = None) -> Request:
+        """Register one request; resolves immediately on a cache/disk hit
+        or a full micro-batch, otherwise parks it with the batcher.
+
+        Args:
+            g: the dataflow graph to place.
+            topo: target device topology.
+            arrival_t: logical arrival time (simulated-clock mode).
+            fp_order: precomputed ``(graph_fp, canonical_order)`` — the
+                cluster router fingerprints once for shard routing and
+                passes it down so the WL refinement is not recomputed.
+            topo_fp: precomputed topology fingerprint (same reason).
+
+        Returns the (possibly still pending) :class:`Request`.
+        """
         if arrival_t is not None and self.clock.simulated:
             self.clock.advance_to(arrival_t)
         now = self.clock.now()
-        graph_fp, order = FP.fingerprint_and_order(g)
-        key = (graph_fp, self._topo_fp(topo))
+        graph_fp, order = fp_order or FP.fingerprint_and_order(g)
+        key = (graph_fp, topo_fp or self._topo_fp(topo))
         req = Request(self._next_id, g, topo, now, key, order)
         self._next_id += 1
 
@@ -216,21 +271,45 @@ class PlacementService:
         if self.clock.simulated:
             self.clock.advance(self.cfg.costs.lookup_s)
         if entry is not None:
-            self._resolve(req, FP.from_canonical(entry.placement, order),
-                          entry.measured_makespan, "cache",
-                          entry_source=entry.source)
+            self._serve_entry(req, entry, "cache")
             return req
 
         if key in self._inflight:              # coalesce concurrent misses
+            # (before the disk rung: an in-flight key cannot be on disk —
+            # publishes land in the cache first — so probing would only
+            # charge store_lookup_s for a guaranteed miss)
             self._inflight[key].append(req)
             return req
+
+        if self.store is not None:             # disk rung: evicted / warm
+            if self.clock.simulated:
+                self.clock.advance(self.cfg.costs.store_lookup_s)
+            se = self.store.lookup(key)
+            if se is not None:
+                entry = se.to_cache_entry()
+                self.cache.put(key, entry)     # re-admit to memory
+                self._serve_entry(req, entry, "disk")
+                return req
         self._inflight[key] = []
         ctx = self._context(key, g, topo, order)
+        deadline = (now + self.cfg.deadline_s
+                    if math.isfinite(self.cfg.deadline_s) else math.inf)
         self.batcher.add(
             MicroBatcher.group_key(key[1], ctx.num_devices, g.num_nodes),
-            req, ctx.gb, now)
+            req, ctx.gb, now, deadline=deadline)
         self._flush(self.batcher.ready(now))   # full groups flush instantly
         return req
+
+    def _serve_entry(self, req: Request, entry: CacheEntry,
+                     source: str) -> None:
+        """Resolve ``req`` from a cache/disk entry, auditing provenance."""
+        if entry.policy_hash and entry.policy_hash != self.policy_hash:
+            # must be impossible (load-time invalidation); audited so the
+            # cluster benchmark can *measure* zero rather than assume it
+            self.counts["stale_served"] += 1
+        self._resolve(req, FP.from_canonical(entry.placement, req.order),
+                      entry.measured_makespan, source,
+                      entry_source=entry.source)
 
     # --------------------------------------------------------------- step
     def step(self, force: bool = False) -> None:
@@ -326,8 +405,8 @@ class PlacementService:
         if np.isfinite(mk):
             # publish (not put): an unlucky later sample of the same key
             # must never overwrite a better stored placement
-            self.cache.publish(req.key, FP.to_canonical(pl, req.order),
-                               mk, source=source)
+            self._publish(req.key, FP.to_canonical(pl, req.order), mk,
+                          source=source)
         self._resolve(req, pl, mk, source)
         for waiter in self._inflight.pop(req.key, []):
             self._resolve(waiter,
@@ -357,20 +436,75 @@ class PlacementService:
         if res["best_placement"] is None:
             return
         n = ctx.gb.num_nodes
-        if self.cache.publish(key,
-                              FP.to_canonical(res["best_placement"][:n],
-                                              ctx.order),
-                              res["best_makespan"], source="finetuned"):
+        if self._publish(key,
+                         FP.to_canonical(res["best_placement"][:n],
+                                         ctx.order),
+                         res["best_makespan"], source="finetuned",
+                         finetune_step=res["iterations"]):
             self.counts["finetune_published"] += 1
+
+    # ------------------------------------------------------ publish/store
+    def _publish(self, key: Tuple[str, str], canon_pl: np.ndarray,
+                 mk: float, source: str, finetune_step: int = 0) -> bool:
+        """Monotone cache publish, mirrored to the persistent store."""
+        ok = self.cache.publish(key, canon_pl, mk, source=source,
+                                finetune_step=finetune_step,
+                                policy_hash=self.policy_hash)
+        if ok and self.store is not None:
+            self.store.record(key, self.cache.peek(key),
+                              finetune_step=finetune_step)
+            self.store.maybe_compact()
+        return ok
+
+    def adopt(self, key: Tuple[str, str], entry: CacheEntry) -> bool:
+        """Install an entry forwarded from another shard (monotone; the
+        adopted copy is also persisted so it survives restarts here).
+
+        Returns True iff the entry improved/created this shard's line."""
+        ok = self._publish(key, entry.placement, entry.measured_makespan,
+                           source=entry.source,
+                           finetune_step=entry.finetune_step)
+        if ok:
+            self.counts["forward_adopted"] += 1
+        return ok
+
+    def queue_depth(self) -> int:
+        """Unresolved work parked at this worker (batcher + coalesced
+        waiters + fine-tune backlog) — the router's admission signal."""
+        return (len(self.batcher) +
+                sum(len(w) for w in self._inflight.values()) +
+                len(self._ft_queue))
+
+    def checkpoint(self) -> None:
+        """Snapshot every live cache entry to the persistent store (hit
+        counters included, so LRU/LFU state survives a restart)."""
+        if self.store is None:
+            return
+        for key, entry in self.cache.items():
+            self.store.record(key, entry,
+                              finetune_step=entry.finetune_step)
+
+    def shutdown(self) -> None:
+        """Drain all queues, checkpoint the cache, compact and close the
+        store.  The service object stays readable (stats, completed)."""
+        self.drain()
+        if self.store is not None:
+            self.checkpoint()
+            self.store.compact()
+            self.store.close()
 
     # -------------------------------------------------------------- stats
     def stats(self) -> Dict[str, Any]:
+        """Aggregate counters: ladder counts, cache stats, latency
+        percentiles over completed requests, queue depths."""
         lats = np.asarray([r.latency for r in self.completed], np.float64)
         out: Dict[str, Any] = dict(self.counts)
         out.update(self.cache.stats.as_dict())
         out["served"] = len(self.completed)
         out["pending"] = len(self.batcher)
         out["ft_queue"] = len(self._ft_queue)
+        if self.store is not None:
+            out["store"] = self.store.stats.as_dict()
         if lats.size:
             out["latency_p50_s"] = float(np.percentile(lats, 50))
             out["latency_p99_s"] = float(np.percentile(lats, 99))

@@ -1,0 +1,90 @@
+"""Docs hygiene gates: serve/ public-API docstrings + markdown links.
+
+Two cheap tier-1 checks that keep the documentation honest:
+
+* every public module/class/function/method in ``repro.serve`` carries a
+  non-empty docstring (the serving tier is the operator-facing surface,
+  so its API contract must be written down where ``help()`` finds it);
+* ``README.md`` and every file under ``docs/`` have no dead relative
+  links (the CI docs job runs the same checker standalone).
+"""
+import importlib.util
+import inspect
+from pathlib import Path
+
+import pytest
+
+import repro.serve as serve_pkg
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+SERVE_MODULES = [
+    "repro.serve", "repro.serve.fingerprint", "repro.serve.cache",
+    "repro.serve.batcher", "repro.serve.service", "repro.serve.persist",
+    "repro.serve.admission", "repro.serve.cluster",
+]
+
+
+def _public_members(mod):
+    for name, obj in vars(mod).items():
+        if name.startswith("_"):
+            continue
+        if not (inspect.isclass(obj) or inspect.isfunction(obj)):
+            continue
+        if getattr(obj, "__module__", None) != mod.__name__:
+            continue        # re-exports are checked where they live
+        yield name, obj
+
+
+@pytest.mark.parametrize("modname", SERVE_MODULES)
+def test_serve_public_api_is_documented(modname):
+    mod = importlib.import_module(modname)
+    assert (mod.__doc__ or "").strip(), f"{modname} has no module docstring"
+    for name, obj in _public_members(mod):
+        assert (obj.__doc__ or "").strip(), \
+            f"{modname}.{name} has no docstring"
+        if inspect.isclass(obj):
+            for mname, member in vars(obj).items():
+                if mname.startswith("_"):
+                    continue
+                fn = member.fget if isinstance(member, property) else member
+                if not inspect.isfunction(fn):
+                    continue
+                assert (fn.__doc__ or "").strip(), \
+                    f"{modname}.{name}.{mname} has no docstring"
+
+
+def test_serve_package_reexports_cluster_tier():
+    for name in ("PlacementCluster", "ClusterConfig", "HashRing",
+                 "PersistentStore", "policy_hash", "AdmissionConfig",
+                 "AdmissionController", "PlacementService"):
+        assert hasattr(serve_pkg, name), f"repro.serve missing {name}"
+
+
+def _load_check_links():
+    spec = importlib.util.spec_from_file_location(
+        "check_links", REPO_ROOT / "tools" / "check_links.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_docs_exist_and_have_no_dead_relative_links():
+    docs = sorted((REPO_ROOT / "docs").glob("*.md"))
+    names = {p.name for p in docs}
+    assert {"architecture.md", "serving.md"} <= names
+    checker = _load_check_links()
+    dead = checker.find_dead_links([REPO_ROOT / "README.md", *docs])
+    assert dead == [], f"dead relative links: {dead}"
+
+
+def test_docs_cover_the_serving_invariants():
+    """The architecture doc must pin the cross-layer invariants by name
+    (they are what reviewers and new contributors need to not break)."""
+    text = (REPO_ROOT / "docs" / "architecture.md").read_text()
+    for needle in ("monotone", "fingerprint", "bucket", "golden"):
+        assert needle in text.lower(), f"architecture.md missing {needle!r}"
+    serving = (REPO_ROOT / "docs" / "serving.md").read_text()
+    for needle in ("provenance", "admission", "BENCH_serve_cluster.json",
+                   "escalation"):
+        assert needle in serving, f"serving.md missing {needle!r}"

@@ -1,0 +1,147 @@
+"""Persistent placement store: round-trip, corruption, compaction,
+provenance invalidation.
+
+Everything here is pure store/cache plumbing — no policy inference — so
+the edge cases (torn segment tails, stale policy hashes, LFU counters
+surviving compaction) are cheap to cover exhaustively.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.serve.cache import CacheEntry, PlacementCache
+from repro.serve.persist import PersistentStore, policy_hash
+
+
+def _entry(mk, pl=(0, 1, 2, 3), source="zero_shot", hits=0, ph="", fts=0):
+    return CacheEntry(np.asarray(pl, np.int32), mk, mk, source=source,
+                      hits=hits, finetune_step=fts, policy_hash=ph)
+
+
+def _key(i):
+    return (f"g{i:02d}", "topoA")
+
+
+def test_policy_hash_versions_parameters():
+    params = {"w": np.arange(6, dtype=np.float32).reshape(2, 3),
+              "b": np.zeros(3, np.float32)}
+    h1 = policy_hash(params)
+    assert h1 == policy_hash({k: v.copy() for k, v in params.items()})
+    bumped = {"w": params["w"] + 1e-6, "b": params["b"]}
+    assert policy_hash(bumped) != h1
+    # shape/dtype changes also change the hash, not just values
+    assert policy_hash({"w": params["w"].ravel(), "b": params["b"]}) != h1
+
+
+def test_round_trip_is_monotone_and_merges_counters(tmp_path):
+    st = PersistentStore(tmp_path, "ph1")
+    st.record(_key(0), _entry(2.0, hits=1))
+    st.record(_key(0), _entry(1.5, (3, 2, 1, 0), source="finetuned",
+                              hits=4, fts=6), finetune_step=6)
+    st.record(_key(0), _entry(1.9, hits=9))   # worse mk, more hits
+    st.record(_key(1), _entry(7.0))
+    st.close()
+
+    st2 = PersistentStore(tmp_path, "ph1")
+    assert len(st2) == 2
+    se = st2.lookup(_key(0))
+    assert se.measured_makespan == 1.5          # best placement wins...
+    assert np.all(se.placement == [3, 2, 1, 0])
+    assert se.source == "finetuned" and se.finetune_step == 6
+    assert se.hits == 9                         # ...counters take the max
+    assert st2.lookup(("missing", "topoA")) is None
+    assert st2.stats.records_loaded == 4
+
+
+def test_truncated_tail_is_skipped_not_fatal(tmp_path):
+    st = PersistentStore(tmp_path, "ph1", worker_tag="w0")
+    for i in range(3):
+        st.record(_key(i), _entry(1.0 + i))
+    st.close()
+    seg = sorted(tmp_path.glob("seg-w0-*.jsonl"))[0]
+    with open(seg, "a") as f:
+        f.write('{"gfp": "torn", "tfp": "topoA", "mk": 1')   # no newline
+
+    st2 = PersistentStore(tmp_path, "ph1")
+    assert len(st2) == 3 and st2.stats.records_corrupt == 1
+    # a corrupt line mid-segment abandons only that segment's remainder
+    lines = open(seg).read().splitlines()
+    with open(seg, "w") as f:
+        f.write(lines[0] + "\n" + "NOT JSON\n" + lines[1] + "\n")
+    st3 = PersistentStore(tmp_path, "ph1")
+    assert len(st3) == 1 and st3.stats.records_corrupt == 1
+
+    # a record whose topology digest disagrees with its key is corrupt too
+    bad = json.loads(lines[2])
+    bad["td"] = "other-topology"
+    with open(tmp_path / "seg-w9-000000.jsonl", "w") as f:
+        f.write(json.dumps(bad) + "\n")
+    st4 = PersistentStore(tmp_path, "ph1")
+    assert st4.stats.records_corrupt >= 1
+    assert st4.lookup((bad["gfp"], bad["tfp"])) is None
+
+
+def test_compaction_preserves_best_placements_and_lfu_stats(tmp_path):
+    st = PersistentStore(tmp_path, "ph1", worker_tag="w0")
+    for rnd in range(6):                      # many duplicate publishes
+        for i in range(4):
+            st.record(_key(i), _entry(10.0 - rnd + i, hits=rnd * 2))
+    assert len(list(tmp_path.glob("seg-w0-*.jsonl"))) >= 1
+    # another worker's segment must survive w0's compaction untouched
+    other = PersistentStore(tmp_path, "ph1", worker_tag="w1")
+    other.record(_key(9), _entry(3.0))
+    other.close()
+
+    written = st.compact()
+    st.close()
+    assert written == 4
+    own = list(tmp_path.glob("seg-w0-*.jsonl"))
+    assert len(own) == 1                      # one merged segment
+    assert len(list(tmp_path.glob("seg-w1-*.jsonl"))) == 1
+
+    st2 = PersistentStore(tmp_path, "ph1")
+    assert len(st2) == 5
+    for i in range(4):
+        se = st2.lookup(_key(i))
+        assert se.measured_makespan == 5.0 + i    # best round survived
+        assert se.hits == 10                      # max hit counter survived
+    # LFU eviction order is reconstructible from persisted hit counts
+    cache = PlacementCache(capacity=5, policy="lfu")
+    for k, se in st2.items():
+        cache.put(k, se.to_cache_entry())
+    cache.put(("fresh", "topoA"), _entry(1.0))    # evicts the 0-hit key 9
+    assert cache.peek(_key(9)) is None
+    assert all(cache.peek(_key(i)) is not None for i in range(4))
+
+
+def test_maybe_compact_triggers_on_duplication(tmp_path):
+    st = PersistentStore(tmp_path, "ph1", compact_min_records=8)
+    for rnd in range(5):
+        for i in range(3):
+            st.record(_key(i), _entry(9.0 - rnd))
+            st.maybe_compact()       # what the service does per publish
+    assert st.stats.compactions >= 1
+    assert st.lookup(_key(0)).measured_makespan == 5.0
+
+
+def test_stale_policy_records_are_invalidated_on_load(tmp_path):
+    st = PersistentStore(tmp_path, "phA")
+    st.record(_key(0), _entry(2.0))
+    st.record(_key(1), _entry(3.0, source="finetuned", fts=8),
+              finetune_step=8)
+    st.close()
+
+    warm = PersistentStore(tmp_path, "phA")     # same policy: all fresh
+    assert len(warm) == 2 and warm.stats.records_invalidated == 0
+
+    bumped = PersistentStore(tmp_path, "phB")   # policy bump: all stale
+    assert len(bumped) == 0
+    assert bumped.stats.records_invalidated == 2
+    assert bumped.lookup(_key(0)) is None       # -> miss -> re-inference
+    # new-policy publishes coexist with (and shadow) the stale history
+    bumped.record(_key(0), _entry(1.8))
+    bumped.close()
+    again = PersistentStore(tmp_path, "phB")
+    assert len(again) == 1
+    assert again.lookup(_key(0)).measured_makespan == pytest.approx(1.8)

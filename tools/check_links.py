@@ -1,0 +1,72 @@
+"""Dead-link checker for the repo's markdown docs.
+
+Scans ``[text](target)`` links in the given markdown files and reports
+every *relative* target that does not exist on disk (external ``http(s)``
+/ ``mailto`` links and pure ``#anchors`` are skipped — CI has no network
+and anchor slugs are renderer-specific).  Targets are resolved relative
+to the file that links them, so the checker works from any CWD.
+
+Usage::
+
+    python tools/check_links.py README.md docs
+
+Directories are expanded to their ``*.md`` files.  Exit status is the
+number of dead links (0 == clean), so CI can gate on it directly.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+from typing import Iterable, List, Tuple
+
+# inline links only; reference-style links are not used in this repo
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def find_dead_links(md_paths: Iterable) -> List[Tuple[str, str]]:
+    """Return (source file, dead target) pairs across ``md_paths``.
+
+    Args:
+        md_paths: markdown file paths (str or Path).
+
+    Returns:
+        One tuple per relative link whose target file/dir is missing.
+    """
+    dead: List[Tuple[str, str]] = []
+    for p in md_paths:
+        p = Path(p)
+        for m in _LINK_RE.finditer(p.read_text()):
+            target = m.group(1)
+            if target.startswith(_EXTERNAL) or target.startswith("#"):
+                continue
+            rel = target.split("#", 1)[0]
+            if rel and not (p.parent / rel).exists():
+                dead.append((str(p), target))
+    return dead
+
+
+def expand(args: Iterable[str]) -> List[Path]:
+    """Expand CLI args: directories become their sorted ``*.md`` files."""
+    out: List[Path] = []
+    for a in args:
+        pa = Path(a)
+        out.extend(sorted(pa.glob("*.md")) if pa.is_dir() else [pa])
+    return out
+
+
+def main(argv=None) -> int:
+    """CLI entry point; returns the dead-link count as the exit status."""
+    args = list(argv if argv is not None else sys.argv[1:])
+    paths = expand(args or ["README.md", "docs"])
+    dead = find_dead_links(paths)
+    for src, tgt in dead:
+        print(f"DEAD LINK in {src}: {tgt}")
+    print(f"[check_links] scanned {len(paths)} files: "
+          f"{len(dead)} dead links")
+    return len(dead)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
