@@ -8,6 +8,7 @@ from benchmarks import common as C
 
 
 def run(iterations: int = 60, tasks=None) -> Dict:
+    """GDP-one with attention/superposition toggled off (Fig. 3)."""
     tasks = tasks or C.paper_tasks()[:3]
     rows: Dict[str, Dict] = {}
     for flag in ("full", "no_attention", "no_superposition"):
@@ -25,6 +26,7 @@ def run(iterations: int = 60, tasks=None) -> Dict:
 
 
 def main(quick: bool = True):
+    """Run the ablation campaign and cache it."""
     rows = run(iterations=40 if quick else 300)
     cached = C.load_cached()
     cached["ablation"] = rows

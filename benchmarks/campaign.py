@@ -13,6 +13,8 @@ from benchmarks import common as C
 
 
 def main():
+    """Run the long campaign section by section, checkpointing
+    results/experiments.json after each one."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--iters", type=int, default=250)
     args = ap.parse_args()
@@ -42,6 +44,13 @@ def main():
     from benchmarks import hetero
     cached["hetero"] = hetero.run(iterations=max(args.iters // 2, 60),
                                   full=True)
+    C.save_cached(cached)
+
+    print("[campaign] transfer", flush=True)
+    from benchmarks import transfer
+    cached["transfer"] = transfer.run(
+        pretrain_iters=max(args.iters // 2, 60), finetune_iters=50,
+        full=True)
     C.save_cached(cached)
 
     print("[campaign] serve", flush=True)

@@ -29,7 +29,7 @@ from repro.core.ppo import PPOConfig, PPOTrainer
 from repro.core.hdp import HDPConfig, HDPTrainer
 from repro.graphs import synthetic as S
 from repro.sim import p100_topology, prepare_sim_graph
-from repro.sim.scheduler import Env
+from repro.sim.scheduler import Env, SimConfig
 
 RESULTS_PATH = os.path.join(os.path.dirname(__file__), "..", "results",
                             "experiments.json")
@@ -44,6 +44,7 @@ PPO_PAPER = dataclasses.replace(PPO, canonicalize=False, adv_norm=False)
 
 @dataclasses.dataclass
 class Task:
+    """One benchmark workload: a graph bound to a topology and its envs."""
     name: str
     graph: Any
     topo: Any
@@ -53,18 +54,28 @@ class Task:
     num_devices: int
 
 
-def make_task(name: str, g, num_devices: int, tighten: float = 1.8) -> Task:
+def make_task(name: str, g, num_devices: int, tighten: float = 1.8,
+              sim: SimConfig = SimConfig()) -> Task:
+    """Task on a uniform memory-tightened P100 pool (paper protocol)."""
     cap = g.total_mem() / num_devices * tighten
     topo = p100_topology(num_devices).with_mem_caps(cap)
-    return make_task_topo(name, g, topo)
+    return make_task_topo(name, g, topo, sim=sim)
 
 
-def make_task_topo(name: str, g, topo) -> Task:
-    """Task on an arbitrary (possibly heterogeneous) Topology."""
+def make_task_topo(name: str, g, topo, sim: SimConfig = SimConfig()) -> Task:
+    """Task on an arbitrary (possibly heterogeneous) Topology.
+
+    ``sim`` fixes the simulator semantics for BOTH envs — training reward
+    and evaluation judge run the same mode (e.g. ``sender_contention``),
+    only the reward shaping differs between them.  The default config
+    reproduces the historical golden-pinned makespans bit-for-bit.
+    """
     sg = prepare_sim_graph(g, topo, max_deg=16)
-    return Task(name, g, topo, Env(sg, topo, shaped_reward=True),
-                Env(sg, topo), featurize(g, max_deg=8, topo=topo),
-                topo.num_devices)
+    train = dataclasses.replace(sim, shaped_reward=True)
+    true = dataclasses.replace(sim, shaped_reward=False)
+    return Task(name, g, topo, Env.from_config(sg, topo, train),
+                Env.from_config(sg, topo, true),
+                featurize(g, max_deg=8, topo=topo), topo.num_devices)
 
 
 def paper_tasks(full: bool = False) -> List[Task]:
@@ -84,11 +95,17 @@ def paper_tasks(full: bool = False) -> List[Task]:
 
 
 def eval_placement(task: Task, placement: np.ndarray) -> Tuple[float, bool]:
+    """(makespan_s, valid) of one placement under the task's true env."""
     mk, r, valid = task.env_true.rewards(jnp.asarray(placement)[None])
     return float(mk[0]), bool(valid[0])
 
 
 def baseline_rows(task: Task) -> Dict[str, float]:
+    """Makespans of every baseline placer on ``task`` (inf when OOM).
+
+    All baselines are judged by ``task.env_true``, so they inherit the
+    task's :class:`~repro.sim.scheduler.SimConfig` — under a contention-
+    aware task the heuristics are scored contention-aware too."""
     out = {}
     for name, fn in (("human", B.human_expert), ("metis", B.metis_like),
                      ("round_robin", B.round_robin),
@@ -106,6 +123,8 @@ def run_gdp_one(task: Task, iterations: int, seed: int = 0,
                 pcfg: Optional[PolicyConfig] = None,
                 ppo: Optional[PPOConfig] = None,
                 log_every: int = 0) -> Dict[str, Any]:
+    """GDP-one: train a fresh policy on one task, tracking the best-seen
+    makespan curve (returns the trainer for fine-tune reuse)."""
     tr = PPOTrainer(pcfg or POLICY, ppo or PPO, seed=seed)
     t0 = time.time()
     best = np.inf
@@ -125,6 +144,7 @@ def run_gdp_one(task: Task, iterations: int, seed: int = 0,
 
 
 def run_hdp(task: Task, iterations: int, seed: int = 0) -> Dict[str, Any]:
+    """HDP baseline search on one task (Table 1's RL comparison column)."""
     tr = HDPTrainer(HDPConfig(num_samples=32), seed=seed)
     t0 = time.time()
     best = tr.train(task.name, task.gb, task.env_true, task.num_devices,
@@ -143,6 +163,7 @@ def time_to_quality(curve: List[Tuple[float, float]], target: float) -> float:
 
 # ----------------------------------------------------------------- caching
 def load_cached() -> Dict[str, Any]:
+    """Cached campaign results (results/experiments.json), {} if absent."""
     if os.path.exists(RESULTS_PATH):
         with open(RESULTS_PATH) as f:
             return json.load(f)
@@ -150,6 +171,7 @@ def load_cached() -> Dict[str, Any]:
 
 
 def save_cached(results: Dict[str, Any]) -> None:
+    """Atomically rewrite the campaign cache (trainer objects stripped)."""
     os.makedirs(os.path.dirname(RESULTS_PATH), exist_ok=True)
     tmp = RESULTS_PATH + ".tmp"
     cleaned = _strip(results)

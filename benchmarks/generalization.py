@@ -13,6 +13,7 @@ from repro.core.ppo import PPOTrainer
 
 
 def run(pretrain_iters: int = 60, finetune_iters: int = 50, tasks=None) -> Dict:
+    """Leave-one-out generalization over ``tasks`` (Fig. 2 protocol)."""
     tasks = tasks or C.paper_tasks()[:4]
     rows = {}
     for held_out in tasks:
@@ -45,6 +46,7 @@ def run(pretrain_iters: int = 60, finetune_iters: int = 50, tasks=None) -> Dict:
 
 
 def main(quick: bool = True):
+    """Run the generalization campaign and cache it."""
     rows = run(pretrain_iters=30 if quick else 200,
                finetune_iters=20 if quick else 50)
     cached = C.load_cached()

@@ -31,6 +31,7 @@ from repro.sim.device import (A100, P100, cpu_gpu_topology, multi_gen_fleet,
 
 
 def hetero_tasks(full: bool = False):
+    """The three mixed-fleet scenarios as memory-tightened Tasks."""
     ts = 12 if full else 5
     fleet = multi_gen_fleet(((A100, 2), (P100, 2)))
     cpu_gpu = cpu_gpu_topology(num_gpus=3, num_cpus=1)
@@ -53,6 +54,7 @@ def hetero_tasks(full: bool = False):
 
 
 def run(iterations: int = 60, full: bool = False, seeds=(0,)) -> Dict:
+    """GDP vs baselines on every hetero scenario; returns report rows."""
     rows = {}
     for task in hetero_tasks(full=full):
         base = C.baseline_rows(task)
@@ -89,6 +91,7 @@ def uniform_equivalence_row() -> Dict:
 
 
 def main(quick: bool = True):
+    """Run the hetero campaign and cache it into experiments.json."""
     rows = run(iterations=40 if quick else 300, full=not quick)
     cached = C.load_cached()
     cached["hetero"] = rows

@@ -62,6 +62,7 @@ def model_flops(arch: str, shape_name: str) -> float:
 
 
 def rows() -> Dict[str, Dict]:
+    """Derived roofline terms per dry-run cell (status passthrough)."""
     with open(DRYRUN_PATH) as f:
         data = json.load(f)
     out = {}
@@ -94,6 +95,7 @@ def rows() -> Dict[str, Dict]:
 
 
 def main():
+    """Print the roofline CSV (one line per arch x shape x mesh)."""
     r = rows()
     print("cell,t_compute_s,t_memory_s,t_collective_s,dominant,peak_gb,"
           "useful_ratio,roofline_fraction,compute_fraction")

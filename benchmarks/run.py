@@ -16,6 +16,8 @@ def _section(title):
 
 
 def main() -> None:
+    """Run every benchmark section (quick by default; ``--full`` for the
+    long campaign; ``--skip-rl`` reports cached numbers + roofline only)."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--skip-rl", action="store_true",
@@ -101,6 +103,30 @@ def main() -> None:
             print(f"hetero.campaign.{name},{r['gdp']:.5f},"
                   f"rr={r['round_robin']:.5f};"
                   f"dRR={r['gdp_vs_round_robin']*100:+.1f}%")
+
+    _section("Topology transfer: train one fleet, zero-shot another")
+    if not args.skip_rl:
+        from benchmarks import transfer
+        tr_rows = transfer.run(pretrain_iters=20 if quick else 200,
+                               finetune_iters=10 if quick else 50,
+                               full=not quick)
+        for mode, r in tr_rows.items():
+            for fname, fr in r["fleets"].items():
+                for role in ("seen", "unseen"):
+                    row = fr[role]
+                    print(f"transfer.{mode}.{fname}.{role},{row['gdp']:.5f},"
+                          f"zs={row['zero_shot']:.5f};"
+                          f"rr={row['round_robin']:.5f};"
+                          f"dRR={row['gdp_vs_round_robin']*100:+.1f}%")
+            print(f"transfer.{mode}.any_holdout_beats_rr,"
+                  f"{int(r['any_holdout_beats_rr'])},target=1")
+    if "transfer" in cached:
+        for mode in ("contention_off", "contention_on"):
+            r = cached["transfer"].get(mode)
+            if r:
+                print(f"transfer.campaign.{mode},"
+                      f"{int(r['any_holdout_beats_rr'])},"
+                      f"fleets={','.join(r['fleets'])}")
 
     _section("Serving: batched throughput / latency sweep / regret")
     if not args.skip_rl:

@@ -173,6 +173,7 @@ def _zipf_trace(pool: List[Any], num_requests: int, skew: float,
 
 def run_sweep(pool_size: int = 6, num_requests: int = 40,
               rates=(1.0, 10.0, 100.0), skews=(0.5, 1.2)) -> List[Dict]:
+    """Deterministic rate x zipf-skew grid of latency and hit rate."""
     pool = _mixed_workload(pool_size)
     topo = p100_topology(4)
     topo = topo.with_mem_caps(max(g.total_mem() for g in pool) * 2)
@@ -429,6 +430,7 @@ def run_cluster(quick: bool = True) -> Dict[str, Any]:
 
 # ------------------------------------------------------------------- main
 def run(quick: bool = True) -> Dict[str, Any]:
+    """All single-worker sections; returns the BENCH_serve.json dict."""
     results: Dict[str, Any] = {}
     results["throughput"] = run_throughput(
         num_requests=12, num_samples=2 if quick else 4)

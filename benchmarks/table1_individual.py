@@ -15,6 +15,7 @@ from benchmarks import common as C
 
 
 def run(iterations: int = 80, tasks=None, seeds=(0,)) -> Dict:
+    """Table 1 rows: GDP-one vs HP/METIS/HDP per workload."""
     tasks = tasks or C.paper_tasks()
     rows = {}
     for task in tasks:
@@ -54,6 +55,7 @@ def run(iterations: int = 80, tasks=None, seeds=(0,)) -> Dict:
 
 
 def main(quick: bool = True):
+    """Run the Table-1 campaign and cache it."""
     rows = run(iterations=60 if quick else 400)
     cached = C.load_cached()
     cached["table1"] = rows

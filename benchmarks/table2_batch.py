@@ -8,6 +8,7 @@ from repro.core.ppo import PPOTrainer
 
 
 def run(iterations: int = 60, tasks=None) -> Dict:
+    """Table 2 rows: one shared GDP-batch policy vs per-graph GDP-one."""
     tasks = tasks or C.paper_tasks()[:4]
     # GDP-batch: one trainer, round-robin over the task set (Eq. 1)
     tr = PPOTrainer(C.POLICY, C.PPO, seed=0)
@@ -29,6 +30,7 @@ def run(iterations: int = 60, tasks=None) -> Dict:
 
 
 def main(quick: bool = True):
+    """Run the Table-2 campaign and cache it."""
     rows = run(iterations=40 if quick else 300)
     cached = C.load_cached()
     cached["table2"] = rows

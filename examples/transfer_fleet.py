@@ -1,0 +1,81 @@
+"""Topology transfer: train on one fleet, place zero-shot on another.
+
+Trains a small GDP policy on an NVLink/PCIe/InfiniBand hierarchy of 8
+uniform P100s, then places the same model — zero-shot, no weight updates
+— on a multi-generation fleet (2 fast A100 + 2 slow P100) it never saw,
+with the simulator's ``sender_contention`` mode on: every device's
+outgoing transfers serialize on one send port, so placements that funnel
+traffic through a single sender pay for the hot-spot.  A short
+superposition fine-tune (a fork of the policy; the base stays frozen)
+closes most of the remaining gap.  The full campaign with both modes and
+a second held-out fleet is ``benchmarks/transfer.py``, whose task
+harness this demo reuses.
+
+    python examples/transfer_fleet.py
+"""
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax.numpy as jnp
+
+from benchmarks import common as C
+from benchmarks.transfer import train_fleet
+from repro.core import baselines as B
+from repro.core.ppo import PPOTrainer, clone_state
+from repro.graphs import synthetic as S
+from repro.sim import A100, P100, multi_gen_fleet
+from repro.sim.scheduler import SimConfig
+
+
+def main(pretrain_iters: int = 25, finetune_iters: int = 10):
+    sim = SimConfig(sender_contention=True)
+
+    # --- train on the hierarchy fleet (uniform speeds, non-uniform links);
+    # relaxed memory (slack=2.5): the transfer signal is the link
+    # structure, not the memory cliff
+    tfleet = train_fleet()
+    graphs = [S.rnnlm(2, time_steps=5), S.inception(modules=4)]
+    tasks = [C.make_task_topo(f"train-{g.name}", g,
+                              tfleet.tightened(g.total_mem(), slack=2.5),
+                              sim=sim)
+             for g in graphs]
+    tr = PPOTrainer(C.POLICY, C.PPO, seed=0)
+    t0 = time.time()
+    tr.train([(t.name, t.gb, t.env, t.num_devices) for t in tasks],
+             iterations=pretrain_iters, log_every=10)
+    print(f"trained on {[g.name for g in graphs]} / "
+          f"nvlink_host_ib fleet in {time.time()-t0:.0f}s (contention on)\n")
+
+    # --- zero-shot onto a fleet the policy never saw
+    g = S.rnnlm(2, time_steps=5)
+    fleet = multi_gen_fleet(((A100, 2), (P100, 2)))
+    task = C.make_task_topo("holdout", g, fleet.tightened(g.total_mem()),
+                            sim=sim)
+    print("held-out fleet:", [s.name for s in task.topo.specs])
+    for name, fn in (("round-robin (blind)", B.round_robin),
+                     ("human-expert", B.human_expert)):
+        mk, _, ok = task.env_true.rewards(
+            jnp.asarray(fn(g, task.topo))[None])
+        print(f"{name:>22s}: {float(mk[0]):.4f}s"
+              f"{'' if bool(ok[0]) else '  (OOM -> invalid)'}")
+
+    zs = tr.best_of_samples(task.gb, task.env_true, task.num_devices, 16)
+    print(f"{'GDP zero-shot':>22s}: {zs:.4f}s  (no weight updates)")
+
+    # --- superposition fine-tune a fork; the base policy stays frozen
+    fork = PPOTrainer(C.POLICY, C.PPO, seed=7, state=clone_state(tr.state))
+    res = fork.finetune(task.name, task.gb, task.env, task.num_devices,
+                        finetune_iters)
+    ft = min(res["best_makespan"],
+             fork.best_of_samples(task.gb, task.env_true,
+                                  task.num_devices, 16))
+    print(f"{'GDP fine-tuned':>22s}: {ft:.4f}s  "
+          f"({res['iterations']} iterations)")
+
+
+if __name__ == "__main__":
+    main()

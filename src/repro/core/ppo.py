@@ -29,6 +29,8 @@ from repro.optim.clip import sanitize
 
 @dataclasses.dataclass(frozen=True)
 class PPOConfig:
+    """PPO hyperparameters (paper protocol plus beyond-paper variance
+    reducers, each individually switchable — see field comments)."""
     lr: float = 1e-3
     clip_eps: float = 0.2
     epochs: int = 3
@@ -60,6 +62,7 @@ class PPOConfig:
 
 @dataclasses.dataclass
 class TrainState:
+    """Mutable training state: params, optimizer, per-graph baselines."""
     params: Any
     opt_state: Any
     baselines: Dict[str, float]       # per-graph running-average reward
@@ -69,6 +72,7 @@ class TrainState:
 
 
 def init_state(key, pcfg: PolicyConfig, ocfg: AdamConfig) -> TrainState:
+    """Fresh TrainState: initialized policy params + Adam state."""
     params = policy_mod.init(key, pcfg)
     return TrainState(params=params, opt_state=adam_init(params, ocfg),
                       baselines={}, baseline_counts={})
@@ -293,12 +297,15 @@ class PPOTrainer:
     # ------------------------------------------------------------------
     def eval_greedy(self, gb: GraphBatch, env, num_devices: int
                     ) -> Tuple[float, bool]:
+        """(makespan, valid) of the greedy (argmax) decode."""
         pl = policy_mod.greedy(self.state.params, self.pcfg, gb, num_devices)
         mk, r, valid = env.rewards(pl[None])
         return float(mk[0]), bool(valid[0])
 
     def best_of_samples(self, gb: GraphBatch, env, num_devices: int,
                         m: int = 16) -> float:
+        """Best valid makespan over ``m`` sampled placements (zero-shot
+        evaluation: no weight updates)."""
         pl, _ = _sample(self.state.params, self.pcfg, gb, num_devices,
                         self._next_key(), m)
         mk, _, valid = env.rewards(pl)

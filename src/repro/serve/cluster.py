@@ -27,8 +27,9 @@ With a ``store_root`` attached every worker appends to its own segment
 files of one shared :class:`~repro.serve.persist.PersistentStore` root,
 and a restarted — or **rescaled** — cluster replays all segments and
 warms each shard with exactly the keys that now route to it.  Provenance
-versioning (policy hash) makes a policy bump invalidate stale entries at
-load instead of serving them.
+versioning (policy hash + simulator contention mode) makes a policy bump
+— or a ``sender_contention`` flip — invalidate stale entries at load
+instead of serving them.
 
 The whole tier is deterministic: routing is a blake2b hash ring, clocks
 are logical, and service times come from ``ServiceCosts`` — so the
@@ -133,9 +134,10 @@ class PlacementCluster:
         for w in range(config.num_workers):
             scfg = dataclasses.replace(config.serve, simulated=True,
                                        seed=config.serve.seed + 1009 * w)
-            store = (PersistentStore(store_root, self.policy_hash,
-                                     worker_tag=f"w{w}")
-                     if store_root is not None else None)
+            store = (PersistentStore(
+                store_root, self.policy_hash, worker_tag=f"w{w}",
+                sender_contention=scfg.sender_contention)
+                if store_root is not None else None)
             self.workers.append(PlacementService(
                 trainer, scfg, SimulatedClock(), store=store,
                 preload=lambda key, w=w: self.ring.route(key[0]) == w))
@@ -144,7 +146,10 @@ class PlacementCluster:
         self._next_shed_id = -1          # negative ids: router-made answers
         self._keys_per_worker: List[Set[Key]] = [
             set() for _ in range(config.num_workers)]
-        self._topo_fp = FP.TopologyFingerprinter()
+        # router keys must match worker keys, so the router's digests
+        # carry the tier's contention mode too
+        self._topo_fp = FP.TopologyFingerprinter(
+            config.serve.sender_contention)
 
     # ------------------------------------------------------------ routing
     def home(self, g) -> int:

@@ -161,11 +161,19 @@ def fingerprint_and_order(g: DataflowGraph, rounds: int = _WL_ROUNDS
             _order_from_colors(g, init, refined))
 
 
-def topology_fingerprint(topo: Topology) -> str:
+def topology_fingerprint(topo: Topology, *,
+                         sender_contention: bool = False) -> str:
     """Hex digest of the exact device pool (order-sensitive by design).
 
     Raw float64 bytes are hashed — inf (free same-device links) has its
     own bit pattern, so a free link never aliases a 0 B/s dead link.
+
+    ``sender_contention`` folds the simulator's contention mode into the
+    digest: a placement measured with contended send ports answers a
+    *different question* than one measured without, so the two must never
+    share a cache line or persisted record.  Contention-off hashes
+    exactly the historical bytes — every pre-existing digest (and the
+    provenance of every persisted placement) is unchanged.
     """
     h = hashlib.blake2b(digest_size=16)
     for s in topo.specs:
@@ -173,6 +181,8 @@ def topology_fingerprint(topo: Topology) -> str:
         h.update(np.float64([s.peak_flops, s.mem_bytes, s.hbm_bw]).tobytes())
     h.update(topo.bw.astype(np.float64).tobytes())
     h.update(topo.latency.astype(np.float64).tobytes())
+    if sender_contention:
+        h.update(b"|sender_contention")
     return h.hexdigest()
 
 
@@ -182,25 +192,33 @@ class TopologyFingerprinter:
     Serving traffic reuses a handful of ``Topology`` objects, so hashing
     the ``[D, D]`` matrices once per *object* (strong refs pin the ids)
     beats re-hashing per request.  Both the service and the cluster
-    router hold one of these."""
+    router hold one of these, constructed with the tier's contention
+    mode so every key they mint carries it."""
 
-    def __init__(self):
+    def __init__(self, sender_contention: bool = False):
+        self.sender_contention = sender_contention
         self._memo: dict = {}
 
     def __call__(self, topo: Topology) -> str:
-        """Fingerprint ``topo``, memoized by object identity."""
+        """Fingerprint ``topo`` under this tier's mode, memoized by
+        object identity."""
         hit = self._memo.get(id(topo))
         if hit is not None and hit[0] is topo:
             return hit[1]
-        fp = topology_fingerprint(topo)
+        fp = topology_fingerprint(topo,
+                                  sender_contention=self.sender_contention)
         self._memo[id(topo)] = (topo, fp)
         return fp
 
 
-def cache_key(g: DataflowGraph, topo: Topology) -> Tuple[str, str]:
+def cache_key(g: DataflowGraph, topo: Topology, *,
+              sender_contention: bool = False) -> Tuple[str, str]:
     """(graph fingerprint, topology fingerprint) — the cache/store key
-    identifying one placement problem up to node relabeling."""
-    return graph_fingerprint(g), topology_fingerprint(topo)
+    identifying one placement problem up to node relabeling.  The
+    simulator's contention mode is part of the key (see
+    :func:`topology_fingerprint`)."""
+    return (graph_fingerprint(g),
+            topology_fingerprint(topo, sender_contention=sender_contention))
 
 
 def to_canonical(placement: np.ndarray, order: np.ndarray) -> np.ndarray:

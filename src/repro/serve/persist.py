@@ -23,8 +23,14 @@ Layout and invariants:
 * Records whose policy hash differs from the loading store's
   ``policy_hash`` are **invalidated** (counted, never surfaced): after a
   policy-version bump the cluster re-infers rather than serving stale
-  placements.  A topology digest that disagrees with the record's own key
-  marks the record corrupt and it is skipped.
+  placements.  The simulator's **contention mode** is provenance too:
+  records written under a different ``sender_contention`` setting are
+  invalidated the same way (their makespans answer a different cost
+  question), so a mode flip re-infers instead of serving cross-mode
+  placements — audited end-to-end by the service's ``stale_served``
+  counter, which must stay 0 across the flip.  A topology digest that
+  disagrees with the record's own key marks the record corrupt and it is
+  skipped.
 * A torn tail (crash mid-append) must not poison a restart: the first
   undecodable line of a segment abandons *that segment's remainder* and
   replay continues with the next segment.
@@ -83,6 +89,7 @@ class StoredEntry:
     publishes: int
     finetune_step: int        # fine-tune iterations behind this placement
     policy_hash: str          # hash of the policy that produced it
+    sender_contention: bool = False   # simulator mode it was measured under
 
     def to_cache_entry(self) -> CacheEntry:
         """Materialize as an in-memory cache entry (counters preserved)."""
@@ -119,13 +126,18 @@ class PersistentStore:
             (one tag per concurrent writer, e.g. ``"w3"``).
         compact_min_records: :meth:`maybe_compact` triggers once this many
             owned records exist and they exceed twice the owned key count.
+        sender_contention: simulator contention mode this process serves
+            under; records measured under the other mode are invalidated
+            at load time exactly like a stale policy hash.
     """
 
     def __init__(self, root, policy_hash: str, worker_tag: str = "w0",
-                 compact_min_records: int = 512):
+                 compact_min_records: int = 512,
+                 sender_contention: bool = False):
         self.root = Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
         self.policy_hash = policy_hash
+        self.sender_contention = bool(sender_contention)
         self.worker_tag = worker_tag
         self.compact_min_records = compact_min_records
         self.stats = StoreStats()
@@ -172,7 +184,8 @@ class PersistentStore:
         entry = StoredEntry(np.asarray(d["pl"], np.int32),
                             float(d["pred"]), float(d["mk"]),
                             str(d["src"]), int(d["hits"]), int(d["pubs"]),
-                            int(d["fts"]), str(d["ph"]))
+                            int(d["fts"]), str(d["ph"]),
+                            bool(d.get("cm", False)))   # pre-mode records: off
         if not np.isfinite(entry.measured_makespan):
             raise ValueError("non-finite measured makespan")
         return key, entry
@@ -187,6 +200,7 @@ class PersistentStore:
             "mk": rec.measured_makespan, "src": rec.source,
             "hits": rec.hits, "pubs": rec.publishes,
             "fts": rec.finetune_step, "ph": rec.policy_hash,
+            "cm": int(rec.sender_contention),
         }) + "\n"
 
     def _load(self) -> None:
@@ -209,7 +223,8 @@ class PersistentStore:
                         self._own_records += 1
                         self._merge(self._own, key,
                                     dataclasses.replace(rec))
-                    if rec.policy_hash != self.policy_hash:
+                    if (rec.policy_hash != self.policy_hash or
+                            rec.sender_contention != self.sender_contention):
                         self.stats.records_invalidated += 1
                         continue
                     self.stats.records_loaded += 1
@@ -244,7 +259,7 @@ class PersistentStore:
                           float(entry.predicted_makespan),
                           float(entry.measured_makespan), entry.source,
                           int(entry.hits), int(entry.publishes),
-                          int(finetune_step), ph)
+                          int(finetune_step), ph, self.sender_contention)
         self._open_for_append()
         self._fh.write(self._dump(key, rec))
         self._fh.flush()

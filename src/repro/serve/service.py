@@ -26,6 +26,14 @@ versioned provenance (policy hash, fine-tune step, topology digest), so a
 restarted service warm-starts from disk and a policy-version bump
 invalidates stale entries instead of serving them.
 
+The whole ladder runs under one simulator mode: with
+``ServeConfig.sender_contention`` on, the zero-shot sample selection, the
+baseline fallbacks, and fine-tune escalations are all judged by the
+contention-aware scheduler, the topology digest in every cache/store key
+carries the mode, and the persistent store invalidates cross-mode records
+at load — flipping the mode behaves exactly like a policy bump
+(re-inference, ``stale_served == 0``).
+
 Determinism: with ``simulated=True`` the service charges a deterministic
 service-time model (``ServiceCosts``) against a :class:`SimulatedClock`
 instead of reading wall time, so throughput / latency / hit-rate are exact
@@ -129,6 +137,11 @@ class ServeConfig:
     max_deg: int = 8
     seed: int = 0
     simulated: bool = False
+    # Simulator semantics this worker serves under (SimConfig mode): with
+    # contention on, every env, baseline and fine-tune is judged by the
+    # sender-port-serialized scheduler and every key's topology digest
+    # carries the mode.
+    sender_contention: bool = False
     costs: ServiceCosts = dataclasses.field(default_factory=ServiceCosts)
 
 
@@ -209,6 +222,11 @@ class PlacementService:
         self.clock = clock or (SimulatedClock() if config.simulated
                                else WallClock())
         self.store = store
+        if store is not None:
+            # a store replaying records under a different simulator mode
+            # would warm the cache with cross-mode placements
+            assert store.sender_contention == config.sender_contention, (
+                store.sender_contention, config.sender_contention)
         self.policy_hash = (store.policy_hash if store is not None
                             else _policy_hash(trainer.state.params))
         self.cache = PlacementCache(config.cache_capacity, config.cache_policy)
@@ -222,7 +240,7 @@ class PlacementService:
         # (classic cache-stampede protection; one model call per key).
         self._inflight: Dict[Tuple[str, str], List[Request]] = {}
         self._ft_queue: Deque[Tuple[Tuple[str, str], str]] = deque()
-        self._topo_fp = FP.TopologyFingerprinter()
+        self._topo_fp = FP.TopologyFingerprinter(config.sender_contention)
         self._key = jax.random.PRNGKey(config.seed)
         self._next_id = 0
         self.completed: List[Request] = []
@@ -351,8 +369,10 @@ class PlacementService:
         # distinct graph size; padded nodes are masked throughout.
         pad_n = bucket_size(g.num_nodes)
         sg = prepare_sim_graph(g, topo, max_deg=16, pad_to=pad_n, pad_k=16)
-        env_true = Env(sg, topo)
-        env_shaped = Env(sg, topo, shaped_reward=True)
+        contention = self.cfg.sender_contention
+        env_true = Env(sg, topo, sender_contention=contention)
+        env_shaped = Env(sg, topo, shaped_reward=True,
+                         sender_contention=contention)
         gb = featurize(g, max_deg=self.cfg.max_deg, pad_to=pad_n, topo=topo)
         base_best, base_pl = np.inf, None
         for fn in (B.human_expert, B.round_robin):

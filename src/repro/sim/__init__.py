@@ -1,8 +1,19 @@
+"""Execution simulator: device topologies, cost model, list scheduler.
+
+The simulator is both the RL training reward and the serving-side quality
+judge, so its semantics are pinned twice over: the jitted scheduler
+(``sim.scheduler``) is parity-tested against an independent numpy oracle
+(``sim.reference``), and ``Topology.uniform`` pools are golden-pinned
+bit-for-bit to the historical homogeneous makespans.  Semantic modes
+(link contention, shaped rewards) are carried by
+:class:`~repro.sim.scheduler.SimConfig` so every layer evaluates under
+the same, explicitly versioned semantics.
+"""
 from repro.sim.device import (DeviceSpec, Topology, P100, V100, A100,
                               CPU_HOST, TPU_V5E, p100_topology,
                               tpu_v5e_topology, nvlink_host_ib_topology,
                               cpu_gpu_topology, multi_gen_fleet)  # noqa: F401
 from repro.sim.cost_model import node_compute_times, node_compute_matrix  # noqa: F401
-from repro.sim.scheduler import (SimGraph, SimTopology, prepare_sim_graph,
-                                 simulate, simulate_batch,
+from repro.sim.scheduler import (SimConfig, SimGraph, SimTopology,
+                                 prepare_sim_graph, simulate, simulate_batch,
                                  reward_from_runtime)  # noqa: F401

@@ -30,6 +30,7 @@ import numpy as np
 
 @dataclasses.dataclass(frozen=True)
 class DeviceSpec:
+    """One device's compute/memory capabilities (immutable spec row)."""
     name: str
     peak_flops: float      # FLOP/s at the matmul unit
     mem_bytes: float       # usable HBM (or host DRAM) per device
@@ -79,6 +80,7 @@ class Topology:
     # ------------------------------------------------------------ views
     @property
     def num_devices(self) -> int:
+        """Device count D (one spec per device)."""
         return len(self.specs)
 
     @property
@@ -128,14 +130,17 @@ class Topology:
 
     @property
     def mem_caps(self) -> np.ndarray:
+        """f64[D] per-device memory capacity in bytes."""
         return np.array([s.mem_bytes for s in self.specs], np.float64)
 
     @property
     def peak_flops(self) -> np.ndarray:
+        """f64[D] per-device peak FLOP/s."""
         return np.array([s.peak_flops for s in self.specs], np.float64)
 
     @property
     def hbm_bw(self) -> np.ndarray:
+        """f64[D] per-device HBM bandwidth in bytes/s."""
         return np.array([s.hbm_bw for s in self.specs], np.float64)
 
     # ----------------------------------------------------- constructors
@@ -194,11 +199,14 @@ class Topology:
 
 # ------------------------------------------------------- named topologies
 def p100_topology(num_devices: int) -> Topology:
-    # NVLink-class intra-host links.
+    """Uniform P100 pool with NVLink-class intra-host links (the paper's
+    evaluation hardware; the seed graphs' golden makespans live here)."""
     return Topology.uniform(num_devices, P100, link_bw=20e9, link_latency=5e-6)
 
 
 def tpu_v5e_topology(num_devices: int) -> Topology:
+    """Uniform TPU v5e pool over ICI-class links (the deployment target
+    when GDP places jaxpr-extracted graphs for stage assignment)."""
     return Topology.uniform(num_devices, TPU_V5E, link_bw=50e9,
                             link_latency=1e-6)
 

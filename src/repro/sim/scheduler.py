@@ -35,6 +35,33 @@ from repro.sim.device import Topology
 INVALID_REWARD = -10.0
 
 
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    """First-class simulator semantics knobs, threaded through every layer.
+
+    One value of this config describes *how* makespans are produced — the
+    training envs, the serving ladder, the baselines, and the benchmarks
+    all evaluate placements under the same ``SimConfig`` so a number from
+    one layer is comparable to a number from any other.
+
+    * ``sender_contention`` — serialize each device's outgoing transfers
+      on a single send port (see :func:`simulate`).  This is a *semantic
+      mode*: makespans under contention are not comparable to makespans
+      without it, so the serving tier folds the mode into its topology
+      digest (``serve.fingerprint.topology_fingerprint``) and the
+      persistent store invalidates cross-mode records at load, exactly
+      like a policy bump.
+    * ``shaped_reward`` — continuous memory penalty instead of the
+      paper's −10 cliff (:func:`reward_shaped`); training envs use it,
+      evaluation envs do not.
+
+    The default config is bit-identical to the historical semantics —
+    every golden-pinned makespan is a ``SimConfig()`` makespan.
+    """
+    sender_contention: bool = False
+    shaped_reward: bool = False
+
+
 class SimTopology(NamedTuple):
     """Device-side arrays of a Topology, ready for the jitted scheduler."""
     num_devices: int         # static python int
@@ -44,6 +71,8 @@ class SimTopology(NamedTuple):
 
     @classmethod
     def from_topology(cls, topo: Topology) -> "SimTopology":
+        """Convert a host-side Topology into device arrays (bw inverted
+        once so the scheduler multiplies instead of divides)."""
         with np.errstate(divide="ignore"):
             inv_bw = (1.0 / topo.bw).astype(np.float32)
         return cls(topo.num_devices, jnp.asarray(inv_bw),
@@ -234,17 +263,41 @@ def _simulate_batch_jit(sg: SimGraph, placements, inv_bw, latency, mem_caps,
 
 @dataclasses.dataclass(frozen=True)
 class Env:
-    """Bound environment: graph + topology, exposing jit-compiled rollout eval."""
+    """Bound environment: graph + topology, exposing jit-compiled rollout eval.
+
+    ``shaped_reward`` / ``sender_contention`` mirror :class:`SimConfig`
+    (``Env.from_config`` binds one); both are static jit keys, so envs
+    with different modes compile separate programs and an env's numbers
+    never silently change mode.
+    """
     sg: SimGraph
     topo: Topology
     shaped_reward: bool = False
     sender_contention: bool = False
 
+    @classmethod
+    def from_config(cls, sg: SimGraph, topo: Topology,
+                    sim: "SimConfig") -> "Env":
+        """Bind a graph + topology under one :class:`SimConfig`."""
+        return cls(sg, topo, shaped_reward=sim.shaped_reward,
+                   sender_contention=sim.sender_contention)
+
+    @property
+    def config(self) -> SimConfig:
+        """The :class:`SimConfig` this env evaluates under."""
+        return SimConfig(sender_contention=self.sender_contention,
+                         shaped_reward=self.shaped_reward)
+
     @cached_property
     def sim_topology(self) -> SimTopology:
+        """Device-side :class:`SimTopology` arrays (built once per env)."""
         return SimTopology.from_topology(self.topo)
 
     def rewards(self, placements: jnp.ndarray):
+        """Evaluate M placements: returns (makespan[M], reward[M], valid[M]).
+
+        Routes through a stable jitted wrapper so repeated calls with the
+        same shapes and modes hit the pjit cache instead of re-tracing."""
         st = self.sim_topology
         return _simulate_batch_jit(self.sg, jnp.asarray(placements),
                                    st.inv_bw, st.latency, st.mem_caps,

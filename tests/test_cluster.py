@@ -236,3 +236,42 @@ def test_rescaled_cluster_warm_starts_each_new_shard(tmp_path):
         assert r.source == "cache"              # no re-inference anywhere
     st = cl3.stats()
     assert st["zero_shot"] == 0 and st["hit_rate"] == pytest.approx(1.0)
+
+
+def test_cluster_runs_contention_aware_end_to_end(tmp_path):
+    """A contention-mode cluster mints mode-carrying keys on router AND
+    workers (they must agree for routing to hit warm state), persists
+    mode provenance, and a mode-flipped cluster over the same store
+    re-infers everything with stale_served == 0."""
+    graphs = _variants(6)
+    topo = _topo(graphs)
+    tr = _trainer()
+    cfg = dataclasses.replace(
+        _cluster_cfg(2),
+        serve=ServeConfig(max_batch=1, max_wait_s=0.0, num_samples=2,
+                          finetune_iters=0, simulated=True,
+                          sender_contention=True))
+    cl = PlacementCluster(tr, cfg, store_root=tmp_path)
+    for j, g in enumerate(graphs):
+        cl.submit(g, topo, arrival_t=j * 0.01)
+    # second sweep: all cache hits (keys agree router<->worker)
+    srcs = [cl.submit(g, topo, arrival_t=1.0 + j * 0.01).source
+            for j, g in enumerate(graphs)]
+    cl.drain()
+    assert all(s == "cache" for s in srcs)
+    key = cl.workers[0].completed[0].key
+    assert key[1] == FP.topology_fingerprint(topo, sender_contention=True)
+    st = cl.stats()
+    assert st["stale_served"] == 0
+    cl.shutdown()
+
+    # flip the whole tier back to contention-off over the same store
+    cl_off = PlacementCluster(tr, _cluster_cfg(2), store_root=tmp_path)
+    inval = max(svc.store.stats.records_invalidated
+                for svc in cl_off.workers)
+    assert inval == len(graphs)            # every persisted key cross-mode
+    srcs_off = [cl_off.submit(g, topo, arrival_t=j * 0.01).source
+                for j, g in enumerate(graphs)]
+    cl_off.drain()
+    assert all(s in ("zero_shot", "baseline") for s in srcs_off)
+    assert cl_off.stats()["stale_served"] == 0

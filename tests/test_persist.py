@@ -145,3 +145,51 @@ def test_stale_policy_records_are_invalidated_on_load(tmp_path):
     again = PersistentStore(tmp_path, "phB")
     assert len(again) == 1
     assert again.lookup(_key(0)).measured_makespan == pytest.approx(1.8)
+
+
+def test_contention_mode_is_provenance(tmp_path):
+    """Records written under one simulator mode are invalidated when a
+    store of the other mode replays them — symmetric, like a policy
+    bump — and pre-mode records (no "cm" field) load as mode-off."""
+    st = PersistentStore(tmp_path, "ph1")               # contention off
+    st.record(_key(0), _entry(2.0))
+    st.record(_key(1), _entry(3.0))
+    st.close()
+
+    on = PersistentStore(tmp_path, "ph1", worker_tag="w1",
+                         sender_contention=True)
+    assert len(on) == 0
+    assert on.stats.records_invalidated == 2
+    on.record(_key(2), _entry(1.0))                     # an on-mode record
+    on.close()
+
+    back = PersistentStore(tmp_path, "ph1", worker_tag="w2")
+    assert len(back) == 2                               # off records fresh
+    assert back.stats.records_invalidated == 1          # the on-mode one
+    assert back.lookup(_key(2)) is None
+
+    # pre-contention segments carry no "cm" field: they must load as
+    # mode-off (backward compatible), not as corrupt
+    line = json.dumps({"gfp": "legacy", "tfp": "topoA", "td": "topoA",
+                       "pl": [0, 1], "pred": 1.0, "mk": 1.0,
+                       "src": "zero_shot", "hits": 0, "pubs": 1,
+                       "fts": 0, "ph": "ph1"})
+    with open(tmp_path / "seg-w3-000000.jsonl", "w") as f:
+        f.write(line + "\n")
+    legacy = PersistentStore(tmp_path, "ph1", worker_tag="w4")
+    assert legacy.lookup(("legacy", "topoA")) is not None
+    assert legacy.stats.records_corrupt == 0
+
+
+def test_compaction_preserves_contention_provenance(tmp_path):
+    """Compacting an on-mode store must keep the mode on its records."""
+    on = PersistentStore(tmp_path, "ph1", sender_contention=True)
+    on.record(_key(0), _entry(2.0))
+    on.record(_key(0), _entry(1.5))
+    on.compact()
+    on.close()
+    on2 = PersistentStore(tmp_path, "ph1", worker_tag="w1",
+                          sender_contention=True)
+    assert on2.lookup(_key(0)).measured_makespan == 1.5
+    off = PersistentStore(tmp_path, "ph1", worker_tag="w2")
+    assert len(off) == 0 and off.stats.records_invalidated == 1

@@ -2,7 +2,12 @@
 
 The integration test drives the full ladder under a simulated clock, so
 latency/hit-rate assertions are exact functions of the request trace.
+The contention-mode tests pin the provenance rule: the topology digest
+carries the simulator mode, and a mode flip over a warm store re-infers
+with ``stale_served == 0`` — exactly like a policy bump.
 """
+import dataclasses
+
 import numpy as np
 import pytest
 
@@ -12,9 +17,11 @@ from repro.core.policy import PolicyConfig
 from repro.core.ppo import PPOConfig, PPOTrainer
 from repro.graphs import synthetic as S
 from repro.serve import (MicroBatcher, PlacementService, PlacementCache,
-                         ServeConfig, SimulatedClock)
+                         PersistentStore, ServeConfig, SimulatedClock,
+                         policy_hash, topology_fingerprint)
 from repro.serve.cache import CacheEntry
 from repro.sim.device import p100_topology
+from repro.sim.reference import simulate_ref
 
 
 def _entry(mk, pl_len=4):
@@ -178,3 +185,105 @@ def test_escalation_ladder_under_simulated_clock():
     for r in ft_served:
         key_entry = svc.cache.peek(r.key)
         assert r.makespan == pytest.approx(key_entry.measured_makespan)
+
+
+# ------------------------------------------------- contention-aware serving
+def _small_trainer(seed=0):
+    return PPOTrainer(PolicyConfig(hidden=32, gnn_layers=2, placer_layers=1,
+                                   ffn=64, window=32, max_devices=8),
+                      PPOConfig(num_samples=8, epochs=1), seed=seed)
+
+
+def test_topology_digest_carries_contention_mode():
+    """Two simulator modes never share a cache key; contention-off is the
+    historical digest bit-for-bit."""
+    topo = p100_topology(4)
+    off = topology_fingerprint(topo)
+    on = topology_fingerprint(topo, sender_contention=True)
+    assert off != on
+    assert off == topology_fingerprint(topo, sender_contention=False)
+    # an equal topology (fresh object) digests identically per mode
+    topo2 = p100_topology(4)
+    assert topology_fingerprint(topo2) == off
+    assert topology_fingerprint(topo2, sender_contention=True) == on
+
+
+def test_contention_service_judges_with_contended_simulator():
+    """A contention-mode worker's reported makespan is the *contended*
+    makespan of the placement it returns (numpy-oracle cross-check), and
+    its keys are disjoint from an off-mode worker's."""
+    g = S.rnnlm(2, time_steps=3)
+    topo = p100_topology(4).tightened(g.total_mem())
+    cfg = ServeConfig(max_batch=1, num_samples=2, simulated=True,
+                      finetune_iters=0, seed=0, sender_contention=True)
+    svc = PlacementService(_small_trainer(), cfg, SimulatedClock())
+    r = svc.submit(g, topo, arrival_t=0.0)
+    svc.drain()
+    assert r.source in ("zero_shot", "baseline")
+    mk_ref, _, valid = simulate_ref(g, r.placement, topo,
+                                    sender_contention=True)
+    assert valid and np.isclose(r.makespan, mk_ref, rtol=1e-4)
+
+    svc_off = PlacementService(_small_trainer(),
+                               dataclasses.replace(cfg,
+                                                   sender_contention=False),
+                               SimulatedClock())
+    r_off = svc_off.submit(g, topo, arrival_t=0.0)
+    svc_off.drain()
+    assert r_off.key[0] == r.key[0]        # same graph fingerprint
+    assert r_off.key[1] != r.key[1]        # different topology digest
+
+
+def test_contention_mode_flip_reinfers_with_zero_stale(tmp_path):
+    """A warm store written contention-off must be fully invalidated by a
+    contention-on restart (same policy!): every request re-infers, the
+    stale_served audit stays 0, and flipping back still sees the
+    original records."""
+    trainer = _small_trainer()
+    ph = policy_hash(trainer.state.params)
+    graphs = [S.rnnlm(2, time_steps=3), S.rnnlm(2, time_steps=4)]
+    topo = p100_topology(4)
+    topo = topo.with_mem_caps(max(g.total_mem() for g in graphs) * 2)
+    cfg = ServeConfig(max_batch=1, num_samples=2, simulated=True,
+                      finetune_iters=0, seed=0)
+
+    store = PersistentStore(tmp_path, ph)
+    svc = PlacementService(trainer, cfg, SimulatedClock(), store=store)
+    for i, g in enumerate(graphs):
+        svc.submit(g, topo, arrival_t=float(i))
+    svc.shutdown()
+    written = store.stats.records_written
+    assert written >= len(graphs)
+
+    # mode flip: same policy, contended simulator (shutdown compaction
+    # merged the publish+snapshot duplicates down to one record per key)
+    store_on = PersistentStore(tmp_path, ph, worker_tag="w1",
+                               sender_contention=True)
+    assert store_on.stats.records_invalidated == len(graphs)
+    assert len(store_on) == 0              # nothing fresh to serve
+    cfg_on = dataclasses.replace(cfg, sender_contention=True)
+    svc_on = PlacementService(trainer, cfg_on, SimulatedClock(),
+                              store=store_on)
+    assert len(svc_on.cache) == 0          # no cross-mode warm start
+    srcs = []
+    for i, g in enumerate(graphs):
+        srcs.append(svc_on.submit(g, topo, arrival_t=float(i)).source)
+    svc_on.shutdown()
+    assert all(s in ("zero_shot", "baseline") for s in srcs)   # re-inferred
+    assert svc_on.counts["stale_served"] == 0
+    assert svc_on.counts["cache"] == 0 and svc_on.counts["disk"] == 0
+
+    # flipping back: off-mode records are fresh again, on-mode ones are not
+    store_back = PersistentStore(tmp_path, ph, worker_tag="w2")
+    assert len(store_back) >= len(graphs)
+    assert store_back.stats.records_invalidated >= len(graphs)  # on-mode recs
+
+
+def test_service_refuses_cross_mode_store(tmp_path):
+    """A service must not warm-start from a store replaying the other
+    simulator mode."""
+    trainer = _small_trainer()
+    store = PersistentStore(tmp_path, policy_hash(trainer.state.params),
+                            sender_contention=True)
+    with pytest.raises(AssertionError):
+        PlacementService(trainer, ServeConfig(simulated=True), store=store)

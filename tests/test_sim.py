@@ -6,10 +6,11 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core import baselines as B
 from repro.graphs import synthetic as S
-from repro.sim import p100_topology, prepare_sim_graph, simulate
+from repro.sim import (A100, P100, cpu_gpu_topology, multi_gen_fleet,
+                       p100_topology, prepare_sim_graph, simulate)
 from repro.sim.reference import simulate_ref
-from repro.sim.scheduler import (Env, SimTopology, reward_from_runtime,
-                                 reward_shaped)
+from repro.sim.scheduler import (Env, SimConfig, SimTopology,
+                                 reward_from_runtime, reward_shaped)
 
 
 def _env(g, d=4, tighten=None):
@@ -57,6 +58,58 @@ def test_jit_matches_reference_sender_contention(g, seed):
     # contention can only delay: contended makespan >= uncontended
     mk0, _, _ = simulate(sg, jnp.asarray(p), SimTopology.from_topology(topo))
     assert float(mk) >= float(mk0) - 1e-9
+
+
+HETERO_TOPOS = {
+    "multi_gen": multi_gen_fleet(((A100, 2), (P100, 2))),
+    "cpu_gpu": cpu_gpu_topology(num_gpus=3, num_cpus=1),
+}
+
+
+@pytest.mark.parametrize("tname", sorted(HETERO_TOPOS))
+@pytest.mark.parametrize("g", GRAPHS[:2], ids=lambda g: g.name)
+@pytest.mark.parametrize("seed", [0, 1])
+def test_jit_matches_reference_contention_heterogeneous(tname, g, seed):
+    """Contention parity on fleets with NON-uniform bandwidth matrices:
+    the send-port serialization must gather per-pair bw/latency exactly
+    like the oracle, not just the uniform scalar the tier-1 graphs use."""
+    topo = HETERO_TOPOS[tname]
+    d = topo.num_devices
+    off = ~np.eye(d, dtype=bool)
+    assert np.unique(topo.bw[off]).size > 1          # genuinely non-uniform
+    sg = prepare_sim_graph(g, topo, max_deg=16)
+    rng = np.random.RandomState(seed)
+    p = rng.randint(0, d, g.num_nodes).astype(np.int32)
+    mk, util, valid = simulate(sg, jnp.asarray(p),
+                               SimTopology.from_topology(topo),
+                               sender_contention=True)
+    mk_ref, util_ref, valid_ref = simulate_ref(g, p, topo,
+                                               sender_contention=True)
+    assert np.isclose(float(mk), mk_ref, rtol=1e-4)
+    assert np.isclose(float(util), util_ref, rtol=1e-5)
+    assert bool(valid) == valid_ref
+    mk0, _, _ = simulate(sg, jnp.asarray(p), SimTopology.from_topology(topo))
+    assert float(mk) >= float(mk0) - 1e-9            # contention only delays
+
+
+def test_env_from_config_threads_contention():
+    """SimConfig -> Env.from_config produces the same numbers as the raw
+    simulate() flags, and the default config is the historical path."""
+    g = GRAPHS[0]
+    sg, topo = _env(g)
+    rng = np.random.RandomState(3)
+    p = rng.randint(0, 4, (2, g.num_nodes)).astype(np.int32)
+    st = SimTopology.from_topology(topo)
+    for contention in (False, True):
+        env = Env.from_config(sg, topo, SimConfig(sender_contention=contention))
+        assert env.config == SimConfig(sender_contention=contention)
+        mk, _, _ = env.rewards(jnp.asarray(p))
+        for i in range(2):
+            mk_i, _, _ = simulate(sg, jnp.asarray(p[i]), st,
+                                  sender_contention=contention)
+            assert np.isclose(float(mk[i]), float(mk_i), rtol=1e-6)
+    # default Env == default SimConfig env (golden path unchanged)
+    assert Env(sg, topo).config == SimConfig()
 
 
 @settings(max_examples=10, deadline=None)

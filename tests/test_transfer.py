@@ -1,0 +1,55 @@
+"""Topology-transfer campaign: fleets, schema, and the headline claim.
+
+The fast tests pin the campaign's fixtures (fleet shapes inside the
+policy's capability-table width, genuinely non-uniform link matrices);
+the slow test runs a miniature end-to-end campaign in both simulator
+modes and asserts the acceptance bar: the trained policy beats the
+topology-blind ``round_robin`` control on at least one held-out fleet.
+"""
+import numpy as np
+import pytest
+
+from benchmarks import common as C
+from benchmarks import transfer
+
+
+def test_fleets_fit_the_policy_and_are_heterogeneous():
+    tf = transfer.train_fleet()
+    assert tf.num_devices <= C.POLICY.max_devices
+    off = ~np.eye(tf.num_devices, dtype=bool)
+    assert np.unique(tf.bw[off]).size > 1        # NVLink/PCIe/IB hierarchy
+    holdouts = transfer.holdout_fleets()
+    assert set(holdouts) == {"cpu_gpu", "multi_gen"}
+    for topo in holdouts.values():
+        assert topo.num_devices <= C.POLICY.max_devices
+        assert not topo.is_uniform               # speed asymmetry is the point
+        # genuinely held out: no holdout equals the training fleet
+        assert topo.num_devices != tf.num_devices or \
+            [s.name for s in topo.specs] != [s.name for s in tf.specs]
+
+
+def test_eval_set_contains_seen_and_unseen_graphs():
+    train_names = {g.name for g in transfer._train_graphs(False)}
+    evals = transfer._eval_graphs(False)
+    assert evals["seen"].name in train_names
+    assert evals["unseen"].name not in train_names
+
+
+@pytest.mark.slow
+def test_transfer_beats_round_robin_on_a_holdout_fleet():
+    """Miniature campaign, both contention modes: schema complete and
+    the trained policy beats round_robin on >= 1 held-out fleet."""
+    res = transfer.run(pretrain_iters=4, finetune_iters=3)
+    for mode in ("contention_off", "contention_on"):
+        r = res[mode]
+        assert r["any_holdout_beats_rr"], f"{mode}: never beat round_robin"
+        assert r["sender_contention"] == (mode == "contention_on")
+        for fleet in ("cpu_gpu", "multi_gen"):
+            for role in ("seen", "unseen"):
+                row = r["fleets"][fleet][role]
+                assert {"zero_shot", "finetune", "gdp", "round_robin",
+                        "human", "metis", "gdp_vs_round_robin",
+                        "beats_rr"} <= set(row)
+                assert row["gdp"] == pytest.approx(
+                    min(row["zero_shot"], row["finetune"]))
+                assert np.isfinite(row["gdp"])   # GDP always finds a placement
