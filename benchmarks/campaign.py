@@ -53,6 +53,13 @@ def main():
         full=True)
     C.save_cached(cached)
 
+    print("[campaign] large", flush=True)
+    from benchmarks import large_graph
+    cached["large"] = large_graph.run(
+        quick=False, pretrain_iters=max(args.iters // 4, 40),
+        finetune_iters=24)
+    C.save_cached(cached)
+
     print("[campaign] serve", flush=True)
     from benchmarks import serve
     cached["serve"] = serve.run(quick=False)

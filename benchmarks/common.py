@@ -16,6 +16,8 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import resource
+import sys
 import time
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -55,27 +57,37 @@ class Task:
 
 
 def make_task(name: str, g, num_devices: int, tighten: float = 1.8,
-              sim: SimConfig = SimConfig()) -> Task:
+              sim: SimConfig = SimConfig(),
+              segment: Optional[int] = None) -> Task:
     """Task on a uniform memory-tightened P100 pool (paper protocol)."""
     cap = g.total_mem() / num_devices * tighten
     topo = p100_topology(num_devices).with_mem_caps(cap)
-    return make_task_topo(name, g, topo, sim=sim)
+    return make_task_topo(name, g, topo, sim=sim, segment=segment)
 
 
-def make_task_topo(name: str, g, topo, sim: SimConfig = SimConfig()) -> Task:
+def make_task_topo(name: str, g, topo, sim: SimConfig = SimConfig(),
+                   segment: Optional[int] = None) -> Task:
     """Task on an arbitrary (possibly heterogeneous) Topology.
 
     ``sim`` fixes the simulator semantics for BOTH envs — training reward
     and evaluation judge run the same mode (e.g. ``sender_contention``),
     only the reward shaping differs between them.  The default config
     reproduces the historical golden-pinned makespans bit-for-bit.
+
+    ``segment`` builds a segment-native task: featurizer and simulator
+    arrays are padded to a multiple of the segment and both envs evaluate
+    with the segment-batched loop — makespans are bit-identical to the
+    monolithic path, but no compiled shape ever exceeds the segment (the
+    paper-scale large-graph campaign runs this way).
     """
-    sg = prepare_sim_graph(g, topo, max_deg=16)
+    sg = prepare_sim_graph(g, topo, max_deg=16, pad_multiple=segment)
     train = dataclasses.replace(sim, shaped_reward=True)
     true = dataclasses.replace(sim, shaped_reward=False)
-    return Task(name, g, topo, Env.from_config(sg, topo, train),
-                Env.from_config(sg, topo, true),
-                featurize(g, max_deg=8, topo=topo), topo.num_devices)
+    return Task(name, g, topo,
+                Env.from_config(sg, topo, train, segment=segment),
+                Env.from_config(sg, topo, true, segment=segment),
+                featurize(g, max_deg=8, topo=topo, pad_multiple=segment),
+                topo.num_devices)
 
 
 def paper_tasks(full: bool = False) -> List[Task]:
@@ -159,6 +171,14 @@ def time_to_quality(curve: List[Tuple[float, float]], target: float) -> float:
         if b <= target:
             return t
     return float("inf")
+
+
+def peak_rss_bytes() -> int:
+    """Peak resident set size of this process in bytes (the audit the
+    large-graph campaign reports; ru_maxrss is KiB on Linux, bytes on
+    macOS)."""
+    r = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    return int(r if sys.platform == "darwin" else r * 1024)
 
 
 # ----------------------------------------------------------------- caching

@@ -128,6 +128,23 @@ def main() -> None:
                       f"{int(r['any_holdout_beats_rr'])},"
                       f"fleets={','.join(r['fleets'])}")
 
+    _section("Paper-scale graphs: segmented pipeline on large GNMT")
+    if not args.skip_rl:
+        from benchmarks import large_graph
+        lg = large_graph.run(quick=quick,
+                             pretrain_iters=10 if quick else 60,
+                             finetune_iters=8 if quick else 24)
+        # rows print themselves as large.* CSV lines
+    if "large" in cached:
+        lgc = cached["large"]
+        for name, r in lgc.get("graphs", {}).items():
+            print(f"large.campaign.{name},{r['gdp']:.5f},"
+                  f"nodes={r['nodes']};rr={r['round_robin']:.5f};"
+                  f"dRR={r['gdp_vs_round_robin']*100:+.1f}%")
+        print(f"large.campaign.peak_rss_gb,"
+              f"{lgc.get('peak_rss_bytes', 0)/2**30:.2f},"
+              f"max_nodes={lgc.get('max_nodes', 0)}")
+
     _section("Serving: batched throughput / latency sweep / regret")
     if not args.skip_rl:
         from benchmarks import serve

@@ -43,6 +43,7 @@ class GraphBatch(NamedTuple):
     mem_frac: jnp.ndarray    # f32[N]  node resident bytes / tightest device cap
     comp_frac: jnp.ndarray   # f32[N]  best-device compute time / graph total
     dev_feats: jnp.ndarray   # f32[D, F_DEV] normalized per-device capabilities
+    dev_mem_cap: jnp.ndarray  # f32[D] device cap / tightest cap (mem_frac units)
     num_nodes: int           # real node count (static python int)
 
 
@@ -68,13 +69,18 @@ def device_features(topo) -> np.ndarray:
 
 
 def featurize(g: DataflowGraph, max_deg: int = 8,
-              pad_to: Optional[int] = None, topo=None) -> GraphBatch:
+              pad_to: Optional[int] = None, topo=None,
+              pad_multiple: Optional[int] = None) -> GraphBatch:
     """``topo`` (sim.device.Topology) enables the resource-aware decoder
     context: per-node memory/compute fractions the AR placer accumulates
     per device while decoding, plus the per-device capability table
-    (DESIGN.md §5-addendum)."""
+    (DESIGN.md §5-addendum).  ``pad_multiple`` rounds the padded node dim
+    up to a multiple (segment-native pipelines pad to the decode segment
+    so every segment has one compiled shape)."""
     n = g.num_nodes
     pad_n = pad_to or n
+    if pad_multiple:
+        pad_n = ((pad_n + pad_multiple - 1) // pad_multiple) * pad_multiple
     assert pad_n >= n, (pad_n, n)
 
     f = np.zeros((pad_n, NUM_NUMERIC_FEATURES), np.float32)
@@ -101,6 +107,7 @@ def featurize(g: DataflowGraph, max_deg: int = 8,
     mem_frac = np.zeros(pad_n, np.float32)
     comp_frac = np.zeros(pad_n, np.float32)
     dev_feats = np.zeros((0, NUM_DEVICE_FEATURES), np.float32)
+    dev_mem_cap = np.zeros(0, np.float32)
     if topo is not None:
         from repro.sim.cost_model import node_compute_matrix
         # fractions against the tightest cap / best device: identical to
@@ -109,10 +116,15 @@ def featurize(g: DataflowGraph, max_deg: int = 8,
         ct = node_compute_matrix(g, topo).min(axis=1)
         comp_frac[:n] = ct / max(ct.sum(), 1e-12)
         dev_feats = device_features(topo)
+        # per-device caps in mem_frac units: the decoder's running
+        # accumulators compare directly against these (memory-aware
+        # masked decode, PolicyConfig.mask_full_devices)
+        dev_mem_cap = (topo.mem_caps / topo.mem_caps.min()).astype(
+            np.float32)
     return GraphBatch(jnp.asarray(op), jnp.asarray(f), jnp.asarray(nbr_idx),
                       jnp.asarray(nbr_mask), jnp.asarray(node_mask),
                       jnp.asarray(mem_frac), jnp.asarray(comp_frac),
-                      jnp.asarray(dev_feats), n)
+                      jnp.asarray(dev_feats), jnp.asarray(dev_mem_cap), n)
 
 
 # Padded-size ladder for micro-batched serving: bucketing request graphs
@@ -130,6 +142,17 @@ def bucket_size(n: int, buckets: Tuple[int, ...] = BUCKET_SIZES) -> int:
     while out < n:
         out *= 2
     return out
+
+
+def jumbo_bucket(n: int, multiple: int = 2048) -> int:
+    """Padded size for jumbo graphs: the next multiple of ``multiple``.
+
+    Past the ladder, power-of-two buckets waste up to ~50% padding on a
+    50k-node graph; a segmented decoder only needs the node dim to be a
+    multiple of its segment, so the serving tier pads jumbo admissions to
+    this much tighter grid instead (``ServeConfig.jumbo_pad_multiple``).
+    """
+    return ((n + multiple - 1) // multiple) * multiple
 
 
 def pad_to_common(batches: List[GraphBatch],
@@ -170,8 +193,11 @@ def pad_to_common(batches: List[GraphBatch],
         df = np.zeros((d, NUM_DEVICE_FEATURES), np.float32)
         if bd:
             df[:bd] = np.asarray(b.dev_feats)
+        dmc = np.zeros(d, np.float32)   # padded devices: cap 0 (never used)
+        if b.dev_mem_cap.shape[0]:
+            dmc[:b.dev_mem_cap.shape[0]] = np.asarray(b.dev_mem_cap)
         out.append(GraphBatch(op, feats, idx, mask, nmask, memf, compf, df,
-                              b.num_nodes))
+                              dmc, b.num_nodes))
     return out
 
 
@@ -191,6 +217,6 @@ def stack_batches(batches: List[GraphBatch],
         op=stk("op"), feats=stk("feats"), nbr_idx=stk("nbr_idx"),
         nbr_mask=stk("nbr_mask"), node_mask=stk("node_mask"),
         mem_frac=stk("mem_frac"), comp_frac=stk("comp_frac"),
-        dev_feats=stk("dev_feats"),
+        dev_feats=stk("dev_feats"), dev_mem_cap=stk("dev_mem_cap"),
         num_nodes=max(b.num_nodes for b in padded),
     )

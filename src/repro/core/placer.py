@@ -34,6 +34,7 @@ masks, so logp(sampled placement) is exact for PPO.
 """
 from __future__ import annotations
 
+from functools import partial
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -122,6 +123,42 @@ def _head_logits(params, x, c, num_devices, dev_keys):
     return jnp.where((jnp.arange(dmax) < num_devices), logits, NEG)
 
 
+def _cap_vector(params, dev_mem_cap: Optional[jnp.ndarray]
+                ) -> Optional[jnp.ndarray]:
+    """[Dmax] per-device memory caps in mem_frac units (0 for padding),
+    or None when the featurizer had no topology (masking disabled)."""
+    if dev_mem_cap is None or not dev_mem_cap.shape[0]:
+        return None
+    dmax = params["head"]["b"].shape[0]
+    cap = jnp.zeros((dmax,))
+    return cap.at[:dev_mem_cap.shape[0]].set(dev_mem_cap[:dmax])
+
+
+def _mask_full_devices(logits: jnp.ndarray, mem_used: jnp.ndarray,
+                       mem_frac, cap: jnp.ndarray,
+                       num_devices: int) -> jnp.ndarray:
+    """Memory-aware decode mask: devices that the node would push past
+    their cap get NEG logits, so sampled placements are feasible by
+    construction whenever greedy feasibility exists.  If EVERY device
+    would overflow (a graph that cannot fit at all), the mask is a no-op
+    — the simulator's validity check remains the arbiter.
+
+    The tolerance is CONSERVATIVE (devices are closed slightly *before*
+    the cap): the mask accumulates f32 ``mem_frac`` while the simulator
+    sums raw bytes, so an exact-boundary admission could round past the
+    strict byte-level check and be judged invalid — closing early keeps
+    the feasibility guarantee at the cost of a sliver of capacity.
+
+    ``mem_used``/``mem_frac`` broadcast: [..., Dmax] running loads and
+    [...] node fractions (works for the AR step and the TF batch alike).
+    """
+    dmax = logits.shape[-1]
+    ok = (mem_used + jnp.expand_dims(mem_frac, -1)) <= cap * (1 - 1e-6)
+    ok = ok & (jnp.arange(dmax) < num_devices)
+    any_ok = jnp.any(ok, axis=-1, keepdims=True)
+    return jnp.where(ok | ~any_ok, logits, NEG)
+
+
 # ------------------------------------------------------------ teacher-forced
 def _banded_attention(q, k, v, window: int) -> jnp.ndarray:
     """Causal sliding-window attention via band gather.
@@ -142,23 +179,21 @@ def _banded_attention(q, k, v, window: int) -> jnp.ndarray:
     return jnp.einsum("nhw,nwhd->nhd", aw, vb)
 
 
-def apply_tf(params: Dict[str, Any], h: jnp.ndarray, node_mask: jnp.ndarray,
-             placements: jnp.ndarray, c: Optional[jnp.ndarray],
-             mem_frac: jnp.ndarray, comp_frac: jnp.ndarray,
-             dev_feats: Optional[jnp.ndarray] = None, *,
-             window: int = 256, heads: int = 4, num_devices: int = 4,
-             use_attention: bool = True) -> jnp.ndarray:
-    """Parallel logits for given placements (PPO ratio path).
+def _tf_ctx(params, placements: jnp.ndarray, node_mask: jnp.ndarray,
+            mem_frac: jnp.ndarray, comp_frac: jnp.ndarray
+            ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """(prev-device [N], resource ctx [N, 2*Dmax+2], mem_before [N, Dmax])
+    for a TF pass.
 
-    h: [N, H] (topo order); placements: [N] int32.  Node i sees devices of
-    nodes < i (shifted by one; the first node sees the `start` symbol Dmax).
-    Returns device logits [N, Dmax].
+    Node i sees devices of nodes < i (shifted by one; the first node sees
+    the ``start`` symbol Dmax) and the per-device running loads BEFORE it
+    (exclusive cumsum) — shared by the monolithic and segmented passes so
+    both consume bit-identical decoder inputs.  ``mem_before`` also feeds
+    the memory-aware decode mask.
     """
-    n, hid = h.shape
     dmax = params["head"]["b"].shape[0]
     prev = jnp.concatenate([jnp.array([dmax], jnp.int32),
                             placements[:-1].astype(jnp.int32)])
-    # running per-device loads BEFORE each node (exclusive cumsum)
     onehot = jax.nn.one_hot(placements, dmax) * node_mask[:, None]
     mem_cum = jnp.cumsum(onehot * mem_frac[:, None], axis=0)
     comp_cum = jnp.cumsum(onehot * comp_frac[:, None], axis=0)
@@ -167,6 +202,28 @@ def apply_tf(params: Dict[str, Any], h: jnp.ndarray, node_mask: jnp.ndarray,
     comp_before = jnp.concatenate([zero, comp_cum[:-1]], axis=0)
     ctx = jnp.concatenate([mem_before, comp_before,
                            mem_frac[:, None], comp_frac[:, None]], axis=-1)
+    return prev, ctx, mem_before
+
+
+def apply_tf(params: Dict[str, Any], h: jnp.ndarray, node_mask: jnp.ndarray,
+             placements: jnp.ndarray, c: Optional[jnp.ndarray],
+             mem_frac: jnp.ndarray, comp_frac: jnp.ndarray,
+             dev_feats: Optional[jnp.ndarray] = None, *,
+             window: int = 256, heads: int = 4, num_devices: int = 4,
+             use_attention: bool = True,
+             dev_mem_cap: Optional[jnp.ndarray] = None,
+             mask_full: bool = False) -> jnp.ndarray:
+    """Parallel logits for given placements (PPO ratio path).
+
+    h: [N, H] (topo order); placements: [N] int32.  Returns device logits
+    [N, Dmax].  Compiled shapes scale with N; for paper-scale graphs use
+    :func:`apply_tf_segmented`, which is bit-identical.  ``mask_full``
+    applies the memory-aware decode mask (must match the sampling side
+    so PPO ratios stay exact).
+    """
+    n, hid = h.shape
+    prev, ctx, mem_before = _tf_ctx(params, placements, node_mask,
+                                    mem_frac, comp_frac)
     x = _inputs(params, h, prev, ctx)
     for lp in params["layers"]:
         if use_attention:
@@ -174,43 +231,135 @@ def apply_tf(params: Dict[str, Any], h: jnp.ndarray, node_mask: jnp.ndarray,
             out = _banded_attention(q, k, v, window).reshape(n, hid)
             x = x + nn.dense(lp["wo"], modulate(c, out)) * node_mask[:, None]
         x = _ffn(lp, x, c)
-    return _head_logits(params, x, c, num_devices, _dev_keys(params, dev_feats))
+    logits = _head_logits(params, x, c, num_devices,
+                          _dev_keys(params, dev_feats))
+    cap = _cap_vector(params, dev_mem_cap) if mask_full else None
+    if cap is not None:
+        logits = _mask_full_devices(logits, mem_before, mem_frac, cap,
+                                    num_devices)
+    return logits
+
+
+# --------------------------------------------------- segmented TF decode
+@partial(jax.jit, static_argnames=("heads", "num_devices", "use_attention"))
+def _tf_segment(params, x, kmem, vmem, node_mask, base, c, dev_keys,
+                mem_before, mem_frac, cap, *,
+                heads: int, num_devices: int, use_attention: bool):
+    """One teacher-forced segment with Transformer-XL-style memory.
+
+    x: [S, H] decoder inputs; kmem/vmem: [L, W-1, heads, hd] keys/values
+    of the previous W-1 positions per layer; base: global index of x[0];
+    mem_before/mem_frac/cap: the segment's slice of the memory-aware
+    decode mask inputs (cap None disables masking).
+    Returns (logits [S, Dmax], new kmem, new vmem).  The W-wide causal
+    band is gathered from memory+segment exactly as ``_banded_attention``
+    gathers it from the full sequence, so values are bit-identical.
+    """
+    s, hid = x.shape
+    wm1 = kmem.shape[1]
+    w = wm1 + 1
+    hd = hid // heads
+    idx = jnp.arange(s)[:, None] + jnp.arange(w)[None, :]    # buffer index
+    valid = (base + idx - wm1) >= 0                          # global index
+    new_k, new_v = [], []
+    for li, lp in enumerate(params["layers"]):
+        if use_attention:
+            q, k, v = _proj_qkv(lp, x, c, heads)             # [S, heads, hd]
+            kbuf = jnp.concatenate([kmem[li], k])            # [W-1+S, ...]
+            vbuf = jnp.concatenate([vmem[li], v])
+            kb, vb = kbuf[idx], vbuf[idx]                    # [S, W, heads, hd]
+            sc = jnp.einsum("nhd,nwhd->nhw", q, kb) / jnp.sqrt(
+                jnp.float32(hd))
+            sc = jnp.where(valid[:, None, :], sc, NEG)
+            aw = jax.nn.softmax(sc, axis=-1)
+            out = jnp.einsum("nhw,nwhd->nhd", aw, vb).reshape(s, hid)
+            x = x + nn.dense(lp["wo"], modulate(c, out)) * node_mask[:, None]
+            new_k.append(kbuf[s:])
+            new_v.append(vbuf[s:])
+        else:
+            new_k.append(kmem[li])
+            new_v.append(vmem[li])
+        x = _ffn(lp, x, c)
+    logits = _head_logits(params, x, c, num_devices, dev_keys)
+    if cap is not None:
+        logits = _mask_full_devices(logits, mem_before, mem_frac, cap,
+                                    num_devices)
+    return logits, jnp.stack(new_k), jnp.stack(new_v)
+
+
+def apply_tf_segmented(params: Dict[str, Any], h: jnp.ndarray,
+                       node_mask: jnp.ndarray, placements: jnp.ndarray,
+                       c: Optional[jnp.ndarray], mem_frac: jnp.ndarray,
+                       comp_frac: jnp.ndarray,
+                       dev_feats: Optional[jnp.ndarray] = None, *,
+                       segment: int = 512, window: int = 256,
+                       heads: int = 4, num_devices: int = 4,
+                       use_attention: bool = True,
+                       dev_mem_cap: Optional[jnp.ndarray] = None,
+                       mask_full: bool = False) -> jnp.ndarray:
+    """Teacher-forced logits via fixed-size segments (paper's scalable
+    segmented attention): compiled shapes are per-(segment, window), so a
+    graph of ANY length reuses one compiled step — a 50k-node GNMT never
+    compiles a 50k-shaped program.
+
+    Bit-identical to :func:`apply_tf` (pinned by tests/test_segmented.py):
+    the causal W-band each node attends to is reproduced exactly from the
+    carried per-layer memory of the previous ``window - 1`` keys/values.
+    Memory crossing a segment boundary is ``stop_gradient``-ed
+    (Transformer-XL recurrence): forward values are unchanged, backward
+    residency stays O(segment).
+    """
+    n, hid = h.shape
+    pad = (-n) % segment
+    if pad:
+        h = jnp.pad(h, ((0, pad), (0, 0)))
+        node_mask = jnp.pad(node_mask, (0, pad))
+        placements = jnp.pad(placements, (0, pad))
+        mem_frac = jnp.pad(mem_frac, (0, pad))
+        comp_frac = jnp.pad(comp_frac, (0, pad))
+    prev, ctx, mem_before = _tf_ctx(params, placements, node_mask,
+                                    mem_frac, comp_frac)
+    x = _inputs(params, h, prev, ctx)
+    dev_keys = _dev_keys(params, dev_feats)
+    cap = _cap_vector(params, dev_mem_cap) if mask_full else None
+    nlayers = len(params["layers"])
+    hd = hid // heads
+    kmem = jnp.zeros((nlayers, window - 1, heads, hd))
+    vmem = jnp.zeros((nlayers, window - 1, heads, hd))
+    outs = []
+    for s0 in range(0, n + pad, segment):
+        sl = slice(s0, s0 + segment)
+        logits, kmem, vmem = _tf_segment(
+            params, x[sl], jax.lax.stop_gradient(kmem),
+            jax.lax.stop_gradient(vmem), node_mask[sl],
+            jnp.int32(s0), c, dev_keys, mem_before[sl], mem_frac[sl], cap,
+            heads=heads, num_devices=num_devices,
+            use_attention=use_attention)
+        outs.append(logits)
+    return jnp.concatenate(outs)[:n]
 
 
 # ------------------------------------------------------------- AR sampling
-def sample_ar(params: Dict[str, Any], h: jnp.ndarray, node_mask: jnp.ndarray,
-              c: Optional[jnp.ndarray], key,
-              mem_frac: jnp.ndarray, comp_frac: jnp.ndarray,
-              dev_feats: Optional[jnp.ndarray] = None, *,
-              window: int = 256, heads: int = 4, num_devices: int = 4,
-              use_attention: bool = True, temperature: float = 1.0
-              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Exact autoregressive sampling; returns (placement [N], logp [N]).
+def _ar_step_fn(params, c, dev_keys, temperature, *, heads: int,
+                num_devices: int, use_attention: bool, cap=None):
+    """Build the one-node AR decode step (shared by the monolithic scan
+    and the segmented per-segment scan, so both sample identically).
 
-    Ring-buffer KV caches of size ``window`` per layer reproduce the
-    teacher-forced mask exactly (causal, i-j < window, inclusive self);
-    per-device mem/comp accumulators reproduce the teacher-forced cumsum.
-
-    ``temperature`` sharpens the per-node device distribution (the serving
-    path decodes near-greedily at ~0.1); the returned logp is that of the
-    *tempered* distribution, so PPO callers must keep the default 1.0.
+    Carry: (kcache [L,w,heads,hd], vcache, poscache [w], prev_dev,
+    mem_used [Dmax], comp_used [Dmax]); xs: (h_i, i, key_i, mem_frac_i,
+    comp_frac_i).  The ring-buffer width ``w`` is read off the carry.
+    ``cap`` [Dmax] enables the memory-aware decode mask (the carried
+    ``mem_used`` accumulator is exactly the TF pass's exclusive cumsum,
+    so sampling and ratio evaluation mask identically).
     """
-    n, hid = h.shape
-    hd = hid // heads
-    nlayers = len(params["layers"])
     dmax = params["head"]["b"].shape[0]
-    w = min(window, n)
-
-    dev_keys = _dev_keys(params, dev_feats)        # loop-invariant
-    kcache0 = jnp.zeros((nlayers, w, heads, hd))
-    vcache0 = jnp.zeros((nlayers, w, heads, hd))
-    poscache0 = jnp.full((w,), -10 ** 9, jnp.int32)   # absolute idx per slot
-    mem0 = jnp.zeros((dmax,))
-    comp0 = jnp.zeros((dmax,))
 
     def step(carry, xs):
         kc, vc, pc, prev_dev, mem_used, comp_used = carry
         hi, i, ki, mfi, cfi = xs                # [H], idx, rng key, scalars
+        hid = hi.shape[0]
+        hd = hid // heads
+        w = pc.shape[0]
         ctx = jnp.concatenate([mem_used, comp_used, mfi[None], cfi[None]])
         x = _inputs(params, hi[None], prev_dev[None], ctx[None])[0]  # [H]
         slot = jnp.mod(i, w)
@@ -235,6 +384,9 @@ def sample_ar(params: Dict[str, Any], h: jnp.ndarray, node_mask: jnp.ndarray,
                 new_vc.append(vc[li])
             x = _ffn(lp, x[None], c)[0]
         logits = _head_logits(params, x[None], c, num_devices, dev_keys)[0]
+        if cap is not None:
+            logits = _mask_full_devices(logits, mem_used, mfi, cap,
+                                        num_devices)
         logits = logits / jnp.float32(temperature)
         lpv = jax.nn.log_softmax(logits)
         d = jax.random.categorical(ki, logits)
@@ -245,8 +397,108 @@ def sample_ar(params: Dict[str, Any], h: jnp.ndarray, node_mask: jnp.ndarray,
                  d.astype(jnp.int32), mem_new, comp_new),
                 (d.astype(jnp.int32), lpv[d]))
 
+    return step
+
+
+def _ar_carry0(params, *, w: int, heads: int, hid: int):
+    """Fresh AR decode carry for a ring buffer of width ``w``."""
+    hd = hid // heads
+    nlayers = len(params["layers"])
+    dmax = params["head"]["b"].shape[0]
+    return (jnp.zeros((nlayers, w, heads, hd)),
+            jnp.zeros((nlayers, w, heads, hd)),
+            jnp.full((w,), -10 ** 9, jnp.int32),   # absolute idx per slot
+            jnp.int32(dmax), jnp.zeros((dmax,)), jnp.zeros((dmax,)))
+
+
+def sample_ar(params: Dict[str, Any], h: jnp.ndarray, node_mask: jnp.ndarray,
+              c: Optional[jnp.ndarray], key,
+              mem_frac: jnp.ndarray, comp_frac: jnp.ndarray,
+              dev_feats: Optional[jnp.ndarray] = None, *,
+              window: int = 256, heads: int = 4, num_devices: int = 4,
+              use_attention: bool = True, temperature: float = 1.0,
+              dev_mem_cap: Optional[jnp.ndarray] = None,
+              mask_full: bool = False
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Exact autoregressive sampling; returns (placement [N], logp [N]).
+
+    Ring-buffer KV caches of size ``window`` per layer reproduce the
+    teacher-forced mask exactly (causal, i-j < window, inclusive self);
+    per-device mem/comp accumulators reproduce the teacher-forced cumsum.
+
+    ``temperature`` sharpens the per-node device distribution (the serving
+    path decodes near-greedily at ~0.1); the returned logp is that of the
+    *tempered* distribution, so PPO callers must keep the default 1.0.
+    ``mask_full`` enables the memory-aware decode mask (feasible-by-
+    construction placements; see ``_mask_full_devices``).
+    """
+    n, hid = h.shape
+    dev_keys = _dev_keys(params, dev_feats)        # loop-invariant
+    cap = _cap_vector(params, dev_mem_cap) if mask_full else None
+    step = _ar_step_fn(params, c, dev_keys, temperature, heads=heads,
+                       num_devices=num_devices, use_attention=use_attention,
+                       cap=cap)
     keys = jax.random.split(key, n)
     _, (devs, lps) = jax.lax.scan(
-        step, (kcache0, vcache0, poscache0, jnp.int32(dmax), mem0, comp0),
+        step, _ar_carry0(params, w=min(window, n), heads=heads, hid=hid),
         (h, jnp.arange(n), keys, mem_frac, comp_frac))
     return devs, lps * node_mask
+
+
+@partial(jax.jit, static_argnames=("heads", "num_devices", "use_attention"))
+def _ar_segment_scan(params, h_seg, idx_seg, keys_seg, mf_seg, cf_seg,
+                     carry, c, dev_keys, temperature, cap, *, heads: int,
+                     num_devices: int, use_attention: bool):
+    """Scan the shared AR step over one segment (the ONE compiled decode
+    program a segmented sampler reuses for every segment of every graph)."""
+    step = _ar_step_fn(params, c, dev_keys, temperature, heads=heads,
+                       num_devices=num_devices, use_attention=use_attention,
+                       cap=cap)
+    return jax.lax.scan(step, carry,
+                        (h_seg, idx_seg, keys_seg, mf_seg, cf_seg))
+
+
+def sample_ar_segmented(params: Dict[str, Any], h: jnp.ndarray,
+                        node_mask: jnp.ndarray, c: Optional[jnp.ndarray],
+                        key, mem_frac: jnp.ndarray, comp_frac: jnp.ndarray,
+                        dev_feats: Optional[jnp.ndarray] = None, *,
+                        segment: int = 512, window: int = 256,
+                        heads: int = 4, num_devices: int = 4,
+                        use_attention: bool = True, temperature: float = 1.0,
+                        dev_mem_cap: Optional[jnp.ndarray] = None,
+                        mask_full: bool = False
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Segment-native AR sampling: a Python loop over fixed-size segments,
+    each a single compiled scan of the SAME step function as
+    :func:`sample_ar` with the carry threaded through — samples are
+    bit-identical to the monolithic scan (tests/test_segmented.py), but
+    compiled shapes never exceed ``segment``.
+    """
+    n, hid = h.shape
+    pad = (-n) % segment
+    # per-node keys must match jax.random.split(key, n) exactly for the
+    # monolithic pin (split(key, m) has no prefix property in m), so pad
+    # the key array instead of splitting wider
+    keys = jax.random.split(key, n)
+    if pad:
+        h = jnp.pad(h, ((0, pad), (0, 0)))
+        mem_frac = jnp.pad(mem_frac, (0, pad))
+        comp_frac = jnp.pad(comp_frac, (0, pad))
+        keys = jnp.concatenate(
+            [keys, jnp.broadcast_to(keys[-1:], (pad,) + keys.shape[1:])])
+    dev_keys = _dev_keys(params, dev_feats)
+    cap = _cap_vector(params, dev_mem_cap) if mask_full else None
+    carry = _ar_carry0(params, w=window, heads=heads, hid=hid)
+    idx = jnp.arange(n + pad)
+    temp = jnp.float32(temperature)
+    devs, lps = [], []
+    for s0 in range(0, n + pad, segment):
+        sl = slice(s0, s0 + segment)
+        carry, (d_seg, lp_seg) = _ar_segment_scan(
+            params, h[sl], idx[sl], keys[sl], mem_frac[sl], comp_frac[sl],
+            carry, c, dev_keys, temp, cap, heads=heads,
+            num_devices=num_devices, use_attention=use_attention)
+        devs.append(d_seg)
+        lps.append(lp_seg)
+    return (jnp.concatenate(devs)[:n],
+            jnp.concatenate(lps)[:n] * node_mask)

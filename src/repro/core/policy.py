@@ -29,6 +29,24 @@ class PolicyConfig:
     use_attention: bool = True          # Fig. 3 ablation switch
     use_superposition: bool = True      # Fig. 3 ablation switch
     agg_impl: str = "jnp"               # "jnp" | "pallas"
+    # Segmented decode (paper's scalable segmented attention): decode in
+    # fixed-size segments with carried Transformer-XL-style state, so
+    # compiled shapes are per-segment and a graph of ANY length reuses
+    # one compiled step.  None = monolithic (bit-identical results; the
+    # invariant is pinned by tests/test_segmented.py).
+    segment: Optional[int] = None
+    # Chunked GNN neighbor aggregation: bound the [chunk, K, H] gather so
+    # featurization peak memory is O(chunk), not O(N).  None = one-shot.
+    gnn_chunk: Optional[int] = None
+    # Memory-aware decode: mask devices a node would push past their
+    # memory cap (the decoder's running per-device accumulators vs
+    # featurize's dev_mem_cap), so sampled placements are feasible by
+    # construction whenever greedy feasibility exists.  Off by default —
+    # it changes the sampling distribution, so golden-pinned runs keep
+    # the paper's unconstrained decode; the paper-scale campaign turns
+    # it on (at 50k nodes an unconstrained policy fork can spend its
+    # whole fine-tune budget before drawing one valid sample).
+    mask_full_devices: bool = False
 
 
 def init(key, cfg: PolicyConfig) -> Dict[str, Any]:
@@ -41,8 +59,26 @@ def init(key, cfg: PolicyConfig) -> Dict[str, Any]:
     }
 
 
+def _decode_fn(cfg: PolicyConfig, gb: GraphBatch, num_devices: int):
+    """(placer decode fn, shared kwargs) for the config: the segmented
+    variant plus ``segment=`` when ``cfg.segment`` is set, monolithic
+    otherwise.  One spot assembles the decode kwargs so the sampling,
+    ratio, and greedy paths can never drift apart."""
+    kwargs = dict(window=cfg.window, heads=cfg.heads,
+                  num_devices=num_devices,
+                  use_attention=cfg.use_attention,
+                  dev_mem_cap=(gb.dev_mem_cap if cfg.mask_full_devices
+                               else None),
+                  mask_full=cfg.mask_full_devices)
+    if cfg.segment is not None:
+        return placer.sample_ar_segmented, dict(kwargs,
+                                                segment=cfg.segment)
+    return placer.sample_ar, kwargs
+
+
 def _embed(params, cfg: PolicyConfig, gb: GraphBatch):
-    h = gnn.apply(params["gnn"], gb, agg_impl=cfg.agg_impl)
+    h = gnn.apply(params["gnn"], gb, agg_impl=cfg.agg_impl,
+                  chunk=cfg.gnn_chunk)
     c = None
     if cfg.use_superposition:
         x0 = gnn.graph_summary(h, gb.node_mask)
@@ -53,14 +89,17 @@ def _embed(params, cfg: PolicyConfig, gb: GraphBatch):
 def sample(params, cfg: PolicyConfig, gb: GraphBatch, num_devices: int,
            key, num_samples: int, temperature: float = 1.0
            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Returns (placements i32[M, N], per-node logp f32[M, N])."""
+    """Returns (placements i32[M, N], per-node logp f32[M, N]).
+
+    With ``cfg.segment`` set the AR decode runs segment-by-segment
+    (callers must NOT wrap this in an outer jit — the segmented path
+    manages its own per-segment compiled programs)."""
     h, c = _embed(params, cfg, gb)
     keys = jax.random.split(key, num_samples)
-    devs, lps = jax.vmap(lambda k: placer.sample_ar(
+    fn, kwargs = _decode_fn(cfg, gb, num_devices)
+    devs, lps = jax.vmap(lambda k: fn(
         params["placer"], h, gb.node_mask, c, k, gb.mem_frac, gb.comp_frac,
-        gb.dev_feats, window=cfg.window, heads=cfg.heads,
-        num_devices=num_devices, use_attention=cfg.use_attention,
-        temperature=temperature))(keys)
+        gb.dev_feats, temperature=temperature, **kwargs))(keys)
     return devs.astype(jnp.int32), lps
 
 
@@ -80,15 +119,15 @@ def sample_batch(params, cfg: PolicyConfig, sgb: GraphBatch,
     keys = jax.random.split(key, b)
 
     def one(op, feats, nbr_idx, nbr_mask, node_mask, mem_frac, comp_frac,
-            dev_feats, k):
+            dev_feats, dev_mem_cap, k):
         gb = GraphBatch(op, feats, nbr_idx, nbr_mask, node_mask, mem_frac,
-                        comp_frac, dev_feats, op.shape[0])
+                        comp_frac, dev_feats, dev_mem_cap, op.shape[0])
         return sample(params, cfg, gb, num_devices, k, num_samples,
                       temperature)
 
     return jax.vmap(one)(sgb.op, sgb.feats, sgb.nbr_idx, sgb.nbr_mask,
                          sgb.node_mask, sgb.mem_frac, sgb.comp_frac,
-                         sgb.dev_feats, keys)
+                         sgb.dev_feats, sgb.dev_mem_cap, keys)
 
 
 def logp_and_entropy(params, cfg: PolicyConfig, gb: GraphBatch,
@@ -96,13 +135,14 @@ def logp_and_entropy(params, cfg: PolicyConfig, gb: GraphBatch,
                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Teacher-forced per-node logp of placements [M,N] + mean entropy."""
     h, c = _embed(params, cfg, gb)
+    # the shared decode kwargs already carry segment= for segmented cfgs
+    kwargs = _decode_fn(cfg, gb, num_devices)[1]
+    tf_fn = (placer.apply_tf_segmented if cfg.segment is not None
+             else placer.apply_tf)
 
     def one(pl):
-        lg = placer.apply_tf(params["placer"], h, gb.node_mask, pl, c,
-                             gb.mem_frac, gb.comp_frac, gb.dev_feats,
-                             window=cfg.window, heads=cfg.heads,
-                             num_devices=num_devices,
-                             use_attention=cfg.use_attention)
+        lg = tf_fn(params["placer"], h, gb.node_mask, pl, c, gb.mem_frac,
+                   gb.comp_frac, gb.dev_feats, **kwargs)
         logp = jax.nn.log_softmax(lg, axis=-1)
         node_lp = jnp.take_along_axis(logp, pl[:, None], axis=-1)[:, 0]
         p = jnp.exp(logp)
@@ -124,9 +164,7 @@ def greedy(params, cfg: PolicyConfig, gb: GraphBatch, num_devices: int,
     h, c = _embed(params, cfg, gb)
     # temperature ~0: sharpen by scaling head params is intrusive; instead
     # draw K samples and let the caller pick the best via the simulator.
-    devs, _ = placer.sample_ar(params["placer"], h, gb.node_mask, c, key,
-                               gb.mem_frac, gb.comp_frac, gb.dev_feats,
-                               window=cfg.window, heads=cfg.heads,
-                               num_devices=num_devices,
-                               use_attention=cfg.use_attention)
+    fn, kwargs = _decode_fn(cfg, gb, num_devices)
+    devs, _ = fn(params["placer"], h, gb.node_mask, c, key, gb.mem_frac,
+                 gb.comp_frac, gb.dev_feats, **kwargs)
     return devs.astype(jnp.int32)

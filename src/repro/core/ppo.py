@@ -101,10 +101,9 @@ def _loss_fn(params, pcfg: PolicyConfig, gb: GraphBatch, num_devices: int,
     return loss, {"pg": pg.mean(), "entropy": ent}
 
 
-@partial(jax.jit, static_argnames=("pcfg", "num_devices", "ocfg"))
-def _update(params, opt_state, pcfg: PolicyConfig, ocfg: AdamConfig,
-            gb: GraphBatch, num_devices: int, placements, old_logp, adv,
-            clip_eps, entropy_coef, grad_clip):
+def _update_fn(params, opt_state, pcfg: PolicyConfig, ocfg: AdamConfig,
+               gb: GraphBatch, num_devices: int, placements, old_logp, adv,
+               clip_eps, entropy_coef, grad_clip):
     (loss, aux), grads = jax.value_and_grad(_loss_fn, has_aux=True)(
         params, pcfg, gb, num_devices, placements, old_logp, adv,
         clip_eps, entropy_coef)
@@ -113,6 +112,10 @@ def _update(params, opt_state, pcfg: PolicyConfig, ocfg: AdamConfig,
     params, opt_state = adam_update(grads, opt_state, params, ocfg)
     aux = dict(aux, loss=loss, gnorm=gnorm)
     return params, opt_state, aux
+
+
+_update = partial(jax.jit, static_argnames=("pcfg", "num_devices", "ocfg")
+                  )(_update_fn)
 
 
 @partial(jax.jit, static_argnames=("pcfg", "num_devices", "num_samples"))
@@ -128,17 +131,45 @@ def _logp(params, pcfg: PolicyConfig, gb: GraphBatch, num_devices: int,
                                        placements)
 
 
+# Segmented configs manage their own per-segment compiled programs: an
+# outer jit would trace the Python segment loop into one giant graph-sized
+# XLA program — exactly the compile blow-up segmenting exists to avoid —
+# so these dispatchers route them to the eager orchestrators instead.
+def _sample_any(params, pcfg, gb, num_devices, key, num_samples):
+    if pcfg.segment is None:
+        return _sample(params, pcfg, gb, num_devices, key, num_samples)
+    return policy_mod.sample(params, pcfg, gb, num_devices, key, num_samples)
+
+
+def _logp_any(params, pcfg, gb, num_devices, placements):
+    if pcfg.segment is None:
+        return _logp(params, pcfg, gb, num_devices, placements)
+    return policy_mod.logp_and_entropy(params, pcfg, gb, num_devices,
+                                       placements)
+
+
+def _update_any(params, opt_state, pcfg, ocfg, gb, num_devices, placements,
+                old_logp, adv, clip_eps, entropy_coef, grad_clip):
+    fn = _update if pcfg.segment is None else _update_fn
+    return fn(params, opt_state, pcfg, ocfg, gb, num_devices, placements,
+              old_logp, adv, clip_eps, entropy_coef, grad_clip)
+
+
 def canonical_relabel(placements: np.ndarray, num_nodes: int) -> np.ndarray:
-    """Relabel each row's devices by first appearance along topo order."""
+    """Relabel each row's devices by first appearance along topo order
+    (vectorized: paper-scale rows make a per-element Python loop the
+    bottleneck of a PPO iteration)."""
     out = placements.copy()
-    for m in range(placements.shape[0]):
-        row = placements[m, :num_nodes]
-        mapping: Dict[int, int] = {}
-        for d in row:
-            di = int(d)
-            if di not in mapping:
-                mapping[di] = len(mapping)
-        out[m, :num_nodes] = np.vectorize(mapping.get)(row)
+    m, _ = placements.shape
+    dmax = int(placements.max()) + 1 if placements.size else 1
+    for i in range(m):
+        row = placements[i, :num_nodes]
+        first = np.full(dmax, num_nodes, np.int64)
+        np.minimum.at(first, row, np.arange(row.size))
+        rank = np.empty(dmax, placements.dtype)
+        rank[np.argsort(first, kind="stable")] = np.arange(
+            dmax, dtype=placements.dtype)
+        out[i, :num_nodes] = rank[row]
     return out
 
 
@@ -198,14 +229,14 @@ class PPOTrainer:
     def iteration(self, name: str, gb: GraphBatch, env,
                   num_devices: int) -> Dict[str, float]:
         """One PPO iteration on a single graph task."""
-        placements, old_logp = _sample(self.state.params, self.pcfg, gb,
-                                       num_devices, self._next_key(),
-                                       self.ppo.num_samples)
+        placements, old_logp = _sample_any(self.state.params, self.pcfg, gb,
+                                           num_devices, self._next_key(),
+                                           self.ppo.num_samples)
         if self.ppo.canonicalize:
             placements = jnp.asarray(
                 canonical_relabel(np.asarray(placements), gb.num_nodes))
-            old_logp, _ = _logp(self.state.params, self.pcfg, gb,
-                                num_devices, placements)
+            old_logp, _ = _logp_any(self.state.params, self.pcfg, gb,
+                                    num_devices, placements)
         makespans, rewards, valid = env.rewards(placements)
         rewards_np = np.asarray(rewards)
         if self.ppo.baseline == "loo" and rewards_np.size > 1:
@@ -225,11 +256,11 @@ class PPOTrainer:
         ent_coef = self.ppo.entropy_coef * self.state.entropy_scale
         aux = {}
         for _ in range(self.ppo.epochs):
-            p, o, aux = _update(self.state.params, self.state.opt_state,
-                                self.pcfg, self.ocfg, gb, num_devices,
-                                placements, old_logp, jnp.asarray(adv),
-                                self.ppo.clip_eps, ent_coef,
-                                self.ppo.grad_clip)
+            p, o, aux = _update_any(self.state.params, self.state.opt_state,
+                                    self.pcfg, self.ocfg, gb, num_devices,
+                                    placements, old_logp, jnp.asarray(adv),
+                                    self.ppo.clip_eps, ent_coef,
+                                    self.ppo.grad_clip)
             self.state.params, self.state.opt_state = p, o
         self.state.step += 1
         self.state.entropy_scale *= self.ppo.entropy_decay
@@ -306,8 +337,8 @@ class PPOTrainer:
                         m: int = 16) -> float:
         """Best valid makespan over ``m`` sampled placements (zero-shot
         evaluation: no weight updates)."""
-        pl, _ = _sample(self.state.params, self.pcfg, gb, num_devices,
-                        self._next_key(), m)
+        pl, _ = _sample_any(self.state.params, self.pcfg, gb, num_devices,
+                            self._next_key(), m)
         mk, _, valid = env.rewards(pl)
         mk = np.where(np.asarray(valid), np.asarray(mk), np.inf)
         return float(mk.min())

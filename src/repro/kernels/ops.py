@@ -15,7 +15,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.segment_maxpool import neighbor_maxpool_dense
+from repro.kernels.segment_maxpool import (neighbor_maxpool_chunked,
+                                           neighbor_maxpool_dense)
 
 NEG = -1e9
 
@@ -35,23 +36,36 @@ def _pad_to(x: jnp.ndarray, axis: int, mult: int):
 
 
 def neighbor_maxpool(z: jnp.ndarray, nbr_idx: jnp.ndarray,
-                     nbr_mask: jnp.ndarray) -> jnp.ndarray:
+                     nbr_mask: jnp.ndarray,
+                     chunk: Optional[int] = None) -> jnp.ndarray:
     """GraphSAGE aggregation via the blocked masked-adjacency kernel.
 
     z: [N, H]; nbr_idx: [N, K] (sentinel = N); nbr_mask: [N, K].
     Returns [N, H] with isolated rows zeroed (matches gnn._neighbor_max).
+    ``chunk`` routes through the row-blocked kernel wrapper whose densified
+    adjacency slab is O(chunk·N) — required for paper-scale graphs where
+    the one-shot [N, N] bitmask would not fit.
     """
     n, h = z.shape
-    # densify the padded neighbor lists into an adjacency bitmask
-    onehot = (nbr_idx[..., None] ==
-              jnp.arange(n)[None, None, :])          # [N, K, N]
-    adj = jnp.any(onehot & (nbr_mask[..., None] > 0), axis=1)   # [N, N]
     zp, _ = _pad_to(z, 0, 128)
     zp, _ = _pad_to(zp, 1, 128)
-    adjp, _ = _pad_to(adj, 0, 64)
-    adjp, _ = _pad_to(adjp, 1, 128)
-    out = neighbor_maxpool_dense(zp.astype(jnp.float32), adjp,
-                                 interpret=not _on_tpu())
+    if chunk is not None and n > chunk:
+        chunk = max(64, (chunk // 64) * 64)
+        pad_n = (-n) % chunk
+        idxp = jnp.pad(nbr_idx, ((0, pad_n), (0, 0)),
+                       constant_values=zp.shape[0])
+        maskp = jnp.pad(nbr_mask, ((0, pad_n), (0, 0)))
+        out = neighbor_maxpool_chunked(zp.astype(jnp.float32), idxp, maskp,
+                                       chunk=chunk, interpret=not _on_tpu())
+    else:
+        # densify the padded neighbor lists into an adjacency bitmask
+        onehot = (nbr_idx[..., None] ==
+                  jnp.arange(n)[None, None, :])          # [N, K, N]
+        adj = jnp.any(onehot & (nbr_mask[..., None] > 0), axis=1)   # [N, N]
+        adjp, _ = _pad_to(adj, 0, 64)
+        adjp, _ = _pad_to(adjp, 1, 128)
+        out = neighbor_maxpool_dense(zp.astype(jnp.float32), adjp,
+                                     interpret=not _on_tpu())
     out = out[:n, :h]
     return jnp.where(out <= NEG / 2, 0.0, out).astype(z.dtype)
 

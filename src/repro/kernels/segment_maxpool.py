@@ -14,9 +14,10 @@ contiguous — the standard accumulation pattern).  Isolated rows come back
 as NEG and are zeroed by the caller.
 
 The block-dense form is exact for the ≤few-k-node graphs the PPO loop
-trains on; the production plan for 50k+-node graphs is identical kernel
-body + block-sparse grid via scalar-prefetched (row, col) block indices
-(metadata from featurize), documented in DESIGN.md.
+trains on; for 50k+-node graphs :func:`neighbor_maxpool_chunked` runs the
+SAME kernel body over row blocks — each block densifies only its own
+``[chunk, M]`` adjacency slab (O(chunk·N) instead of O(N²)), so peak
+memory is bounded by the chunk, matching the segment-native featurizer.
 
 Oracle: ``repro.kernels.ref.neighbor_maxpool_ref``; CPU validation uses
 interpret=True.
@@ -73,3 +74,33 @@ def neighbor_maxpool_dense(z: jnp.ndarray, adj: jnp.ndarray, *,
         out_shape=jax.ShapeDtypeStruct((n, h), z.dtype),
         interpret=interpret,
     )(adj, z)
+
+
+def neighbor_maxpool_chunked(z: jnp.ndarray, nbr_idx: jnp.ndarray,
+                             nbr_mask: jnp.ndarray, *, chunk: int = 512,
+                             interpret: bool = False) -> jnp.ndarray:
+    """Row-blocked aggregation for graphs too large to densify at once.
+
+    z: [M, H] neighbor features (M a multiple of 128); nbr_idx: [N, K]
+    with sentinel >= M; nbr_mask: [N, K]; N a multiple of ``chunk``
+    (``chunk`` a multiple of 64).  Each row block scatters its padded
+    neighbor lists into a ``[chunk, M]`` adjacency slab — the only dense
+    intermediate, O(chunk·M) — and reuses :func:`neighbor_maxpool_dense`
+    on it, so the kernel body (and its TPU tiling) is identical to the
+    one-shot path.  Rows with no neighbors return NEG (caller zeroes).
+    """
+    n, k = nbr_idx.shape
+    m = z.shape[0]
+    assert n % chunk == 0, (n, chunk)
+    rows = jnp.arange(chunk)[:, None]
+    out = []
+    for r0 in range(0, n, chunk):
+        idx = nbr_idx[r0:r0 + chunk]
+        msk = nbr_mask[r0:r0 + chunk] > 0
+        # scatter into [chunk, M+1]: sentinel/padded entries land in the
+        # trailing column, which is dropped before the kernel call
+        adj = jnp.zeros((chunk, m + 1), bool).at[
+            rows, jnp.where(msk, jnp.minimum(idx, m), m)].set(msk)
+        out.append(neighbor_maxpool_dense(z, adj[:, :m],
+                                          interpret=interpret))
+    return jnp.concatenate(out)

@@ -25,8 +25,8 @@ from repro.serve.persist import (PersistentStore, StoredEntry,  # noqa: F401
 from repro.serve.admission import (AdmissionConfig,  # noqa: F401
                                    AdmissionController, AdmissionStats,
                                    degraded_placement)
-from repro.serve.service import (PlacementService, Request,  # noqa: F401
-                                 ServeConfig, ServiceCosts, SimulatedClock,
-                                 WallClock)
+from repro.serve.service import (PlacementService, Rejection,  # noqa: F401
+                                 Request, ServeConfig, ServiceCosts,
+                                 SimulatedClock, WallClock)
 from repro.serve.cluster import (ClusterConfig, HashRing,  # noqa: F401
                                  PlacementCluster)

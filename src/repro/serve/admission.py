@@ -40,11 +40,15 @@ from repro.core import baselines as B
 class AdmissionConfig:
     """Router-side load-shedding knobs.
 
-    ``max_lag_s``/``max_queue_depth`` default to unlimited (admit all);
-    ``shed_s`` is the simulated cost of producing a degraded answer.
+    ``max_lag_s``/``max_queue_depth``/``max_graph_nodes`` default to
+    unlimited (admit all); ``shed_s`` is the simulated cost of producing
+    a degraded answer.  ``max_graph_nodes`` sheds jumbo graphs at the
+    router before they reach a worker — the per-worker jumbo bound
+    (``ServeConfig.max_graph_nodes``) still applies behind it.
     """
     max_lag_s: float = math.inf        # shed if worker clock lags arrival
     max_queue_depth: int = 10 ** 9     # shed if unresolved work exceeds
+    max_graph_nodes: int = 10 ** 9     # shed jumbo graphs at the router
     shed_s: float = 2e-4               # cost of the baseline fast path
 
 
@@ -54,16 +58,18 @@ class AdmissionStats:
     admitted: int = 0
     shed_lag: int = 0
     shed_depth: int = 0
+    shed_oversize: int = 0
 
     @property
     def shed(self) -> int:
-        """Total shed requests (lag + depth)."""
-        return self.shed_lag + self.shed_depth
+        """Total shed requests (lag + depth + oversize)."""
+        return self.shed_lag + self.shed_depth + self.shed_oversize
 
     def as_dict(self) -> Dict[str, int]:
         """Plain-dict view for merging into cluster stats."""
         return {"admitted": self.admitted, "shed": self.shed,
-                "shed_lag": self.shed_lag, "shed_depth": self.shed_depth}
+                "shed_lag": self.shed_lag, "shed_depth": self.shed_depth,
+                "shed_oversize": self.shed_oversize}
 
 
 class AdmissionController:
@@ -77,14 +83,20 @@ class AdmissionController:
         self.cfg = config
         self.stats = AdmissionStats()
 
-    def admit(self, lag_s: float, queue_depth: int) -> bool:
+    def admit(self, lag_s: float, queue_depth: int,
+              num_nodes: int = 0) -> bool:
         """True iff a request may enter a worker with the given load.
 
         Args:
             lag_s: seconds the worker's clock runs ahead of the request's
                 arrival (its queueing delay were it admitted now).
             queue_depth: unresolved requests parked at the worker.
+            num_nodes: request graph size (jumbo shedding); 0 skips the
+                size check.
         """
+        if num_nodes > self.cfg.max_graph_nodes:
+            self.stats.shed_oversize += 1
+            return False
         if lag_s > self.cfg.max_lag_s:
             self.stats.shed_lag += 1
             return False

@@ -187,7 +187,8 @@ class PlacementCluster:
         svc = self.workers[w]
         key = (fp, self._topo_fp(topo))
         lag = max(0.0, svc.clock.now() - arrival_t)
-        if not self.admission.admit(lag, svc.queue_depth()):
+        if not self.admission.admit(lag, svc.queue_depth(),
+                                    num_nodes=g.num_nodes):
             return self._shed(g, topo, arrival_t, key, order)
         self._keys_per_worker[w].add(key)
         if svc.cache.peek(key) is None:

@@ -59,7 +59,7 @@ import numpy as np
 
 from repro.core import baselines as B
 from repro.core import policy as policy_mod
-from repro.core.featurize import bucket_size, featurize
+from repro.core.featurize import bucket_size, featurize, jumbo_bucket
 from repro.core.policy import PolicyConfig
 from repro.core.ppo import PPOTrainer, clone_state
 from repro.sim.device import Topology
@@ -119,6 +119,10 @@ class ServiceCosts:
     batch_per_graph_s: float = 0.01   # marginal slot cost inside the call
     single_per_graph_s: float = 0.04  # unbatched call, for rate modeling
     finetune_iter_s: float = 0.5      # one PPO iteration
+    jumbo_per_knode_s: float = 0.01   # segmented decode, per 1k nodes
+    # worker-side typed-rejection cost; mirrors AdmissionConfig.shed_s
+    # (the router-side knob) — keep the two in sync when tuning either
+    shed_s: float = 2e-4              # degraded baseline fast path
 
 
 @dataclasses.dataclass(frozen=True)
@@ -142,7 +146,28 @@ class ServeConfig:
     # sender-port-serialized scheduler and every key's topology digest
     # carries the mode.
     sender_contention: bool = False
+    # Jumbo bucket (paper-scale admissions): graphs above
+    # ``jumbo_threshold`` nodes skip the micro-batcher — they are padded
+    # to the next multiple of ``jumbo_pad_multiple`` (featurize.
+    # jumbo_bucket; far tighter than the power-of-two ladder at 50k
+    # nodes) and served one at a time through the segmented decode when
+    # the policy has one (``PolicyConfig.segment``).  Graphs above
+    # ``max_graph_nodes`` — or topologies wider than the policy head —
+    # are REJECTED: a typed shed to the degraded baseline fast path
+    # (``Request.rejection``, ``counts["shed_rejected"]``) instead of an
+    # assert crashing the worker.
+    jumbo_threshold: int = 4096
+    jumbo_pad_multiple: int = 2048
+    max_graph_nodes: int = 1 << 17
     costs: ServiceCosts = dataclasses.field(default_factory=ServiceCosts)
+
+
+@dataclasses.dataclass(frozen=True)
+class Rejection:
+    """Typed reason an oversized request was shed to the baseline path."""
+    reason: str                # "graph_too_large" | "too_many_devices"
+    limit: int
+    requested: int
 
 
 @dataclasses.dataclass
@@ -159,6 +184,7 @@ class Request:
     makespan: float = float("inf")
     source: str = "pending"    # cache | disk | zero_shot | baseline | shed
     entry_source: str = ""     # provenance of the cache line that served it
+    rejection: Optional[Rejection] = None   # set on typed oversize sheds
 
     @property
     def latency(self) -> float:
@@ -248,7 +274,8 @@ class PlacementService:
                                        "baseline": 0, "finetunes": 0,
                                        "finetune_published": 0,
                                        "forward_adopted": 0,
-                                       "stale_served": 0}
+                                       "stale_served": 0, "shed": 0,
+                                       "shed_rejected": 0, "jumbo": 0}
         if self.store is not None:
             for key, se in self.store.items():
                 if preload is None or preload(key):
@@ -285,6 +312,17 @@ class PlacementService:
         req = Request(self._next_id, g, topo, now, key, order)
         self._next_id += 1
 
+        # typed admission bounds: an oversized request degrades to the
+        # baseline fast path instead of crashing the worker on an assert
+        if topo.num_devices > self.pcfg.max_devices:
+            return self._shed_rejected(req, "too_many_devices",
+                                       self.pcfg.max_devices,
+                                       topo.num_devices)
+        if g.num_nodes > self.cfg.max_graph_nodes:
+            return self._shed_rejected(req, "graph_too_large",
+                                       self.cfg.max_graph_nodes,
+                                       g.num_nodes)
+
         entry = self.cache.get(key)
         if self.clock.simulated:
             self.clock.advance(self.cfg.costs.lookup_s)
@@ -310,6 +348,11 @@ class PlacementService:
                 return req
         self._inflight[key] = []
         ctx = self._context(key, g, topo, order)
+        if g.num_nodes > self.cfg.jumbo_threshold:
+            # jumbo bucket: segment-padded, served solo — batching would
+            # backfill max_batch copies of a 50k-node graph for nothing
+            self._serve_jumbo(req, ctx)
+            return req
         deadline = (now + self.cfg.deadline_s
                     if math.isfinite(self.cfg.deadline_s) else math.inf)
         self.batcher.add(
@@ -317,6 +360,37 @@ class PlacementService:
             req, ctx.gb, now, deadline=deadline)
         self._flush(self.batcher.ready(now))   # full groups flush instantly
         return req
+
+    def _shed_rejected(self, req: Request, reason: str, limit: int,
+                       requested: int) -> Request:
+        """Resolve an out-of-bounds request with the degraded baseline
+        placement (feasible-by-construction, makespan unverified/NaN) and
+        a typed :class:`Rejection`, counting it in ``shed_rejected``."""
+        from repro.serve.admission import degraded_placement
+        if self.clock.simulated:
+            self.clock.advance(self.cfg.costs.shed_s)
+        req.rejection = Rejection(reason, limit, requested)
+        req.placement = degraded_placement(req.graph, req.topo)
+        req.makespan = float("nan")
+        req.done_t = self.clock.now()
+        req.source = req.entry_source = "shed"
+        self.counts["shed"] += 1
+        self.counts["shed_rejected"] += 1
+        self.completed.append(req)
+        return req
+
+    def _serve_jumbo(self, req: Request, ctx: "_GraphCtx") -> None:
+        """Serve one jumbo admission: a single segmented zero-shot decode
+        (no micro-batching), then the normal select/publish/escalate path."""
+        n = req.graph.num_nodes
+        if self.clock.simulated:
+            self.clock.advance(self.cfg.costs.jumbo_per_knode_s *
+                               max(n, 1) / 1000.0)
+        sampled, _ = policy_mod.sample(
+            self.trainer.state.params, self.pcfg, ctx.gb, ctx.num_devices,
+            self._split(), self.cfg.num_samples, self.cfg.temperature)
+        self.counts["jumbo"] += 1
+        self._serve_zero_shot(req, np.asarray(sampled, np.int32))
 
     def _serve_entry(self, req: Request, entry: CacheEntry,
                      source: str) -> None:
@@ -362,17 +436,31 @@ class PlacementService:
                     if len(self._ctx) < 4 * self.cfg.cache_capacity:
                         break
         nd = topo.num_devices
-        assert nd <= self.pcfg.max_devices, (nd, self.pcfg.max_devices)
+        if nd > self.pcfg.max_devices:   # submit() sheds before reaching
+            raise ValueError(            # here; typed guard, not an assert
+                f"topology has {nd} devices, policy head caps at "
+                f"{self.pcfg.max_devices}")
         # Bucket-pad EVERYTHING — featurizer, simulator, baselines — so the
         # whole serving path (policy call, sample selection, fine-tune PPO
         # programs) compiles once per (bucket, D) instead of once per
-        # distinct graph size; padded nodes are masked throughout.
-        pad_n = bucket_size(g.num_nodes)
+        # distinct graph size; padded nodes are masked throughout.  Jumbo
+        # graphs pad to the segment-aligned jumbo bucket instead of the
+        # power-of-two ladder (tighter, and divisible by the decoder's
+        # segment when one is configured).
+        if g.num_nodes > self.cfg.jumbo_threshold:
+            mult = self.cfg.jumbo_pad_multiple
+            if self.pcfg.segment:
+                mult = max(mult // self.pcfg.segment, 1) * self.pcfg.segment
+            pad_n = jumbo_bucket(g.num_nodes, mult)
+        else:
+            pad_n = bucket_size(g.num_nodes)
+        seg = (self.pcfg.segment if self.pcfg.segment and
+               pad_n % self.pcfg.segment == 0 else None)
         sg = prepare_sim_graph(g, topo, max_deg=16, pad_to=pad_n, pad_k=16)
         contention = self.cfg.sender_contention
-        env_true = Env(sg, topo, sender_contention=contention)
+        env_true = Env(sg, topo, sender_contention=contention, segment=seg)
         env_shaped = Env(sg, topo, shaped_reward=True,
-                         sender_contention=contention)
+                         sender_contention=contention, segment=seg)
         gb = featurize(g, max_deg=self.cfg.max_deg, pad_to=pad_n, topo=topo)
         base_best, base_pl = np.inf, None
         for fn in (B.human_expert, B.round_robin):
@@ -402,7 +490,13 @@ class PlacementService:
             if self.clock.simulated:
                 self.clock.advance(self.cfg.costs.batch_base_s +
                                    self.cfg.costs.batch_per_graph_s * fl.real)
-            placements, _ = _sample_batch_jit(
+            # a segmented policy manages its own per-segment compiled
+            # programs — wrapping the Python segment loop in the outer
+            # jit would trace it into one graph-sized program
+            sample_fn = (policy_mod.sample_batch
+                         if self.pcfg.segment is not None
+                         else _sample_batch_jit)
+            placements, _ = sample_fn(
                 self.trainer.state.params, self.pcfg, fl.sgb, fl.key[1],
                 self._split(), self.cfg.num_samples,
                 self.cfg.temperature)

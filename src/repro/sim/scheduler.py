@@ -92,13 +92,18 @@ class SimGraph(NamedTuple):
 
 def prepare_sim_graph(g: DataflowGraph, topo: Topology, max_deg: int = 16,
                       pad_to: Optional[int] = None,
-                      pad_k: Optional[int] = None) -> SimGraph:
+                      pad_k: Optional[int] = None,
+                      pad_multiple: Optional[int] = None) -> SimGraph:
     """``pad_to``/``pad_k`` pin the node and in-edge dims (sentinel-padded)
     so graphs of different sizes share one compiled simulator — the serving
-    path pads both to its bucket."""
+    path pads both to its bucket.  ``pad_multiple`` rounds the node dim up
+    to a multiple (segment padding: the segment-batched ``simulate`` scans
+    fixed-size segments, so the node dim must divide into them)."""
     n = g.num_nodes
     d = topo.num_devices
     pad_n = pad_to or n
+    if pad_multiple:
+        pad_n = ((pad_n + pad_multiple - 1) // pad_multiple) * pad_multiple
     assert pad_n >= n
     ct = node_compute_matrix(g, topo).astype(np.float32)
     idx, mask = g.in_neighbors_padded(max_deg)
@@ -128,7 +133,8 @@ def prepare_sim_graph(g: DataflowGraph, topo: Topology, max_deg: int = 16,
 
 
 def simulate(sg: SimGraph, placement: jnp.ndarray, st: SimTopology,
-             sender_contention: bool = False
+             sender_contention: bool = False,
+             segment: Optional[int] = None
              ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Returns (makespan_s, mem_util, valid).
 
@@ -146,6 +152,14 @@ def simulate(sg: SimGraph, placement: jnp.ndarray, st: SimTopology,
     exactly.  The contended inner loop is sequential per edge (the port
     state carries between edges), so prefer the default hoisted path
     when contention does not matter.
+
+    ``segment`` runs the segment-batched loop instead: the outer
+    ``fori_loop`` walks ``N // segment`` segments and the body scans the
+    nodes of one segment (N must divide; ``prepare_sim_graph`` pads with
+    ``pad_multiple``).  The visit order — and therefore every float —
+    is identical to the monolithic loop (pinned bit-for-bit by
+    tests/test_segmented.py); what changes is the loop structure the
+    large-graph mode audits and extends.
     """
     n = sg.compute_t.shape[0]
     p = placement.astype(jnp.int32)
@@ -183,9 +197,8 @@ def simulate(sg: SimGraph, placement: jnp.ndarray, st: SimTopology,
             return (finish.at[v].set(fin), dev_free.at[pv].set(fin),
                     send_free)
 
-        finish, _, _ = jax.lax.fori_loop(
-            0, n, body_c, (finish0, dev_free0,
-                           jnp.zeros(st.num_devices, jnp.float32)))
+        body_fn = body_c
+        state0 = (finish0, dev_free0, jnp.zeros(st.num_devices, jnp.float32))
     else:
         # Everything except producer finish times is loop-independent:
         # hoist the per-edge communication cost out of the sequential scan
@@ -205,7 +218,20 @@ def simulate(sg: SimGraph, placement: jnp.ndarray, st: SimTopology,
             fin = jnp.maximum(ready, dev_free[pv]) + ct_eff[v, pv]
             return finish.at[v].set(fin), dev_free.at[pv].set(fin)
 
-        finish, _ = jax.lax.fori_loop(0, n, body, (finish0, dev_free0))
+        body_fn = body
+        state0 = (finish0, dev_free0)
+
+    if segment is not None and n > segment:
+        assert n % segment == 0, (n, segment)
+
+        def seg_body(s, state):
+            return jax.lax.fori_loop(s * segment, (s + 1) * segment,
+                                     body_fn, state)
+
+        state = jax.lax.fori_loop(0, n // segment, seg_body, state0)
+    else:
+        state = jax.lax.fori_loop(0, n, body_fn, state0)
+    finish = state[0]
     makespan = jnp.max(finish[:n] * sg.node_mask)
 
     mem_used = jax.ops.segment_sum(sg.mem_bytes * sg.node_mask, p,
@@ -237,10 +263,12 @@ def reward_shaped(makespan: jnp.ndarray, mem_util: jnp.ndarray,
 
 
 def simulate_batch(sg: SimGraph, placements: jnp.ndarray, st: SimTopology,
-                   shaped: bool = False, sender_contention: bool = False
+                   shaped: bool = False, sender_contention: bool = False,
+                   segment: Optional[int] = None
                    ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """vmap over M placements: returns (makespan[M], reward[M], valid[M])."""
-    fn = jax.vmap(lambda pl: simulate(sg, pl, st, sender_contention))
+    fn = jax.vmap(lambda pl: simulate(sg, pl, st, sender_contention,
+                                      segment=segment))
     makespan, util, valid = fn(placements)
     if shaped:
         return makespan, reward_shaped(makespan, util), valid
@@ -248,17 +276,19 @@ def simulate_batch(sg: SimGraph, placements: jnp.ndarray, st: SimTopology,
 
 
 @partial(jax.jit, static_argnames=("num_devices", "shaped",
-                                   "sender_contention"))
+                                   "sender_contention", "segment"))
 def _simulate_batch_jit(sg: SimGraph, placements, inv_bw, latency, mem_caps,
                         num_devices: int, shaped: bool,
-                        sender_contention: bool):
+                        sender_contention: bool,
+                        segment: Optional[int] = None):
     """Stable-identity jitted wrapper so repeated Env.rewards calls with
     the same shapes hit the pjit cache instead of re-tracing the scan
     (eager fori_loop re-compiles per call — ~0.5 s each at serving sizes;
     SimTopology.num_devices must stay static, hence the unpacking)."""
     st = SimTopology(num_devices, inv_bw, latency, mem_caps)
     return simulate_batch(sg, placements, st, shaped=shaped,
-                          sender_contention=sender_contention)
+                          sender_contention=sender_contention,
+                          segment=segment)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -274,13 +304,18 @@ class Env:
     topo: Topology
     shaped_reward: bool = False
     sender_contention: bool = False
+    # Segment-batched evaluation (non-semantic: bit-identical makespans,
+    # only the compiled loop structure changes).  The SimGraph's node dim
+    # must be a multiple (prepare_sim_graph pad_multiple).
+    segment: Optional[int] = None
 
     @classmethod
-    def from_config(cls, sg: SimGraph, topo: Topology,
-                    sim: "SimConfig") -> "Env":
+    def from_config(cls, sg: SimGraph, topo: Topology, sim: "SimConfig",
+                    segment: Optional[int] = None) -> "Env":
         """Bind a graph + topology under one :class:`SimConfig`."""
         return cls(sg, topo, shaped_reward=sim.shaped_reward,
-                   sender_contention=sim.sender_contention)
+                   sender_contention=sim.sender_contention,
+                   segment=segment)
 
     @property
     def config(self) -> SimConfig:
@@ -302,4 +337,4 @@ class Env:
         return _simulate_batch_jit(self.sg, jnp.asarray(placements),
                                    st.inv_bw, st.latency, st.mem_caps,
                                    st.num_devices, self.shaped_reward,
-                                   self.sender_contention)
+                                   self.sender_contention, self.segment)

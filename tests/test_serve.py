@@ -287,3 +287,82 @@ def test_service_refuses_cross_mode_store(tmp_path):
                             sender_contention=True)
     with pytest.raises(AssertionError):
         PlacementService(trainer, ServeConfig(simulated=True), store=store)
+
+
+# ------------------------------------------------- jumbo bucket + rejection
+def test_service_sheds_oversized_requests_typed():
+    """Out-of-bounds requests degrade to the baseline fast path with a
+    typed Rejection instead of crashing the worker on an assert."""
+    trainer = _small_trainer()
+    cfg = ServeConfig(simulated=True, max_graph_nodes=100)
+    svc = PlacementService(trainer, cfg, SimulatedClock())
+
+    # too many devices for the policy head (max_devices=8)
+    g = S.rnnlm(2, time_steps=3)
+    wide = p100_topology(12).tightened(g.total_mem())
+    r1 = svc.submit(g, wide, arrival_t=0.0)
+    assert r1.source == "shed"
+    assert r1.rejection.reason == "too_many_devices"
+    assert r1.rejection.limit == 8 and r1.rejection.requested == 12
+    assert r1.placement.shape == (g.num_nodes,)
+    assert r1.placement.max() < 12 and np.isnan(r1.makespan)
+
+    # graph above the worker's jumbo bound
+    big = S.rnnlm(2, time_steps=5)
+    assert big.num_nodes > 100
+    topo = p100_topology(4).tightened(big.total_mem())
+    r2 = svc.submit(big, topo, arrival_t=1.0)
+    assert r2.source == "shed"
+    assert r2.rejection.reason == "graph_too_large"
+    assert r2.placement.shape == (big.num_nodes,)
+
+    assert svc.counts["shed_rejected"] == 2
+    assert svc.counts["shed"] == 2
+    # the worker is still healthy: a normal request resolves
+    ok = svc.submit(g, p100_topology(4).tightened(g.total_mem()),
+                    arrival_t=2.0)
+    svc.drain()
+    assert ok.source in ("zero_shot", "baseline")
+    assert np.isfinite(ok.makespan)
+
+
+def test_service_jumbo_bucket_admission():
+    """Graphs above jumbo_threshold skip the micro-batcher: they are
+    segment-padded (featurize.jumbo_bucket, not the power-of-two ladder)
+    and served solo; the result is cached so repeats hit."""
+    from repro.core.featurize import jumbo_bucket as jb
+    pcfg = PolicyConfig(hidden=32, gnn_layers=2, placer_layers=1, ffn=64,
+                        window=32, max_devices=8, segment=32, gnn_chunk=64)
+    trainer = PPOTrainer(pcfg, PPOConfig(num_samples=4, epochs=1), seed=0)
+    cfg = ServeConfig(simulated=True, num_samples=2,
+                      jumbo_threshold=64, jumbo_pad_multiple=64,
+                      finetune_iters=0)
+    svc = PlacementService(trainer, cfg, SimulatedClock())
+    g = S.rnnlm(2, time_steps=3)          # 72 nodes > 64 threshold
+    assert g.num_nodes > cfg.jumbo_threshold
+    topo = p100_topology(4).tightened(g.total_mem())
+    r = svc.submit(g, topo, arrival_t=0.0)
+    assert svc.counts["jumbo"] == 1
+    assert r.source in ("zero_shot", "baseline")
+    assert r.placement.shape == (g.num_nodes,)
+    assert np.isfinite(r.makespan)
+    # context arrays live at the segment-aligned jumbo bucket
+    ctx = svc._ctx[r.key]
+    assert ctx.gb.op.shape[0] == jb(g.num_nodes, 64)
+    assert ctx.gb.op.shape[0] % pcfg.segment == 0
+    # repeat traffic rides the cache, not another decode
+    r2 = svc.submit(g, topo, arrival_t=1.0)
+    assert r2.source == "cache"
+    assert svc.counts["jumbo"] == 1
+
+
+def test_admission_sheds_oversize_at_router():
+    """Router-level jumbo shedding: AdmissionController counts and
+    refuses graphs above max_graph_nodes before they reach a worker."""
+    from repro.serve import AdmissionConfig, AdmissionController
+    ac = AdmissionController(AdmissionConfig(max_graph_nodes=50))
+    assert ac.admit(lag_s=0.0, queue_depth=0, num_nodes=10)
+    assert not ac.admit(lag_s=0.0, queue_depth=0, num_nodes=51)
+    assert ac.stats.shed_oversize == 1
+    assert ac.stats.shed == 1
+    assert ac.stats.as_dict()["shed_oversize"] == 1

@@ -1,0 +1,147 @@
+"""Gate benchmark artifacts against committed baseline numbers.
+
+The nightly CI campaign produces ``BENCH_*.json`` artifacts; this tool
+compares a curated set of headline metrics (``benchmarks/
+bench_baselines.json``) against them and exits non-zero when any metric
+regresses beyond the tolerance — >10% by default — so a silent makespan
+or throughput regression fails the nightly run instead of landing.
+
+Baseline file schema::
+
+    {
+      "tolerance": 0.10,
+      "metrics": [
+        {"file": "BENCH_serve.json",          # artifact the metric lives in
+         "path": "throughput.speedup",       # dotted path into its JSON
+         "direction": "higher",              # "higher"|"lower" is better
+         "baseline": 7.5,                     # committed reference value
+         "exact": false}                      # true: no tolerance (booleans)
+      ]
+    }
+
+Quick-mode benchmarks are seeded and CPU-deterministic, so drift means a
+code change moved the number: re-baseline deliberately with ``--update``
+(which rewrites the committed values from fresh artifacts) and commit the
+diff alongside the change that caused it.
+
+    python tools/check_bench_regression.py [--dir .] [--update] [--strict]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Any, Dict, List, Optional, Tuple
+
+DEFAULT_BASELINES = os.path.join(os.path.dirname(__file__), "..",
+                                 "benchmarks", "bench_baselines.json")
+
+
+def lookup(doc: Any, path: str) -> Optional[Any]:
+    """Resolve a dotted ``path`` inside a parsed JSON document (None when
+    any component is missing)."""
+    cur = doc
+    for part in path.split("."):
+        if isinstance(cur, dict) and part in cur:
+            cur = cur[part]
+        elif isinstance(cur, list) and part.isdigit() and int(part) < len(cur):
+            cur = cur[int(part)]
+        else:
+            return None
+    return cur
+
+
+def check_metric(metric: Dict[str, Any], value: float,
+                 tolerance: float) -> Tuple[bool, str]:
+    """(ok, verdict line) for one metric against its baseline."""
+    base = float(metric["baseline"])
+    direction = metric.get("direction", "lower")
+    tol = 0.0 if metric.get("exact") else tolerance
+    if direction == "higher":
+        limit = base * (1.0 - tol)
+        ok = value >= limit
+        cmp = f">= {limit:.6g}"
+    else:
+        limit = base * (1.0 + tol)
+        ok = value <= limit
+        cmp = f"<= {limit:.6g}"
+    status = "ok" if ok else "REGRESSION"
+    return ok, (f"{status:>10s}  {metric['file']}:{metric['path']} "
+                f"= {value:.6g} (baseline {base:.6g}, want {cmp})")
+
+
+def run(baselines_path: str, artifact_dir: str, update: bool = False,
+        strict: bool = False) -> int:
+    """Check (or ``--update``) every baseline metric; returns exit code."""
+    with open(baselines_path) as f:
+        spec = json.load(f)
+    tolerance = float(spec.get("tolerance", 0.10))
+    docs: Dict[str, Any] = {}
+    failures = 0
+    missing = 0
+    for metric in spec["metrics"]:
+        fname = metric["file"]
+        if fname not in docs:
+            path = os.path.join(artifact_dir, fname)
+            if os.path.exists(path):
+                with open(path) as f:
+                    docs[fname] = json.load(f)
+            else:
+                docs[fname] = None
+        doc = docs[fname]
+        if doc is None:
+            print(f"{'missing':>10s}  {fname} (artifact not found)")
+            missing += 1
+            continue
+        value = lookup(doc, metric["path"])
+        if value is None or isinstance(value, (dict, list)):
+            print(f"{'missing':>10s}  {fname}:{metric['path']} "
+                  f"(no scalar at path)")
+            missing += 1
+            continue
+        value = float(value)
+        if update:
+            metric["baseline"] = value
+            print(f"{'updated':>10s}  {fname}:{metric['path']} = {value:.6g}")
+            continue
+        ok, line = check_metric(metric, value, tolerance)
+        print(line)
+        failures += 0 if ok else 1
+    if update:
+        with open(baselines_path, "w") as f:
+            json.dump(spec, f, indent=1)
+            f.write("\n")
+        print(f"[check_bench_regression] rewrote {baselines_path}")
+        return 0
+    if failures:
+        print(f"[check_bench_regression] {failures} metric(s) regressed "
+              f"beyond {tolerance:.0%}")
+        return 1
+    if missing and strict:
+        print(f"[check_bench_regression] {missing} metric(s) missing "
+              f"(--strict)")
+        return 1
+    print(f"[check_bench_regression] all present metrics within "
+          f"{tolerance:.0%} of baseline"
+          + (f" ({missing} missing, ignored)" if missing else ""))
+    return 0
+
+
+def main() -> None:
+    """CLI entry; see module docstring."""
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baselines", default=DEFAULT_BASELINES)
+    ap.add_argument("--dir", default=".",
+                    help="directory holding the BENCH_*.json artifacts")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite baselines from the current artifacts")
+    ap.add_argument("--strict", action="store_true",
+                    help="missing artifacts/metrics fail the check")
+    args = ap.parse_args()
+    sys.exit(run(args.baselines, args.dir, update=args.update,
+                 strict=args.strict))
+
+
+if __name__ == "__main__":
+    main()
