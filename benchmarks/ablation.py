@@ -26,11 +26,9 @@ def run(iterations: int = 60, tasks=None) -> Dict:
 
 
 def main(quick: bool = True):
-    """Run the ablation campaign and cache it."""
+    """Run the ablation campaign; full-budget runs only are cached."""
     rows = run(iterations=40 if quick else 300)
-    cached = C.load_cached()
-    cached["ablation"] = rows
-    C.save_cached(cached)
+    C.cache_section("ablation", rows, campaign_grade=not quick)
     return rows
 
 

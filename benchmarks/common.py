@@ -181,23 +181,158 @@ def peak_rss_bytes() -> int:
     return int(r if sys.platform == "darwin" else r * 1024)
 
 
+def vs_baseline(gdp: float, baseline: float
+                ) -> Tuple[Optional[float], Optional[bool]]:
+    """(fractional improvement, beats) of ``gdp`` vs a baseline makespan.
+
+    An infeasible baseline (inf, the OOM regime) cannot be *beaten* —
+    both fields are None so headline flags like ``any_holdout_beats_rr``
+    count only genuine makespan wins, never OOM walkovers.  An
+    infeasible ``gdp`` against a finite baseline is a loss (beats
+    False) with no meaningful improvement fraction (None)."""
+    if not np.isfinite(baseline):
+        return None, None
+    if not np.isfinite(gdp):
+        return None, False
+    return float((baseline - gdp) / baseline), bool(gdp < baseline)
+
+
+def fmt_pct(x: Optional[float]) -> str:
+    """CSV cell for a fractional improvement that may be None
+    (baseline infeasible)."""
+    return "n/a" if x is None else f"{x*100:+.1f}%"
+
+
+def _map_nonfinite(x, leaf):
+    """Recursively rewrite non-finite floats in a JSON-ish tree with
+    ``leaf(value)``; everything else passes through unchanged."""
+    if isinstance(x, dict):
+        return {k: _map_nonfinite(v, leaf) for k, v in x.items()}
+    if isinstance(x, (list, tuple)):
+        return [_map_nonfinite(v, leaf) for v in x]
+    if isinstance(x, (float, np.floating)) and not np.isfinite(x):
+        return leaf(float(x))
+    return x
+
+
+def json_safe(x):
+    """Replace non-finite floats with None so an artifact is strict
+    RFC-8259 JSON (an OOM baseline is inf in memory, null on disk)."""
+    return _map_nonfinite(x, lambda v: None)
+
+
 # ----------------------------------------------------------------- caching
+# The cache's reserved top-level key: cache_section stamps every section
+# it writes, so the read gate has one uniform field to check instead of
+# sniffing section-specific keys.
+PROVENANCE_KEY = "_provenance"
+
+# Budget floors for legacy cache files that predate provenance stamps
+# (benchmarks/campaign.py budgets) — the only sections whose recorded
+# fields allow an after-the-fact check.
+_TRANSFER_CAMPAIGN_FLOOR = (60, 50)   # (pretrain_iters, finetune_iters)
+
+
+def is_campaign_grade(name: str, section: Any,
+                      provenance: Optional[Dict[str, Any]] = None) -> bool:
+    """True when a cached section may be reported as ``*.campaign.*``.
+
+    The stamp ``cache_section`` writes is authoritative.  Files without
+    one (stale/hand-copied caches) fall back to validating the budgets
+    the section itself records; sections recording nothing checkable
+    are rejected — an unverifiable number must not carry the label."""
+    if not isinstance(section, dict):
+        return False
+    if isinstance(provenance, dict):
+        return provenance.get("campaign_grade") is True
+    if name == "large":
+        return section.get("quick") is False
+    if name == "transfer":
+        modes = [v for v in section.values()
+                 if isinstance(v, dict) and "pretrain_iters" in v]
+        pre, fin = _TRANSFER_CAMPAIGN_FLOOR
+        return bool(modes) and all(m.get("pretrain_iters", 0) >= pre
+                                   and m.get("finetune_iters", 0) >= fin
+                                   for m in modes)
+    return False
+
+
 def load_cached() -> Dict[str, Any]:
-    """Cached campaign results (results/experiments.json), {} if absent."""
+    """Cached campaign results (results/experiments.json), {} if absent.
+    Tag-encoded non-finite floats round-trip back to inf/nan."""
     if os.path.exists(RESULTS_PATH):
         with open(RESULTS_PATH) as f:
-            return json.load(f)
+            return _decode_nonfinite(json.load(f))
     return {}
 
 
 def save_cached(results: Dict[str, Any]) -> None:
-    """Atomically rewrite the campaign cache (trainer objects stripped)."""
+    """Atomically rewrite the campaign cache (trainer objects stripped).
+
+    Strict JSON on disk: ``allow_nan=False`` plus tagged objects
+    (``{"__nonfinite__": "Infinity"}``) for non-finite floats —
+    ``json.dump``'s default would emit bare ``Infinity`` tokens that
+    jq/JSON.parse reject."""
     os.makedirs(os.path.dirname(RESULTS_PATH), exist_ok=True)
     tmp = RESULTS_PATH + ".tmp"
-    cleaned = _strip(results)
+    cleaned = _encode_nonfinite(_strip(results))
     with open(tmp, "w") as f:
-        json.dump(cleaned, f, indent=1, default=float)
+        json.dump(cleaned, f, indent=1, default=_sentinel_default,
+                  allow_nan=False)
     os.replace(tmp, RESULTS_PATH)
+
+
+def cache_section(name: str, section: Dict[str, Any],
+                  campaign_grade: bool) -> None:
+    """Write one section into the campaign cache — campaign-grade runs
+    only.  The cache exists so run.py can report ``*.campaign.*`` lines;
+    letting a quick/sub-budget run write it would mislabel reduced-budget
+    numbers as campaign results (the run still goes to its own
+    ``BENCH_*.json`` artifact either way)."""
+    if not campaign_grade:
+        print(f"[{name}] sub-campaign budgets — not cached into "
+              f"results/experiments.json", flush=True)
+        return
+    cached = load_cached()
+    cached[name] = section
+    cached.setdefault(PROVENANCE_KEY, {})[name] = {"campaign_grade": True}
+    save_cached(cached)
+
+
+# Tagged encoding for non-finite floats in the cache: a plain string
+# sentinel would be ambiguous (a genuine string "Infinity" would decode
+# to a float); a single-key tagged object collides with nothing real.
+_NONFINITE_TAG = "__nonfinite__"
+_NONFINITE = {"Infinity": float("inf"), "-Infinity": float("-inf"),
+              "NaN": float("nan")}
+
+
+def _sentinel_default(o):
+    """json.dump fallback for non-native numerics (numpy/JAX scalars):
+    coerce to float, tag-encoding non-finite values so
+    ``allow_nan=False`` never trips."""
+    f = float(o)
+    return _encode_nonfinite(f)
+
+
+def _sentinel(v: float) -> Dict[str, str]:
+    if np.isnan(v):
+        return {_NONFINITE_TAG: "NaN"}
+    return {_NONFINITE_TAG: "Infinity" if v > 0 else "-Infinity"}
+
+
+def _encode_nonfinite(x):
+    return _map_nonfinite(x, _sentinel)
+
+
+def _decode_nonfinite(x):
+    if isinstance(x, dict):
+        if set(x) == {_NONFINITE_TAG} and x[_NONFINITE_TAG] in _NONFINITE:
+            return _NONFINITE[x[_NONFINITE_TAG]]
+        return {k: _decode_nonfinite(v) for k, v in x.items()}
+    if isinstance(x, list):
+        return [_decode_nonfinite(v) for v in x]
+    return x
 
 
 def _strip(x):

@@ -46,12 +46,11 @@ def run(pretrain_iters: int = 60, finetune_iters: int = 50, tasks=None) -> Dict:
 
 
 def main(quick: bool = True):
-    """Run the generalization campaign and cache it."""
+    """Run the generalization campaign; full-budget runs only are
+    cached."""
     rows = run(pretrain_iters=30 if quick else 200,
                finetune_iters=20 if quick else 50)
-    cached = C.load_cached()
-    cached["generalization"] = rows
-    C.save_cached(cached)
+    C.cache_section("generalization", rows, campaign_grade=not quick)
     return rows
 
 

@@ -21,8 +21,6 @@ from __future__ import annotations
 
 from typing import Dict
 
-import numpy as np
-
 from benchmarks import common as C
 from repro.core import baselines as B
 from repro.graphs import synthetic as S
@@ -60,6 +58,7 @@ def run(iterations: int = 60, full: bool = False, seeds=(0,)) -> Dict:
         base = C.baseline_rows(task)
         gdp = C.run_gdp_one(task, iterations, seed=seeds[0])
         rr = base["round_robin"]
+        d_rr, _ = C.vs_baseline(gdp["best"], rr)
         row = {
             "nodes": task.graph.num_nodes,
             "devices": task.num_devices,
@@ -69,15 +68,14 @@ def run(iterations: int = 60, full: bool = False, seeds=(0,)) -> Dict:
             "human": base["human"],
             "metis": base["metis"],
             "random": base["random"],
-            "gdp_vs_round_robin": ((rr - gdp["best"]) / rr
-                                   if np.isfinite(rr) else float("inf")),
+            "gdp_vs_round_robin": d_rr,   # None when round_robin OOMs
             "search_s": gdp["search_s"],
         }
         rows[task.name] = row
         print(f"[hetero] {task.name:>12s} GDP={row['gdp']:.4f} "
               f"RR={row['round_robin']:.4f} HP={row['human']:.4f} "
               f"METIS={row['metis']:.4f} "
-              f"dRR={row['gdp_vs_round_robin']*100:+.1f}%", flush=True)
+              f"dRR={C.fmt_pct(d_rr)}", flush=True)
     return rows
 
 
@@ -91,11 +89,10 @@ def uniform_equivalence_row() -> Dict:
 
 
 def main(quick: bool = True):
-    """Run the hetero campaign and cache it into experiments.json."""
+    """Run the hetero campaign; only full-budget runs are cached into
+    experiments.json (quick numbers must not surface as campaign)."""
     rows = run(iterations=40 if quick else 300, full=not quick)
-    cached = C.load_cached()
-    cached["hetero"] = rows
-    C.save_cached(cached)
+    C.cache_section("hetero", rows, campaign_grade=not quick)
 
 
 if __name__ == "__main__":

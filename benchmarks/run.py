@@ -27,7 +27,18 @@ def main() -> None:
     t0 = time.time()
 
     from benchmarks import common as C
-    cached = C.load_cached()
+    # only provenance-verified campaign sections may print as
+    # `*.campaign.*` — a quick/sub-budget run that landed in the cache
+    # (or a stale cache file) must not masquerade as campaign numbers
+    raw = C.load_cached()
+    provenance = raw.pop(C.PROVENANCE_KEY, {})
+    cached = {}
+    for name, section in raw.items():
+        if C.is_campaign_grade(name, section, provenance.get(name)):
+            cached[name] = section
+        else:
+            print(f"[run] cached section {name!r} lacks campaign-grade "
+                  f"provenance — ignored", flush=True)
 
     _section("Table 1: GDP-one vs HP/METIS/HDP (live quick run)")
     if not args.skip_rl:
@@ -95,14 +106,14 @@ def main() -> None:
             print(f"hetero.{name},{r['gdp']:.5f},"
                   f"rr={r['round_robin']:.5f};hp={r['human']:.5f};"
                   f"metis={r['metis']:.5f};"
-                  f"dRR={r['gdp_vs_round_robin']*100:+.1f}%")
+                  f"dRR={C.fmt_pct(r['gdp_vs_round_robin'])}")
         u = hetero.uniform_equivalence_row()
         print(f"hetero.uniform_check,{u['makespan']:.5f},valid={u['valid']}")
     if "hetero" in cached:
         for name, r in cached["hetero"].items():
             print(f"hetero.campaign.{name},{r['gdp']:.5f},"
                   f"rr={r['round_robin']:.5f};"
-                  f"dRR={r['gdp_vs_round_robin']*100:+.1f}%")
+                  f"dRR={C.fmt_pct(r['gdp_vs_round_robin'])}")
 
     _section("Topology transfer: train one fleet, zero-shot another")
     if not args.skip_rl:
@@ -117,7 +128,7 @@ def main() -> None:
                     print(f"transfer.{mode}.{fname}.{role},{row['gdp']:.5f},"
                           f"zs={row['zero_shot']:.5f};"
                           f"rr={row['round_robin']:.5f};"
-                          f"dRR={row['gdp_vs_round_robin']*100:+.1f}%")
+                          f"dRR={C.fmt_pct(row['gdp_vs_round_robin'])}")
             print(f"transfer.{mode}.any_holdout_beats_rr,"
                   f"{int(r['any_holdout_beats_rr'])},target=1")
     if "transfer" in cached:
@@ -140,7 +151,7 @@ def main() -> None:
         for name, r in lgc.get("graphs", {}).items():
             print(f"large.campaign.{name},{r['gdp']:.5f},"
                   f"nodes={r['nodes']};rr={r['round_robin']:.5f};"
-                  f"dRR={r['gdp_vs_round_robin']*100:+.1f}%")
+                  f"dRR={C.fmt_pct(r['gdp_vs_round_robin'])}")
         print(f"large.campaign.peak_rss_gb,"
               f"{lgc.get('peak_rss_bytes', 0)/2**30:.2f},"
               f"max_nodes={lgc.get('max_nodes', 0)}")

@@ -46,6 +46,7 @@ from typing import Any, Dict, List
 import jax
 import numpy as np
 
+from benchmarks import common as C
 from repro.core import policy as policy_mod
 from repro.core.featurize import bucket_size, featurize
 from repro.core.policy import PolicyConfig
@@ -464,7 +465,8 @@ def main():
         results = run(quick=not args.full)
     results["wall_s"] = time.time() - t0
     with open(out, "w") as f:
-        json.dump(results, f, indent=1, default=float)
+        json.dump(C.json_safe(results), f, indent=1, default=float,
+                  allow_nan=False)
     print(f"[serve] wrote {out} in {results['wall_s']:.0f}s", flush=True)
 
 

@@ -55,11 +55,9 @@ def run(iterations: int = 80, tasks=None, seeds=(0,)) -> Dict:
 
 
 def main(quick: bool = True):
-    """Run the Table-1 campaign and cache it."""
+    """Run the Table-1 campaign; full-budget runs only are cached."""
     rows = run(iterations=60 if quick else 400)
-    cached = C.load_cached()
-    cached["table1"] = rows
-    C.save_cached(cached)
+    C.cache_section("table1", rows, campaign_grade=not quick)
     return rows
 
 

@@ -30,11 +30,9 @@ def run(iterations: int = 60, tasks=None) -> Dict:
 
 
 def main(quick: bool = True):
-    """Run the Table-2 campaign and cache it."""
+    """Run the Table-2 campaign; full-budget runs only are cached."""
     rows = run(iterations=40 if quick else 300)
-    cached = C.load_cached()
-    cached["table2"] = rows
-    C.save_cached(cached)
+    C.cache_section("table2", rows, campaign_grade=not quick)
     return rows
 
 

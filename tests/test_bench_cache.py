@@ -1,0 +1,134 @@
+"""Campaign cache hygiene: strict JSON, provenance gating, OOM flags.
+
+Pins the three review-driven invariants of the benchmark result plumbing:
+
+1. ``results/experiments.json`` is strict RFC-8259 JSON (no bare
+   ``Infinity``/``NaN`` tokens) yet round-trips non-finite floats, so
+   ``jq``/``JSON.parse`` can read the uploaded artifact while in-memory
+   consumers still see real floats.
+2. Only campaign-grade runs may land in (write side, ``cache_section``)
+   or be reported from (read side, ``is_campaign_grade``) the cache —
+   a quick/sub-budget run must never surface as ``*.campaign.*``.
+3. An infeasible (OOM) baseline is never counted as *beaten*
+   (``vs_baseline`` returns None/None), so headline flags like
+   ``any_holdout_beats_rr`` are not inflated by OOM walkovers.
+"""
+import json
+import math
+import os
+
+import numpy as np
+import pytest
+
+from benchmarks import common as C
+
+
+@pytest.fixture
+def tmp_cache(tmp_path, monkeypatch):
+    path = str(tmp_path / "results" / "experiments.json")
+    monkeypatch.setattr(C, "RESULTS_PATH", path)
+    return path
+
+
+# ------------------------------------------------------------ strict JSON
+def test_cache_is_strict_json_and_roundtrips_nonfinite(tmp_cache):
+    C.save_cached({"sec": {"oom": float("inf"), "neg": float("-inf"),
+                           "nan": float("nan"),
+                           "np_inf": np.float32("inf"),
+                           "fine": 1.5, "rows": [float("inf"), 2.0]}})
+    text = open(tmp_cache).read()
+
+    def boom(tok):
+        raise AssertionError(f"bare non-finite token {tok!r} on disk")
+
+    parsed = json.loads(text, parse_constant=boom)   # jq-parseable
+    assert parsed["sec"]["oom"] == {"__nonfinite__": "Infinity"}
+    assert parsed["sec"]["neg"] == {"__nonfinite__": "-Infinity"}
+
+    back = C.load_cached()["sec"]
+    assert back["oom"] == float("inf")
+    assert back["neg"] == float("-inf")
+    assert math.isnan(back["nan"])
+    assert back["np_inf"] == float("inf")
+    assert back["fine"] == 1.5 and back["rows"] == [float("inf"), 2.0]
+
+
+def test_cache_roundtrip_is_unambiguous_for_real_strings(tmp_cache):
+    # a genuine string that happens to spell a sentinel must survive —
+    # only the tagged object form decodes to a float
+    C.save_cached({"sec": {"label": "Infinity", "graph": "NaN-net"}})
+    back = C.load_cached()["sec"]
+    assert back == {"label": "Infinity", "graph": "NaN-net"}
+
+
+def test_json_safe_nulls_nonfinite_for_artifacts():
+    doc = C.json_safe({"a": float("inf"), "b": [np.float32("-inf"), 1.0],
+                       "c": {"d": float("nan")}, "ok": 2.5})
+    assert doc == {"a": None, "b": [None, 1.0], "c": {"d": None}, "ok": 2.5}
+    json.dumps(doc, allow_nan=False)                 # serializes strictly
+
+
+# ------------------------------------------------------ provenance gating
+def test_cache_section_refuses_sub_campaign_runs(tmp_cache, capsys):
+    C.cache_section("large", {"quick": True}, campaign_grade=False)
+    assert not os.path.exists(tmp_cache)
+    assert "not cached" in capsys.readouterr().out
+    C.cache_section("large", {"quick": False}, campaign_grade=True)
+    cached = C.load_cached()
+    assert cached["large"] == {"quick": False}
+    # the write stamps uniform provenance the read gate trusts
+    prov = cached[C.PROVENANCE_KEY]["large"]
+    assert C.is_campaign_grade("large", cached["large"], prov)
+
+
+def test_is_campaign_grade_checks_recorded_provenance():
+    # the cache_section stamp is authoritative in either direction
+    assert C.is_campaign_grade("table1", {"rows": {}},
+                               {"campaign_grade": True})
+    assert not C.is_campaign_grade("large", {"quick": False},
+                                   {"campaign_grade": False})
+
+    # legacy files without stamps: only recorded budgets can vouch
+    assert not C.is_campaign_grade("large", {"quick": True})
+    assert C.is_campaign_grade("large", {"quick": False})
+    assert not C.is_campaign_grade("large", {})      # no provenance: reject
+
+    sub = {"contention_off": {"pretrain_iters": 30, "finetune_iters": 15}}
+    full = {"contention_off": {"pretrain_iters": 60, "finetune_iters": 50},
+            "contention_on": {"pretrain_iters": 100, "finetune_iters": 50}}
+    mixed = {**full,
+             "contention_on": {"pretrain_iters": 4, "finetune_iters": 3}}
+    assert not C.is_campaign_grade("transfer", sub)
+    assert C.is_campaign_grade("transfer", full)
+    assert not C.is_campaign_grade("transfer", mixed)
+    assert not C.is_campaign_grade("transfer", {"wall_s": 1.0})
+
+    # unstamped sections that record nothing checkable are rejected
+    assert not C.is_campaign_grade("table1", {"rnnlm-2": {}})
+    assert not C.is_campaign_grade("serve", "not-a-dict")
+
+
+# ------------------------------------------------------- OOM-aware flags
+def test_vs_baseline_never_beats_an_infeasible_baseline():
+    d, beats = C.vs_baseline(0.5, 1.0)
+    assert d == pytest.approx(0.5) and beats is True
+    d, beats = C.vs_baseline(1.2, 1.0)
+    assert d == pytest.approx(-0.2) and beats is False
+    assert C.vs_baseline(0.5, float("inf")) == (None, None)
+    assert C.vs_baseline(0.5, float("nan")) == (None, None)
+    # infeasible gdp against a feasible baseline is a loss, not a null
+    assert C.vs_baseline(float("inf"), 1.0) == (None, False)
+
+
+def test_large_graph_only_filter_validated_before_pretraining():
+    from benchmarks import large_graph as L
+    with pytest.raises(ValueError, match="matches no large graph"):
+        L.run(quick=True, only=["gnmt8-typo"])
+    with pytest.raises(ValueError, match="quick mode"):
+        L.run(quick=True, only=["wavenet-deep"])   # full-mode-only name
+
+
+def test_fmt_pct_handles_missing_baseline():
+    assert C.fmt_pct(None) == "n/a"
+    assert C.fmt_pct(0.384) == "+38.4%"
+    assert C.fmt_pct(-0.05) == "-5.0%"
