@@ -16,8 +16,6 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
-import resource
-import sys
 import time
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -30,6 +28,8 @@ from repro.core.policy import PolicyConfig
 from repro.core.ppo import PPOConfig, PPOTrainer
 from repro.core.hdp import HDPConfig, HDPTrainer
 from repro.graphs import synthetic as S
+from repro.obs import jaxprof
+from repro.obs.metrics import RunLog
 from repro.sim import p100_topology, prepare_sim_graph
 from repro.sim.scheduler import Env, SimConfig
 
@@ -134,9 +134,15 @@ def baseline_rows(task: Task) -> Dict[str, float]:
 def run_gdp_one(task: Task, iterations: int, seed: int = 0,
                 pcfg: Optional[PolicyConfig] = None,
                 ppo: Optional[PPOConfig] = None,
-                log_every: int = 0) -> Dict[str, Any]:
+                log_every: int = 0,
+                run_log: Optional[RunLog] = None) -> Dict[str, Any]:
     """GDP-one: train a fresh policy on one task, tracking the best-seen
-    makespan curve (returns the trainer for fine-tune reuse)."""
+    makespan curve (returns the trainer for fine-tune reuse).
+
+    ``run_log`` streams every iteration's telemetry record (reward,
+    entropy, clip fraction, approx-KL, wall time, retrace count) to the
+    campaign's metrics JSONL sidecar.
+    """
     tr = PPOTrainer(pcfg or POLICY, ppo or PPO, seed=seed)
     t0 = time.time()
     best = np.inf
@@ -146,7 +152,11 @@ def run_gdp_one(task: Task, iterations: int, seed: int = 0,
         if np.isfinite(m["best_makespan"]):
             best = min(best, m["best_makespan"])
         best_curve.append((time.time() - t0, best))
-        if log_every and it % log_every == 0:
+        if run_log is not None:
+            run_log.emit(dict(
+                {k: v for k, v in m.items() if k != "best_placement"},
+                phase="train", iter=it, best_so_far=float(best)))
+        if log_every and (it == 0 or it % log_every == 0):
             print(f"  [gdp:{task.name}] it={it} best={best:.4f}")
     best = min(best, tr.best_of_samples(task.gb, task.env_true,
                                         task.num_devices, 16))
@@ -175,10 +185,18 @@ def time_to_quality(curve: List[Tuple[float, float]], target: float) -> float:
 
 def peak_rss_bytes() -> int:
     """Peak resident set size of this process in bytes (the audit the
-    large-graph campaign reports; ru_maxrss is KiB on Linux, bytes on
-    macOS)."""
-    r = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
-    return int(r if sys.platform == "darwin" else r * 1024)
+    large-graph campaign reports).  One definition for the whole repo —
+    this delegates to :func:`repro.obs.jaxprof.peak_rss_bytes`."""
+    return jaxprof.peak_rss_bytes()
+
+
+def obs_out_paths(out_path: str) -> Tuple[str, str]:
+    """(metrics JSONL, Chrome trace JSON) paths derived from a BENCH
+    artifact path: ``BENCH_x.json`` → ``BENCH_x.metrics.jsonl`` /
+    ``BENCH_x.trace.json`` — the observability sidecars ride next to the
+    rows they describe and match the CI upload globs."""
+    stem = out_path[:-5] if out_path.endswith(".json") else out_path
+    return stem + ".metrics.jsonl", stem + ".trace.json"
 
 
 def vs_baseline(gdp: float, baseline: float
@@ -283,19 +301,29 @@ def save_cached(results: Dict[str, Any]) -> None:
 
 
 def cache_section(name: str, section: Dict[str, Any],
-                  campaign_grade: bool) -> None:
+                  campaign_grade: bool,
+                  obs_paths: Optional[Tuple[str, str]] = None) -> None:
     """Write one section into the campaign cache — campaign-grade runs
     only.  The cache exists so run.py can report ``*.campaign.*`` lines;
     letting a quick/sub-budget run write it would mislabel reduced-budget
     numbers as campaign results (the run still goes to its own
-    ``BENCH_*.json`` artifact either way)."""
+    ``BENCH_*.json`` artifact either way).
+
+    ``obs_paths`` (from :func:`obs_out_paths`) records which metrics
+    JSONL / trace sidecars were produced with this section, so the
+    provenance stamp points at the run's telemetry.
+    """
     if not campaign_grade:
         print(f"[{name}] sub-campaign budgets — not cached into "
               f"results/experiments.json", flush=True)
         return
     cached = load_cached()
     cached[name] = section
-    cached.setdefault(PROVENANCE_KEY, {})[name] = {"campaign_grade": True}
+    stamp: Dict[str, Any] = {"campaign_grade": True}
+    if obs_paths is not None:
+        stamp["obs"] = {"metrics_jsonl": os.path.basename(obs_paths[0]),
+                        "trace_json": os.path.basename(obs_paths[1])}
+    cached.setdefault(PROVENANCE_KEY, {})[name] = stamp
     save_cached(cached)
 
 

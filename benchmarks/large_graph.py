@@ -41,6 +41,8 @@ from repro.core import baselines as B
 from repro.core.policy import PolicyConfig
 from repro.core.ppo import PPOConfig, PPOTrainer, clone_state
 from repro.graphs import synthetic as S
+from repro.obs.metrics import RunLog
+from repro.obs.trace import Tracer, get_tracer, set_tracer
 from repro.sim.scheduler import SimConfig
 
 OUT_PATH = os.environ.get("BENCH_LARGE_OUT", "BENCH_large.json")
@@ -113,7 +115,8 @@ def large_graphs(quick: bool) -> List[Tuple[str, Any]]:
 
 def run(quick: bool = True, pretrain_iters: int = 10,
         finetune_iters: int = 8, num_samples: int = 4,
-        seed: int = 0, only: Optional[List[str]] = None) -> Dict[str, Any]:
+        seed: int = 0, only: Optional[List[str]] = None,
+        run_log: Optional[RunLog] = None) -> Dict[str, Any]:
     """Full campaign; returns the BENCH_large.json dict.
 
     ``only`` restricts the large-graph list by name (the slow tier-1
@@ -127,6 +130,7 @@ def run(quick: bool = True, pretrain_iters: int = 10,
                          f"{'quick' if quick else 'full'} mode: {names}")
     pcfg = large_policy()
     tr = PPOTrainer(pcfg, large_ppo(num_samples=8), seed=seed)
+    tr.run_log = run_log
     tasks = pretrain_tasks()
     t0 = time.time()
     tr.train([(t.name, t.gb, t.env, t.num_devices) for t in tasks],
@@ -157,6 +161,7 @@ def run(quick: bool = True, pretrain_iters: int = 10,
         t3 = time.time()
         fork = PPOTrainer(pcfg, large_ppo(num_samples), seed=seed + 17,
                           state=clone_state(tr.state))
+        fork.run_log = run_log
         # no early-stop target when round_robin is infeasible — inf*0.95
         # is inf, which finetune() "reaches" after one iteration and
         # silently collapses the whole fine-tune budget
@@ -225,15 +230,33 @@ def main(quick: bool = True, out: str = None) -> Dict[str, Any]:
     """CLI/campaign entry: run, write the BENCH_large.json artifact
     (strict JSON: inf becomes null).  Only a full run (>=50k-node
     GNMT-8) is cached into experiments.json — quick numbers must never
-    surface as ``large.campaign.*`` lines."""
+    surface as ``large.campaign.*`` lines.
+
+    Runs with tracing enabled and writes two observability sidecars next
+    to the BENCH artifact: ``*.metrics.jsonl`` (per-iteration PPO
+    training records) and ``*.trace.json`` (Chrome trace-event JSON,
+    loadable in Perfetto)."""
     t0 = time.time()
-    results = run(quick=quick,
-                  pretrain_iters=10 if quick else 60,
-                  finetune_iters=8 if quick else 24,
-                  num_samples=4)
-    results["wall_s"] = time.time() - t0
-    C.cache_section("large", results, campaign_grade=not quick)
     out = out or OUT_PATH
+    metrics_path, trace_path = C.obs_out_paths(out)
+    run_log = RunLog(metrics_path, run="large")
+    old_tracer = set_tracer(Tracer(enabled=True))
+    try:
+        results = run(quick=quick,
+                      pretrain_iters=10 if quick else 60,
+                      finetune_iters=8 if quick else 24,
+                      num_samples=4, run_log=run_log)
+    finally:
+        tracer = get_tracer()
+        tracer.export_chrome(trace_path)
+        set_tracer(old_tracer)
+        run_log.close()
+    results["wall_s"] = time.time() - t0
+    results["obs"] = {"metrics_jsonl": metrics_path,
+                      "trace_json": trace_path,
+                      "spans": len(tracer.spans)}
+    C.cache_section("large", results, campaign_grade=not quick,
+                    obs_paths=(metrics_path, trace_path))
     with open(out, "w") as f:
         json.dump(C.json_safe(results), f, indent=1, default=float,
                   allow_nan=False)

@@ -52,6 +52,8 @@ from repro.core.featurize import bucket_size, featurize
 from repro.core.policy import PolicyConfig
 from repro.core.ppo import PPOConfig, PPOTrainer, clone_state
 from repro.graphs import synthetic as S
+from repro.obs.metrics import RunLog, counters_flat
+from repro.obs.trace import Tracer, get_tracer, set_tracer
 from repro.serve import (AdmissionConfig, ClusterConfig, PlacementCluster,
                          PlacementService, ServeConfig, SimulatedClock)
 from repro.sim.device import p100_topology
@@ -254,6 +256,49 @@ def run_regret(pool_size: int = 3, passes: int = 3, reqs_per_pass: int = 8,
 
 
 # ---------------------------------------------------------------- cluster
+# legacy cluster stats() keys checked bit-for-bit against the merged
+# registry snapshot (the tentpole's acceptance invariant)
+_PARITY_LADDER = ("cache", "disk", "zero_shot", "baseline", "finetunes",
+                  "finetune_published", "forward_adopted", "stale_served")
+_PARITY_ADMISSION = ("admitted", "shed_lag", "shed_depth", "shed_oversize")
+
+
+def parity_snapshot(cl: PlacementCluster) -> Dict[str, Any]:
+    """Merged metrics snapshot of ``cl``, asserted bit-for-bit equal to
+    the legacy ``stats()`` counters it replaced.
+
+    A mismatch here means the registry-backed counts have drifted from
+    the stats() schema the BENCH baselines pin — fail loudly.
+    """
+    st = cl.stats()
+    snap = cl.snapshot()
+    flat = counters_flat(snap)
+    mismatches = {}
+    for k in _PARITY_LADDER:
+        v = flat.get(f'serve_events_total{{event="{k}"}}', 0)
+        if v != st[k]:
+            mismatches[f"ladder.{k}"] = (v, st[k])
+    for k in ("forwarded", "shed"):
+        v = flat.get(f'cluster_router_total{{event="{k}"}}', 0)
+        if v != st[k]:
+            mismatches[f"router.{k}"] = (v, st[k])
+    for k in _PARITY_ADMISSION:
+        v = flat.get(f'admission_decisions_total{{decision="{k}"}}', 0)
+        if v != st[k]:
+            mismatches[f"admission.{k}"] = (v, st[k])
+    assert not mismatches, f"metrics/stats parity broken: {mismatches}"
+    return snap
+
+
+def _emit_cluster_obs(obs_log, section: str, cl: PlacementCluster) -> None:
+    """Parity-check one cluster and stream its snapshot to the sidecar."""
+    if obs_log is None:
+        parity_snapshot(cl)
+        return
+    obs_log.emit({"section": section, "parity": "ok",
+                  "snapshot": parity_snapshot(cl)})
+
+
 def _cluster_pool(num_keys: int) -> List[Any]:
     """``num_keys`` distinct-fingerprint rnnlm variants in ONE padding
     bucket: cost perturbations change the WL fingerprint (each variant is
@@ -281,7 +326,7 @@ def _mk_cluster(trainer: PPOTrainer, num_workers: int, store_root=None,
 
 
 def run_cluster_scaling(trainer: PPOTrainer, pool: List[Any], topo,
-                        repeats: int = 3) -> Dict[str, Any]:
+                        repeats: int = 3, obs_log=None) -> Dict[str, Any]:
     """One burst trace replayed through 1/2/4-worker clusters; aggregate
     throughput must scale near-linearly (>=3x at 4 workers)."""
     trace = pool * repeats
@@ -293,6 +338,7 @@ def run_cluster_scaling(trainer: PPOTrainer, pool: List[Any], topo,
         cl.drain()
         st = cl.stats()
         assert st["served_total"] == len(trace)
+        _emit_cluster_obs(obs_log, f"scaling.{n}w", cl)
         rows[f"{n}w"] = {
             "workers": n, "makespan_s": st["makespan_s"],
             "throughput_rps": len(trace) / st["makespan_s"],
@@ -314,7 +360,8 @@ def run_cluster_scaling(trainer: PPOTrainer, pool: List[Any], topo,
 
 
 def run_cluster_restart(trainer: PPOTrainer, pool: List[Any], topo,
-                        store_root, sweeps: int = 3) -> Dict[str, Any]:
+                        store_root, sweeps: int = 3,
+                        obs_log=None) -> Dict[str, Any]:
     """Warm-restart recovery: steady-state hit rate before shutdown vs
     the FIRST sweep after restarting from the persistent store, then a
     policy bump that must invalidate (not serve) every stored entry."""
@@ -346,6 +393,7 @@ def run_cluster_restart(trainer: PPOTrainer, pool: List[Any], topo,
     stb = bumped.stats()
     inval_bump = max(svc.store.stats.records_invalidated
                      for svc in bumped.workers)
+    _emit_cluster_obs(obs_log, "warm_restart.bumped", bumped)
     row = {
         "per_sweep_hit_rate": rates, "steady_hit_rate": steady,
         "restart_first_sweep_hit_rate": recovery,
@@ -369,7 +417,8 @@ def run_cluster_restart(trainer: PPOTrainer, pool: List[Any], topo,
 
 def run_cluster_overload(trainer: PPOTrainer, pool: List[Any], topo,
                          num_requests: int = 200, rate_rps: float = 1000.0,
-                         max_lag_s: float = 0.2) -> Dict[str, Any]:
+                         max_lag_s: float = 0.2,
+                         obs_log=None) -> Dict[str, Any]:
     """Single worker far past capacity, with vs without admission
     control: shedding to the degraded baseline fast path must bound p99
     near ``max_lag_s`` + one flush while the unbounded run's tail grows
@@ -383,11 +432,19 @@ def run_cluster_overload(trainer: PPOTrainer, pool: List[Any], topo,
             cl.submit(g, topo, arrival_t=t)
         cl.drain()
         st = cl.stats()
+        _emit_cluster_obs(obs_log, f"overload.{label}", cl)
         served = [r for r in cl.completed() if r.source != "shed"]
+        # stats() now reports the shed-excluded tail itself (the cluster
+        # percentile bugfix); keep the independent recompute as a check
         lat = np.asarray([r.latency for r in served], np.float64)
+        p99_served = float(np.percentile(lat, 99)) if lat.size else None
+        if lat.size:
+            assert abs(st["served_latency_p99_s"] - p99_served) < 1e-12, (
+                st["served_latency_p99_s"], p99_served)
         rows[label] = {
             "p50_s": st["latency_p50_s"], "p99_s": st["latency_p99_s"],
-            "p99_served_s": float(np.percentile(lat, 99)),
+            "p99_served_s": p99_served,
+            "served_latency_p99_s": st.get("served_latency_p99_s"),
             "shed_fraction": st["shed"] / num_requests,
             "served": len(served),
         }
@@ -407,25 +464,48 @@ def run_cluster_overload(trainer: PPOTrainer, pool: List[Any], topo,
     return rows
 
 
-def run_cluster(quick: bool = True) -> Dict[str, Any]:
-    """All cluster sections; returns the BENCH_serve_cluster.json dict."""
+def run_cluster(quick: bool = True,
+                out_path: str = None) -> Dict[str, Any]:
+    """All cluster sections; returns the BENCH_serve_cluster.json dict.
+
+    Runs with tracing enabled and writes two observability sidecars next
+    to the BENCH artifact: ``*.metrics.jsonl`` (per-section merged
+    registry snapshots, each parity-checked bit-for-bit against the
+    legacy ``stats()`` counters) and ``*.trace.json`` (Chrome trace-event
+    JSON of the whole run, loadable in Perfetto).
+    """
     num_keys = 48 if quick else 64
     pool = _cluster_pool(num_keys)
     topo = p100_topology(4)
     topo = topo.with_mem_caps(max(g.total_mem() for g in pool) * 2)
     trainer = _trainer()
+    metrics_path, trace_path = C.obs_out_paths(out_path or CLUSTER_OUT_PATH)
+    obs_log = RunLog(metrics_path, run="serve_cluster")
+    old_tracer = set_tracer(Tracer(enabled=True))
     results: Dict[str, Any] = {}
-    results["scaling"] = run_cluster_scaling(
-        trainer, pool, topo, repeats=3 if quick else 5)
-    store_root = tempfile.mkdtemp(prefix="bench_serve_cluster_store_")
     try:
-        results["warm_restart"] = run_cluster_restart(
-            trainer, pool[:12], topo, store_root)
+        results["scaling"] = run_cluster_scaling(
+            trainer, pool, topo, repeats=3 if quick else 5,
+            obs_log=obs_log)
+        store_root = tempfile.mkdtemp(prefix="bench_serve_cluster_store_")
+        try:
+            results["warm_restart"] = run_cluster_restart(
+                trainer, pool[:12], topo, store_root, obs_log=obs_log)
+        finally:
+            shutil.rmtree(store_root, ignore_errors=True)
+        results["overload"] = run_cluster_overload(
+            trainer, pool[:24], topo,
+            num_requests=200 if quick else 1000, obs_log=obs_log)
     finally:
-        shutil.rmtree(store_root, ignore_errors=True)
-    results["overload"] = run_cluster_overload(
-        trainer, pool[:24], topo,
-        num_requests=200 if quick else 1000)
+        tracer = get_tracer()
+        tracer.export_chrome(trace_path)
+        set_tracer(old_tracer)
+        obs_log.close()
+    results["obs"] = {"metrics_jsonl": metrics_path,
+                      "trace_json": trace_path,
+                      "spans": len(tracer.spans)}
+    print(f"serve.cluster.obs,{len(tracer.spans)},"
+          f"metrics={metrics_path};trace={trace_path}", flush=True)
     return results
 
 
@@ -459,7 +539,7 @@ def main():
     t0 = time.time()
     if args.cluster:
         out = args.out or CLUSTER_OUT_PATH
-        results = run_cluster(quick=not args.full)
+        results = run_cluster(quick=not args.full, out_path=out)
     else:
         out = args.out or OUT_PATH
         results = run(quick=not args.full)

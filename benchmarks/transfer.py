@@ -46,6 +46,8 @@ from typing import Any, Dict, List, Tuple
 from benchmarks import common as C
 from repro.core.ppo import PPOTrainer, clone_state
 from repro.graphs import synthetic as S
+from repro.obs.metrics import RunLog
+from repro.obs.trace import Tracer, get_tracer, set_tracer
 from repro.sim.device import (A100, P100, Topology, cpu_gpu_topology,
                               multi_gen_fleet, nvlink_host_ib_topology)
 from repro.sim.scheduler import SimConfig
@@ -94,7 +96,7 @@ def _mode_label(sender_contention: bool) -> str:
 
 def run_mode(sender_contention: bool, pretrain_iters: int,
              finetune_iters: int, full: bool = False,
-             seed: int = 0) -> Dict[str, Any]:
+             seed: int = 0, run_log: RunLog = None) -> Dict[str, Any]:
     """One full transfer campaign under a single simulator mode."""
     sim = SimConfig(sender_contention=sender_contention)
     tfleet = train_fleet()
@@ -108,6 +110,7 @@ def run_mode(sender_contention: bool, pretrain_iters: int,
         for g in _train_graphs(full)]
 
     tr = PPOTrainer(C.POLICY, C.PPO, seed=seed)
+    tr.run_log = run_log
     t0 = time.time()
     tr.train([(t.name, t.gb, t.env, t.num_devices) for t in train_tasks],
              iterations=pretrain_iters, log_every=0)
@@ -124,6 +127,7 @@ def run_mode(sender_contention: bool, pretrain_iters: int,
                                     task.num_devices, 16)
             fork = PPOTrainer(C.POLICY, C.PPO, seed=seed + 7,
                               state=clone_state(tr.state))
+            fork.run_log = run_log
             t1 = time.time()
             res = fork.finetune(task.name, task.gb, task.env,
                                 task.num_devices, finetune_iters)
@@ -175,10 +179,11 @@ def run_mode(sender_contention: bool, pretrain_iters: int,
 
 def run(pretrain_iters: int = 30, finetune_iters: int = 15,
         full: bool = False, seed: int = 0,
-        modes: Tuple[bool, ...] = (False, True)) -> Dict[str, Any]:
+        modes: Tuple[bool, ...] = (False, True),
+        run_log: RunLog = None) -> Dict[str, Any]:
     """Both simulator modes; returns the BENCH_transfer.json dict."""
     return {_mode_label(m): run_mode(m, pretrain_iters, finetune_iters,
-                                     full=full, seed=seed)
+                                     full=full, seed=seed, run_log=run_log)
             for m in modes}
 
 
@@ -186,13 +191,32 @@ def main(quick: bool = True, out: str = None) -> Dict[str, Any]:
     """CLI/campaign entry: run, write the BENCH_transfer.json artifact
     (strict JSON: OOM/inf becomes null).  Only a full-budget run is
     cached into experiments.json — quick numbers must never surface as
-    ``transfer.campaign.*`` lines."""
+    ``transfer.campaign.*`` lines.
+
+    Runs with tracing enabled and writes two observability sidecars next
+    to the BENCH artifact: ``*.metrics.jsonl`` (per-iteration PPO
+    training records) and ``*.trace.json`` (Chrome trace-event JSON,
+    loadable in Perfetto)."""
     t0 = time.time()
-    results = run(pretrain_iters=30 if quick else 200,
-                  finetune_iters=15 if quick else 50, full=not quick)
-    results["wall_s"] = time.time() - t0
-    C.cache_section("transfer", results, campaign_grade=not quick)
     out = out or OUT_PATH
+    metrics_path, trace_path = C.obs_out_paths(out)
+    run_log = RunLog(metrics_path, run="transfer")
+    old_tracer = set_tracer(Tracer(enabled=True))
+    try:
+        results = run(pretrain_iters=30 if quick else 200,
+                      finetune_iters=15 if quick else 50, full=not quick,
+                      run_log=run_log)
+    finally:
+        tracer = get_tracer()
+        tracer.export_chrome(trace_path)
+        set_tracer(old_tracer)
+        run_log.close()
+    results["wall_s"] = time.time() - t0
+    results["obs"] = {"metrics_jsonl": metrics_path,
+                      "trace_json": trace_path,
+                      "spans": len(tracer.spans)}
+    C.cache_section("transfer", results, campaign_grade=not quick,
+                    obs_paths=(metrics_path, trace_path))
     with open(out, "w") as f:
         json.dump(C.json_safe(results), f, indent=1, default=float,
                   allow_nan=False)

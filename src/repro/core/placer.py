@@ -43,6 +43,8 @@ import jax.numpy as jnp
 from repro.core import nn
 from repro.core.featurize import NUM_DEVICE_FEATURES
 from repro.core.superposition import modulate
+from repro.obs import jaxprof
+from repro.obs.trace import get_tracer
 
 NEG = -1e9
 
@@ -327,14 +329,19 @@ def apply_tf_segmented(params: Dict[str, Any], h: jnp.ndarray,
     kmem = jnp.zeros((nlayers, window - 1, heads, hd))
     vmem = jnp.zeros((nlayers, window - 1, heads, hd))
     outs = []
+    tracer = get_tracer()
     for s0 in range(0, n + pad, segment):
         sl = slice(s0, s0 + segment)
-        logits, kmem, vmem = _tf_segment(
-            params, x[sl], jax.lax.stop_gradient(kmem),
-            jax.lax.stop_gradient(vmem), node_mask[sl],
-            jnp.int32(s0), c, dev_keys, mem_before[sl], mem_frac[sl], cap,
-            heads=heads, num_devices=num_devices,
-            use_attention=use_attention)
+        # per-segment spans time the eager orchestration of the compiled
+        # step (first segment of a fresh shape carries the trace/compile)
+        with tracer.span("placer.tf_segment", cat="placer", seg_start=s0,
+                         segment=segment):
+            logits, kmem, vmem = _tf_segment(
+                params, x[sl], jax.lax.stop_gradient(kmem),
+                jax.lax.stop_gradient(vmem), node_mask[sl],
+                jnp.int32(s0), c, dev_keys, mem_before[sl], mem_frac[sl],
+                cap, heads=heads, num_devices=num_devices,
+                use_attention=use_attention)
         outs.append(logits)
     return jnp.concatenate(outs)[:n]
 
@@ -458,6 +465,12 @@ def _ar_segment_scan(params, h_seg, idx_seg, keys_seg, mf_seg, cf_seg,
                         (h_seg, idx_seg, keys_seg, mf_seg, cf_seg))
 
 
+# "one program per segment config": every segment of every graph must hit
+# these two caches — their counts are exported as gauges and pinned
+jaxprof.register("placer.tf_segment", _tf_segment)
+jaxprof.register("placer.ar_segment_scan", _ar_segment_scan)
+
+
 def sample_ar_segmented(params: Dict[str, Any], h: jnp.ndarray,
                         node_mask: jnp.ndarray, c: Optional[jnp.ndarray],
                         key, mem_frac: jnp.ndarray, comp_frac: jnp.ndarray,
@@ -492,12 +505,15 @@ def sample_ar_segmented(params: Dict[str, Any], h: jnp.ndarray,
     idx = jnp.arange(n + pad)
     temp = jnp.float32(temperature)
     devs, lps = [], []
+    tracer = get_tracer()
     for s0 in range(0, n + pad, segment):
         sl = slice(s0, s0 + segment)
-        carry, (d_seg, lp_seg) = _ar_segment_scan(
-            params, h[sl], idx[sl], keys[sl], mem_frac[sl], comp_frac[sl],
-            carry, c, dev_keys, temp, cap, heads=heads,
-            num_devices=num_devices, use_attention=use_attention)
+        with tracer.span("placer.ar_segment", cat="placer", seg_start=s0,
+                         segment=segment):
+            carry, (d_seg, lp_seg) = _ar_segment_scan(
+                params, h[sl], idx[sl], keys[sl], mem_frac[sl],
+                comp_frac[sl], carry, c, dev_keys, temp, cap, heads=heads,
+                num_devices=num_devices, use_attention=use_attention)
         devs.append(d_seg)
         lps.append(lp_seg)
     return (jnp.concatenate(devs)[:n],

@@ -23,6 +23,9 @@ import numpy as np
 from repro.core import policy as policy_mod
 from repro.core.featurize import GraphBatch
 from repro.core.policy import PolicyConfig
+from repro.obs import jaxprof
+from repro.obs.metrics import RunLog
+from repro.obs.trace import get_tracer
 from repro.optim import AdamConfig, adam_init, adam_update, clip_by_global_norm
 from repro.optim.clip import sanitize
 
@@ -98,7 +101,15 @@ def _loss_fn(params, pcfg: PolicyConfig, gb: GraphBatch, num_devices: int,
     denom = jnp.maximum(gb.node_mask.sum(), 1.0)
     pg = -(surr * gb.node_mask[None, :]).sum(-1) / denom        # [M]
     loss = pg.mean() - entropy_coef * ent
-    return loss, {"pg": pg.mean(), "entropy": ent}
+    # PPO health telemetry (masked, per-node actions): clip fraction is
+    # how much of the surrogate the clip is actually shaping; approx-KL
+    # is the standard E[old - new] drift estimator
+    mask = gb.node_mask[None, :]
+    m_total = denom * placements.shape[0]
+    clip_frac = ((jnp.abs(ratio - 1.0) > clip_eps) * mask).sum() / m_total
+    approx_kl = ((old_logp - new_lp) * mask).sum() / m_total
+    return loss, {"pg": pg.mean(), "entropy": ent,
+                  "clip_frac": clip_frac, "approx_kl": approx_kl}
 
 
 def _update_fn(params, opt_state, pcfg: PolicyConfig, ocfg: AdamConfig,
@@ -129,6 +140,13 @@ def _logp(params, pcfg: PolicyConfig, gb: GraphBatch, num_devices: int,
           placements):
     return policy_mod.logp_and_entropy(params, pcfg, gb, num_devices,
                                        placements)
+
+
+# "one program per (bucket, D) config" — iterations 2..N must reuse the
+# programs traced in iteration 1; tests pin these registrations' deltas
+jaxprof.register("ppo.update", _update)
+jaxprof.register("ppo.sample", _sample)
+jaxprof.register("ppo.logp", _logp)
 
 
 # Segmented configs manage their own per-segment compiled programs: an
@@ -207,6 +225,13 @@ class PPOTrainer:
         self.state = state or init_state(jax.random.PRNGKey(seed + 1),
                                          pcfg, self.ocfg)
         self.history: List[Dict[str, float]] = []
+        # run-scoped JSONL emitter; benchmarks attach one so every
+        # train/finetune iteration streams its record next to BENCH rows
+        self.run_log: Optional[RunLog] = None
+
+    def _emit(self, record: Dict[str, Any]) -> None:
+        if self.run_log is not None:
+            self.run_log.emit(record)
 
     # ------------------------------------------------------------------
     def _next_key(self):
@@ -228,16 +253,29 @@ class PPOTrainer:
     # ------------------------------------------------------------------
     def iteration(self, name: str, gb: GraphBatch, env,
                   num_devices: int) -> Dict[str, float]:
-        """One PPO iteration on a single graph task."""
-        placements, old_logp = _sample_any(self.state.params, self.pcfg, gb,
-                                           num_devices, self._next_key(),
-                                           self.ppo.num_samples)
-        if self.ppo.canonicalize:
-            placements = jnp.asarray(
-                canonical_relabel(np.asarray(placements), gb.num_nodes))
-            old_logp, _ = _logp_any(self.state.params, self.pcfg, gb,
-                                    num_devices, placements)
-        makespans, rewards, valid = env.rewards(placements)
+        """One PPO iteration on a single graph task.
+
+        The returned record carries the training-health telemetry
+        (clip fraction, approx-KL, feasible-sample rate, wall time, jit
+        retrace count for this iteration) alongside the reward numbers;
+        ``train``/``finetune`` stream these records to an attached
+        :class:`~repro.obs.metrics.RunLog`.
+        """
+        tracer = get_tracer()
+        mon = jaxprof.RetraceMonitor()
+        t_start = time.perf_counter()
+        with tracer.span("ppo.sample", cat="ppo", graph=name):
+            placements, old_logp = _sample_any(self.state.params, self.pcfg,
+                                               gb, num_devices,
+                                               self._next_key(),
+                                               self.ppo.num_samples)
+            if self.ppo.canonicalize:
+                placements = jnp.asarray(
+                    canonical_relabel(np.asarray(placements), gb.num_nodes))
+                old_logp, _ = _logp_any(self.state.params, self.pcfg, gb,
+                                        num_devices, placements)
+        with tracer.span("ppo.simulate", cat="ppo", graph=name):
+            makespans, rewards, valid = env.rewards(placements)
         rewards_np = np.asarray(rewards)
         if self.ppo.baseline == "loo" and rewards_np.size > 1:
             m = rewards_np.size
@@ -255,13 +293,17 @@ class PPOTrainer:
 
         ent_coef = self.ppo.entropy_coef * self.state.entropy_scale
         aux = {}
-        for _ in range(self.ppo.epochs):
-            p, o, aux = _update_any(self.state.params, self.state.opt_state,
-                                    self.pcfg, self.ocfg, gb, num_devices,
-                                    placements, old_logp, jnp.asarray(adv),
-                                    self.ppo.clip_eps, ent_coef,
-                                    self.ppo.grad_clip)
-            self.state.params, self.state.opt_state = p, o
+        with tracer.span("ppo.update", cat="ppo", graph=name,
+                         epochs=self.ppo.epochs):
+            for _ in range(self.ppo.epochs):
+                p, o, aux = _update_any(self.state.params,
+                                        self.state.opt_state,
+                                        self.pcfg, self.ocfg, gb,
+                                        num_devices, placements, old_logp,
+                                        jnp.asarray(adv),
+                                        self.ppo.clip_eps, ent_coef,
+                                        self.ppo.grad_clip)
+                self.state.params, self.state.opt_state = p, o
         self.state.step += 1
         self.state.entropy_scale *= self.ppo.entropy_decay
         mk_valid = np.where(np.asarray(valid), np.asarray(makespans), np.inf)
@@ -272,7 +314,11 @@ class PPOTrainer:
                 "best_makespan": best, "best_placement": best_pl,
                 "valid_frac": float(np.asarray(valid).mean()),
                 "loss": float(aux.get("loss", 0.0)),
-                "entropy": float(aux.get("entropy", 0.0))}
+                "entropy": float(aux.get("entropy", 0.0)),
+                "clip_frac": float(aux.get("clip_frac", 0.0)),
+                "approx_kl": float(aux.get("approx_kl", 0.0)),
+                "iter_s": time.perf_counter() - t_start,
+                "retraces": mon.total_delta()}
 
     # ------------------------------------------------------------------
     def train(self, tasks: List[Tuple[str, GraphBatch, Any, int]],
@@ -289,15 +335,22 @@ class PPOTrainer:
                     best[name] = min(best.get(name, np.inf), m["best_makespan"])
                 m["iter"] = it
                 m["elapsed_s"] = time.time() - t0
-                self.history.append(
-                    {k: v for k, v in m.items() if k != "best_placement"})
+                rec = {k: v for k, v in m.items() if k != "best_placement"}
+                rec["best_so_far"] = best.get(name, float("inf"))
+                self.history.append(rec)
+                self._emit(dict(rec, phase="train"))
                 if callback:
                     callback(it, m)
-                if log_every and it % log_every == 0:
+                # iteration 0 always logs (first signal a run is healthy),
+                # then every log_every-th; the stdout line renders the
+                # same record that streams to the JSONL
+                if log_every and (it == 0 or it % log_every == 0):
                     print(f"[ppo] it={it:4d} {name:>18s} "
-                          f"r̄={m['reward_mean']:+.3f} "
-                          f"best={best.get(name, np.inf):.4f}s "
-                          f"valid={m['valid_frac']:.2f}")
+                          f"r̄={rec['reward_mean']:+.3f} "
+                          f"best={rec['best_so_far']:.4f}s "
+                          f"valid={rec['valid_frac']:.2f} "
+                          f"kl={rec['approx_kl']:.4f} "
+                          f"clip={rec['clip_frac']:.2f}")
         return best
 
     # ------------------------------------------------------------------
@@ -320,6 +373,10 @@ class PPOTrainer:
             if m["best_makespan"] < best_mk:
                 best_mk = m["best_makespan"]
                 best_pl = m["best_placement"]
+            self._emit(dict({k: v for k, v in m.items()
+                             if k != "best_placement"},
+                            phase="finetune", iter=it_run,
+                            best_so_far=float(best_mk)))
             if target is not None and best_mk <= target:
                 break
         return {"best_makespan": float(best_mk), "best_placement": best_pl,

@@ -1,0 +1,32 @@
+"""Unified observability: metrics registry, span tracing, jit profiling.
+
+Three dependency-free pillars threaded through serving, training, and
+simulation (see ``docs/observability.md``):
+
+* :mod:`repro.obs.metrics` — labeled counters / gauges / fixed-bucket
+  histograms, ``snapshot()`` → plain dict, JSONL run logs, Prometheus
+  text exposition.
+* :mod:`repro.obs.trace` — simulated-clock-aware span tracer exporting
+  Chrome trace-event JSON (Perfetto-loadable); disabled by default.
+* :mod:`repro.obs.jaxprof` — jit retrace counters (the "compiles once
+  per bucket" invariants as asserted metrics) and peak-RSS sampling.
+"""
+from repro.obs.metrics import (  # noqa: F401
+    DEFAULT_BUCKETS,
+    Counter,
+    CounterDict,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    RunLog,
+    counters_flat,
+    merge_snapshots,
+    read_jsonl,
+)
+from repro.obs.trace import (  # noqa: F401
+    Span,
+    Tracer,
+    get_tracer,
+    set_tracer,
+)
+from repro.obs import jaxprof  # noqa: F401

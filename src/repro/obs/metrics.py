@@ -1,0 +1,485 @@
+"""Metrics registry: labeled counters, gauges, fixed-bucket histograms.
+
+One shared, dependency-free implementation behind every count the repo
+reports.  Before this module existed each layer hand-rolled its own
+bookkeeping — ``counts`` dicts in ``serve/``, percentile math re-derived
+per call site — which meant the nightly campaign could not diff two runs
+metric-by-metric and every new subsystem reinvented the wheel.  Now:
+
+* :class:`MetricsRegistry` owns named metrics; ``snapshot()`` returns a
+  plain JSON-able dict, :func:`to_prometheus` renders the standard text
+  exposition, and :class:`RunLog` appends snapshot (or arbitrary) records
+  to a run-scoped JSONL stream.
+* :class:`CounterDict` adapts one labeled counter to the historical
+  ``counts[...] += 1`` dict API, so the serving tier's ``stats()`` keys
+  (and the BENCH schemas built on them) stay bit-for-bit identical while
+  the values live in the registry.
+* :class:`Histogram` keeps both fixed buckets (for exposition/merging)
+  and the exact observations, so ``percentile()`` reproduces the
+  ``np.percentile`` numbers the pre-registry code computed per call site.
+
+Merging is first-class (:func:`merge_snapshots`): a cluster's artifact is
+the sum of its workers' counters, and the acceptance check "merged
+counters equal legacy ``stats()``" is one dict comparison
+(:func:`counters_flat`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import os
+from typing import Any, Dict, Iterable, Iterator, List, Mapping, Optional, Tuple
+
+import numpy as np
+
+# Default latency ladder (seconds): spans the serving cost model's 1e-4
+# lookups through multi-second fine-tunes; +inf overflow bucket implied.
+DEFAULT_BUCKETS: Tuple[float, ...] = (
+    1e-4, 2.5e-4, 5e-4, 1e-3, 2.5e-3, 5e-3, 1e-2, 2.5e-2, 5e-2,
+    0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 30.0, 60.0)
+
+LabelKey = Tuple[str, ...]
+
+
+def _label_key(label_names: Tuple[str, ...], labels: Mapping[str, Any]
+               ) -> LabelKey:
+    """Validate and order one call's labels against the metric's schema."""
+    if set(labels) != set(label_names):
+        raise ValueError(f"expected labels {label_names}, got "
+                         f"{tuple(labels)}")
+    return tuple(str(labels[n]) for n in label_names)
+
+
+def _fmt_labels(label_names: Tuple[str, ...], key: LabelKey) -> str:
+    """Prometheus-style label suffix: ``{a="x",b="y"}`` ("" when bare)."""
+    if not label_names:
+        return ""
+    inner = ",".join(f'{n}="{v}"' for n, v in zip(label_names, key))
+    return "{" + inner + "}"
+
+
+class _Metric:
+    """Shared shape of every metric: name, help text, label schema, and a
+    per-label-key value table."""
+
+    kind = "metric"
+
+    def __init__(self, name: str, help: str = "",
+                 label_names: Iterable[str] = ()):
+        self.name = name
+        self.help = help
+        self.label_names: Tuple[str, ...] = tuple(label_names)
+        self._values: Dict[LabelKey, Any] = {}
+
+    def key(self, labels: Mapping[str, Any]) -> LabelKey:
+        """Ordered label-value tuple for ``labels`` (schema-checked)."""
+        return _label_key(self.label_names, labels)
+
+    def label_keys(self) -> List[LabelKey]:
+        """Every label-value combination observed so far."""
+        return list(self._values)
+
+    def snapshot_values(self) -> Dict[str, Any]:
+        """Plain-dict view keyed by the Prometheus label suffix."""
+        return {_fmt_labels(self.label_names, k): v
+                for k, v in self._values.items()}
+
+
+class Counter(_Metric):
+    """Monotone event count, optionally labeled.
+
+    Values start as ints and stay ints under integer increments, so JSON
+    artifacts carry ``5`` (not ``5.0``) exactly like the hand-rolled
+    ``counts`` dicts this class replaces.
+    """
+
+    kind = "counter"
+
+    def preset(self, values: Iterable[Mapping[str, Any]]) -> "Counter":
+        """Pre-register label combinations at 0 so snapshots and dict
+        views expose them before the first event (stats() schema
+        stability)."""
+        for labels in values:
+            self._values.setdefault(self.key(labels), 0)
+        return self
+
+    def inc(self, n: int = 1, **labels: Any) -> None:
+        """Add ``n`` (default 1) to the labeled series."""
+        k = self.key(labels)
+        self._values[k] = self._values.get(k, 0) + n
+
+    def get(self, **labels: Any):
+        """Current value of the labeled series (0 when never touched)."""
+        return self._values.get(self.key(labels), 0)
+
+    def set(self, value, **labels: Any) -> None:
+        """Overwrite a series (the dict-API adapter needs ``d[k] = v``;
+        counters remain monotone under normal ``inc`` use)."""
+        self._values[self.key(labels)] = value
+
+    def total(self):
+        """Sum over every labeled series."""
+        return sum(self._values.values())
+
+
+class Gauge(_Metric):
+    """Point-in-time value (queue depth, cache entries, jit cache size)."""
+
+    kind = "gauge"
+
+    def set(self, value, **labels: Any) -> None:
+        """Set the labeled series to ``value``."""
+        self._values[self.key(labels)] = value
+
+    def inc(self, n=1, **labels: Any) -> None:
+        """Add ``n`` to the labeled series (0-initialized)."""
+        k = self.key(labels)
+        self._values[k] = self._values.get(k, 0) + n
+
+    def get(self, **labels: Any):
+        """Current value (0 when never set)."""
+        return self._values.get(self.key(labels), 0)
+
+
+@dataclasses.dataclass
+class _HistSeries:
+    """One labeled histogram series: bucket counts + exact observations."""
+    bucket_counts: List[int]
+    total: float = 0.0
+    count: int = 0
+    samples: Optional[List[float]] = None
+
+
+class Histogram(_Metric):
+    """Fixed-bucket histogram that also retains exact observations.
+
+    The buckets give mergeable, Prometheus-compatible exposition; the
+    retained samples give ``percentile()`` results identical to the
+    ``np.percentile``-over-request-lists the serving tier computed before
+    the registry existed (BENCH baselines must not move).  Callers that
+    observe unbounded streams can pass ``keep_samples=False`` and fall
+    back to bucket-interpolated quantiles.
+    """
+
+    kind = "histogram"
+
+    def __init__(self, name: str, help: str = "",
+                 label_names: Iterable[str] = (),
+                 buckets: Tuple[float, ...] = DEFAULT_BUCKETS,
+                 keep_samples: bool = True):
+        super().__init__(name, help, label_names)
+        self.buckets = tuple(sorted(buckets))
+        self.keep_samples = keep_samples
+
+    def _series(self, labels: Mapping[str, Any]) -> _HistSeries:
+        k = self.key(labels)
+        s = self._values.get(k)
+        if s is None:
+            s = self._values[k] = _HistSeries(
+                [0] * (len(self.buckets) + 1),
+                samples=[] if self.keep_samples else None)
+        return s
+
+    def observe(self, value: float, **labels: Any) -> None:
+        """Record one observation into the labeled series."""
+        s = self._series(labels)
+        v = float(value)
+        # first bucket whose upper bound covers v; overflow -> +inf bucket
+        i = int(np.searchsorted(np.asarray(self.buckets), v, side="left"))
+        s.bucket_counts[i] += 1
+        s.total += v
+        s.count += 1
+        if s.samples is not None:
+            s.samples.append(v)
+
+    # ------------------------------------------------------------ queries
+    def _selected(self, labels: Optional[Mapping[str, Any]]
+                  ) -> List[_HistSeries]:
+        if labels is None:
+            return list(self._values.values())
+        s = self._values.get(self.key(labels))
+        return [s] if s is not None else []
+
+    def count(self, labels: Optional[Mapping[str, Any]] = None) -> int:
+        """Observation count (all series merged when ``labels`` is None)."""
+        return sum(s.count for s in self._selected(labels))
+
+    def mean(self, labels: Optional[Mapping[str, Any]] = None) -> float:
+        """Mean observation (NaN when empty)."""
+        sel = self._selected(labels)
+        n = sum(s.count for s in sel)
+        return (sum(s.total for s in sel) / n) if n else float("nan")
+
+    def percentile(self, q: float,
+                   labels: Optional[Mapping[str, Any]] = None) -> float:
+        """q-th percentile; exact (``np.percentile`` over retained
+        samples) when samples are kept, bucket-interpolated otherwise.
+        NaN when the selection is empty."""
+        sel = self._selected(labels)
+        if not sel or not sum(s.count for s in sel):
+            return float("nan")
+        if all(s.samples is not None for s in sel):
+            merged = np.concatenate(
+                [np.asarray(s.samples, np.float64) for s in sel]) \
+                if len(sel) > 1 else np.asarray(sel[0].samples, np.float64)
+            return float(np.percentile(merged, q))
+        return self._bucket_percentile(q, sel)
+
+    def _bucket_percentile(self, q: float, sel: List[_HistSeries]) -> float:
+        counts = np.sum([s.bucket_counts for s in sel], axis=0)
+        cum = np.cumsum(counts)
+        rank = q / 100.0 * cum[-1]
+        i = int(np.searchsorted(cum, rank, side="left"))
+        if i >= len(self.buckets):          # overflow bucket: no upper edge
+            return float(self.buckets[-1])
+        lo = 0.0 if i == 0 else self.buckets[i - 1]
+        hi = self.buckets[i]
+        prev = 0 if i == 0 else cum[i - 1]
+        frac = (rank - prev) / max(counts[i], 1)
+        return float(lo + (hi - lo) * min(max(frac, 0.0), 1.0))
+
+    def snapshot_values(self) -> Dict[str, Any]:
+        """Buckets/sum/count per series (samples are not exported)."""
+        out = {}
+        for k, s in self._values.items():
+            out[_fmt_labels(self.label_names, k)] = {
+                "buckets": list(s.bucket_counts),
+                "sum": s.total, "count": s.count}
+        return out
+
+
+class CounterDict(Mapping):
+    """Dict-API adapter over one labeled :class:`Counter`.
+
+    The serving tier's historical ``self.counts["cache"] += 1`` call
+    sites, ``dict(self.counts)`` merges, and test assertions all keep
+    working unchanged while the values live in the registry (and so show
+    up in snapshots, JSONL and Prometheus exposition).  The label name is
+    fixed at construction; ``initial`` pre-registers the stats() schema
+    at 0.
+    """
+
+    def __init__(self, counter: Counter, initial: Iterable[str] = ()):
+        if len(counter.label_names) != 1:
+            raise ValueError("CounterDict adapts exactly one label "
+                             f"({counter.name} has {counter.label_names})")
+        self._c = counter
+        self._label = counter.label_names[0]
+        counter.preset([{self._label: k} for k in initial])
+
+    def __getitem__(self, key: str):
+        return self._c.get(**{self._label: key})
+
+    def __setitem__(self, key: str, value) -> None:
+        self._c.set(value, **{self._label: key})
+
+    def __iter__(self) -> Iterator[str]:
+        return (k[0] for k in self._c.label_keys())
+
+    def __len__(self) -> int:
+        return len(self._c.label_keys())
+
+    def __contains__(self, key: object) -> bool:
+        return (str(key),) in self._c.label_keys()
+
+
+class MetricsRegistry:
+    """Named collection of metrics with one snapshot/exposition surface.
+
+    Each serving worker (and the cluster router) owns its own registry so
+    per-worker numbers stay isolated exactly like the per-object
+    ``counts`` dicts they replace; :func:`merge_snapshots` recovers the
+    tier-wide totals.
+    """
+
+    def __init__(self):
+        self._metrics: "Dict[str, _Metric]" = {}
+
+    def _get_or_create(self, cls, name: str, help: str,
+                       label_names: Iterable[str], **kwargs):
+        m = self._metrics.get(name)
+        if m is not None:
+            if not isinstance(m, cls) or m.label_names != tuple(label_names):
+                raise ValueError(f"metric {name!r} re-registered with a "
+                                 f"different type or label schema")
+            return m
+        m = cls(name, help, label_names, **kwargs)
+        self._metrics[name] = m
+        return m
+
+    def counter(self, name: str, help: str = "",
+                label_names: Iterable[str] = ()) -> Counter:
+        """Get-or-create a counter (idempotent per name)."""
+        return self._get_or_create(Counter, name, help, label_names)
+
+    def gauge(self, name: str, help: str = "",
+              label_names: Iterable[str] = ()) -> Gauge:
+        """Get-or-create a gauge."""
+        return self._get_or_create(Gauge, name, help, label_names)
+
+    def histogram(self, name: str, help: str = "",
+                  label_names: Iterable[str] = (),
+                  buckets: Tuple[float, ...] = DEFAULT_BUCKETS,
+                  keep_samples: bool = True) -> Histogram:
+        """Get-or-create a histogram."""
+        return self._get_or_create(Histogram, name, help, label_names,
+                                   buckets=buckets,
+                                   keep_samples=keep_samples)
+
+    def get(self, name: str) -> Optional[_Metric]:
+        """Registered metric by name (None when absent)."""
+        return self._metrics.get(name)
+
+    def names(self) -> List[str]:
+        """Registered metric names, registration order."""
+        return list(self._metrics)
+
+    # ---------------------------------------------------------- exporters
+    def snapshot(self) -> Dict[str, Any]:
+        """Plain JSON-able dict of every metric's current values."""
+        out: Dict[str, Any] = {}
+        for name, m in self._metrics.items():
+            entry: Dict[str, Any] = {"type": m.kind,
+                                     "values": m.snapshot_values()}
+            if m.help:
+                entry["help"] = m.help
+            if isinstance(m, Histogram):
+                entry["bucket_bounds"] = list(m.buckets)
+            out[name] = entry
+        return out
+
+    def to_prometheus(self) -> str:
+        """Standard Prometheus text exposition of every metric."""
+        lines: List[str] = []
+        for name, m in self._metrics.items():
+            if m.help:
+                lines.append(f"# HELP {name} {m.help}")
+            lines.append(f"# TYPE {name} {m.kind}")
+            if isinstance(m, Histogram):
+                for k, s in m._values.items():
+                    cum = 0
+                    for bound, c in zip(m.buckets + (math.inf,),
+                                        s.bucket_counts):
+                        cum += c
+                        le = "+Inf" if math.isinf(bound) else repr(bound)
+                        lk = dict(zip(m.label_names, k), le=le)
+                        suffix = _fmt_labels(tuple(lk), tuple(lk.values()))
+                        lines.append(f"{name}_bucket{suffix} {cum}")
+                    base = _fmt_labels(m.label_names, k)
+                    lines.append(f"{name}_sum{base} {s.total}")
+                    lines.append(f"{name}_count{base} {s.count}")
+            else:
+                for k, v in m._values.items():
+                    lines.append(f"{name}{_fmt_labels(m.label_names, k)} {v}")
+        return "\n".join(lines) + "\n"
+
+
+# -------------------------------------------------------------- merging
+def merge_snapshots(snaps: Iterable[Dict[str, Any]]) -> Dict[str, Any]:
+    """Sum counters and histogram buckets across snapshots (a cluster's
+    artifact = its workers' registries merged); gauges keep the last
+    writer's value per series."""
+    out: Dict[str, Any] = {}
+    for snap in snaps:
+        for name, entry in snap.items():
+            cur = out.get(name)
+            if cur is None:
+                out[name] = json.loads(json.dumps(entry))  # deep copy
+                continue
+            for key, v in entry["values"].items():
+                if entry["type"] == "histogram":
+                    cv = cur["values"].get(key)
+                    if cv is None:
+                        cur["values"][key] = json.loads(json.dumps(v))
+                    else:
+                        cv["buckets"] = [a + b for a, b in
+                                         zip(cv["buckets"], v["buckets"])]
+                        cv["sum"] += v["sum"]
+                        cv["count"] += v["count"]
+                elif entry["type"] == "counter":
+                    cur["values"][key] = cur["values"].get(key, 0) + v
+                else:
+                    cur["values"][key] = v
+    return out
+
+
+def counters_flat(snapshot: Dict[str, Any]) -> Dict[str, Any]:
+    """Flatten a snapshot's counters/gauges to ``name{label="v"} -> value``
+    (the one-dict form the parity check against legacy ``stats()`` and the
+    ``--metrics`` diff tool both consume)."""
+    out: Dict[str, Any] = {}
+    for name, entry in snapshot.items():
+        if entry["type"] not in ("counter", "gauge"):
+            continue
+        for key, v in entry["values"].items():
+            out[name + key] = v
+    return out
+
+
+# ---------------------------------------------------------------- run log
+def _json_safe(x):
+    """Non-finite floats -> None so every JSONL line is strict RFC 8259."""
+    if isinstance(x, dict):
+        return {k: _json_safe(v) for k, v in x.items()}
+    if isinstance(x, (list, tuple)):
+        return [_json_safe(v) for v in x]
+    if isinstance(x, (float, np.floating)):
+        f = float(x)
+        return f if math.isfinite(f) else None
+    if isinstance(x, (np.integer,)):
+        return int(x)
+    return x
+
+
+class RunLog:
+    """Run-scoped append-only JSONL metrics stream.
+
+    One line per :meth:`emit` call, stamped with the run name and a
+    monotone sequence number; non-finite floats become ``null`` so the
+    file stays strict JSON per line (same discipline as the benchmark
+    cache).  Opened lazily, flushed per line so a crashed run keeps its
+    telemetry.
+    """
+
+    def __init__(self, path: str, run: str = ""):
+        self.path = path
+        self.run = run
+        self.seq = 0
+        self._f = None
+
+    def emit(self, record: Dict[str, Any]) -> Dict[str, Any]:
+        """Append one record; returns the stamped dict that was written."""
+        if self._f is None:
+            d = os.path.dirname(self.path)
+            if d:
+                os.makedirs(d, exist_ok=True)
+            self._f = open(self.path, "a")
+        rec = {"run": self.run, "seq": self.seq}
+        rec.update(_json_safe(record))
+        self.seq += 1
+        self._f.write(json.dumps(rec, allow_nan=False) + "\n")
+        self._f.flush()
+        return rec
+
+    def emit_snapshot(self, registry: MetricsRegistry,
+                      **extra: Any) -> Dict[str, Any]:
+        """Append one registry snapshot record (``extra`` fields inline)."""
+        return self.emit(dict(extra, snapshot=registry.snapshot()))
+
+    def close(self) -> None:
+        """Close the underlying file (idempotent)."""
+        if self._f is not None:
+            self._f.close()
+            self._f = None
+
+
+def read_jsonl(path: str) -> List[Dict[str, Any]]:
+    """Parse every line of a JSONL file (blank lines skipped)."""
+    out = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                out.append(json.loads(line))
+    return out

@@ -1,0 +1,190 @@
+"""Span tracing with Chrome trace-event export (Perfetto-loadable).
+
+A :class:`Tracer` records named spans via a context manager::
+
+    with tracer.span("serve.batch", cat="serve", real=3):
+        ...
+
+and exports them as Chrome trace-event JSON (``{"traceEvents": [...]}``,
+"X" complete events, microsecond timestamps) that chrome://tracing and
+https://ui.perfetto.dev open directly; ``tools/trace_summary.py`` prints
+the top-k slowest spans and per-category totals from the same file.
+
+**Clock-aware**: a span takes its timestamps from whatever clock it is
+given — the serving tier passes its per-worker
+:class:`~repro.serve.service.SimulatedClock` so traces of simulated runs
+lay out on the same deterministic logical timeline the latency numbers
+are measured on; everything else defaults to the wall clock
+(``time.perf_counter``).  A clock is anything with a ``now() -> float``
+method or a bare ``() -> float`` callable.
+
+**Off by default, ~free when off**: the module-level default tracer is
+disabled, and a disabled tracer's ``span()`` returns one shared no-op
+context manager — instrumented hot paths pay a single attribute check.
+Benchmarks that want traces install an enabled tracer via
+:func:`set_tracer` (restoring the old one after; see
+``benchmarks/serve.py --cluster``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+
+def _resolve_clock(clock) -> Callable[[], float]:
+    """Normalize a clock (``now()`` object, callable, or None=wall)."""
+    if clock is None:
+        return time.perf_counter
+    now = getattr(clock, "now", None)
+    if callable(now):
+        return now
+    return clock
+
+
+@dataclasses.dataclass
+class Span:
+    """One completed span on some clock's timeline (seconds)."""
+    name: str
+    cat: str
+    ts: float                    # start, seconds on the span's clock
+    dur: float                   # duration, seconds
+    tid: int = 0                 # lane (the cluster uses worker ids)
+    args: Optional[Dict[str, Any]] = None
+
+
+class _NullSpan:
+    """Shared no-op context manager returned by disabled tracers."""
+    __slots__ = ()
+    args: Dict[str, Any] = {}
+
+    def __enter__(self) -> "_NullSpan":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        pass
+
+    def set(self, **kwargs: Any) -> None:
+        """No-op (mirror of :meth:`_LiveSpan.set`)."""
+        pass
+
+
+_NULL_SPAN = _NullSpan()
+
+
+class _LiveSpan:
+    """Context manager recording one span into its tracer."""
+    __slots__ = ("_tracer", "name", "cat", "tid", "args", "_now", "_t0")
+
+    def __init__(self, tracer: "Tracer", name: str, cat: str,
+                 now: Callable[[], float], tid: int,
+                 args: Optional[Dict[str, Any]]):
+        self._tracer = tracer
+        self.name = name
+        self.cat = cat
+        self.tid = tid
+        self.args = args
+        self._now = now
+
+    def set(self, **kwargs: Any) -> None:
+        """Attach/overwrite span args from inside the ``with`` body."""
+        if self.args is None:
+            self.args = {}
+        self.args.update(kwargs)
+
+    def __enter__(self) -> "_LiveSpan":
+        self._t0 = self._now()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        t1 = self._now()
+        self._tracer.spans.append(Span(self.name, self.cat, self._t0,
+                                       t1 - self._t0, self.tid, self.args))
+
+
+class Tracer:
+    """Collects spans; exports Chrome trace-event JSON.
+
+    Args:
+        enabled: disabled tracers hand out a shared no-op span.
+        clock: default clock for spans that don't pass one (None = wall).
+        pid: process id stamped on exported events (cosmetic grouping).
+    """
+
+    def __init__(self, enabled: bool = True, clock=None, pid: int = 0):
+        self.enabled = enabled
+        self.pid = pid
+        self.spans: List[Span] = []
+        self._default_now = _resolve_clock(clock)
+
+    # ------------------------------------------------------------- record
+    def span(self, name: str, cat: str = "", clock=None, tid: int = 0,
+             **args: Any):
+        """Context manager timing one span.
+
+        Args:
+            name: span name (shown per-slice in Perfetto).
+            cat: category — the "phase" axis ``trace_summary`` totals by.
+            clock: clock override for this span (e.g. a worker's
+                ``SimulatedClock``); None uses the tracer default.
+            tid: lane id (the cluster passes the worker index).
+            **args: JSON-able metadata attached to the event.
+        """
+        if not self.enabled:
+            return _NULL_SPAN
+        now = self._default_now if clock is None else _resolve_clock(clock)
+        return _LiveSpan(self, name, cat, now, tid, args or None)
+
+    def instant(self, name: str, cat: str = "", clock=None, tid: int = 0,
+                **args: Any) -> None:
+        """Record a zero-duration marker event."""
+        if not self.enabled:
+            return
+        now = self._default_now if clock is None else _resolve_clock(clock)
+        self.spans.append(Span(name, cat, now(), 0.0, tid, args or None))
+
+    def clear(self) -> None:
+        """Drop every recorded span."""
+        self.spans.clear()
+
+    # ------------------------------------------------------------- export
+    def to_chrome(self) -> Dict[str, Any]:
+        """Chrome trace-event document (timestamps in microseconds)."""
+        events = []
+        for s in self.spans:
+            ev: Dict[str, Any] = {
+                "name": s.name, "cat": s.cat or "default", "ph": "X",
+                "ts": s.ts * 1e6, "dur": s.dur * 1e6,
+                "pid": self.pid, "tid": s.tid,
+            }
+            if s.args:
+                ev["args"] = s.args
+            events.append(ev)
+        return {"traceEvents": events, "displayTimeUnit": "ms"}
+
+    def export_chrome(self, path: str) -> str:
+        """Write the Chrome trace-event JSON to ``path`` (returned)."""
+        with open(path, "w") as f:
+            json.dump(self.to_chrome(), f)
+        return path
+
+
+# ------------------------------------------------------- default tracer
+_DEFAULT = Tracer(enabled=False)
+
+
+def get_tracer() -> Tracer:
+    """The process-wide default tracer (disabled until someone enables
+    tracing); instrumented modules read it per call so a benchmark can
+    swap tracers mid-process."""
+    return _DEFAULT
+
+
+def set_tracer(tracer: Tracer) -> Tracer:
+    """Install ``tracer`` as the process default; returns the previous
+    one so callers can restore it (``finally: set_tracer(old)``)."""
+    global _DEFAULT
+    old = _DEFAULT
+    _DEFAULT = tracer
+    return old

@@ -29,11 +29,12 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict
+from typing import Dict, Optional
 
 import numpy as np
 
 from repro.core import baselines as B
+from repro.obs.metrics import Counter, MetricsRegistry
 
 
 @dataclasses.dataclass(frozen=True)
@@ -52,13 +53,41 @@ class AdmissionConfig:
     shed_s: float = 2e-4               # cost of the baseline fast path
 
 
-@dataclasses.dataclass
+def _decision_field(name: str):
+    """Attribute-style view (read and ``+= 1``) over one counter series."""
+
+    def _get(self: "AdmissionStats") -> int:
+        return self._c.get(decision=name)
+
+    def _set(self: "AdmissionStats", value: int) -> None:
+        self._c.set(int(value), decision=name)
+
+    _get.__doc__ = f'Count of ``decision="{name}"`` admission outcomes.'
+    return property(_get, _set)
+
+
 class AdmissionStats:
-    """Counters for admission decisions at one router."""
-    admitted: int = 0
-    shed_lag: int = 0
-    shed_depth: int = 0
-    shed_oversize: int = 0
+    """Counters for admission decisions at one router.
+
+    Historically a plain dataclass; the values now live in a registry
+    counter (``admission_decisions_total{decision=...}``) so they ship in
+    metrics snapshots, while the attribute API (``stats.shed_lag += 1``,
+    ``stats.admitted``) and ``as_dict()`` schema stay unchanged.
+    """
+
+    FIELDS = ("admitted", "shed_lag", "shed_depth", "shed_oversize")
+
+    def __init__(self, counter: Optional[Counter] = None):
+        if counter is None:
+            counter = Counter("admission_decisions_total",
+                              "admission decisions", ("decision",))
+        self._c = counter
+        counter.preset([{"decision": f} for f in self.FIELDS])
+
+    admitted = _decision_field("admitted")
+    shed_lag = _decision_field("shed_lag")
+    shed_depth = _decision_field("shed_depth")
+    shed_oversize = _decision_field("shed_oversize")
 
     @property
     def shed(self) -> int:
@@ -77,11 +106,19 @@ class AdmissionController:
 
     Args:
         config: thresholds and shed-path cost (:class:`AdmissionConfig`).
+        registry: optional :class:`MetricsRegistry` to record decisions
+            in (the cluster passes its router registry so admission
+            counters land in the tier's snapshot); a private registry is
+            created when omitted.
     """
 
-    def __init__(self, config: AdmissionConfig = AdmissionConfig()):
+    def __init__(self, config: AdmissionConfig = AdmissionConfig(),
+                 registry: Optional[MetricsRegistry] = None):
         self.cfg = config
-        self.stats = AdmissionStats()
+        self.metrics = registry if registry is not None else MetricsRegistry()
+        self.stats = AdmissionStats(
+            self.metrics.counter("admission_decisions_total",
+                                 "admission decisions", ("decision",)))
 
     def admit(self, lag_s: float, queue_depth: int,
               num_nodes: int = 0) -> bool:

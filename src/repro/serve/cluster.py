@@ -45,13 +45,16 @@ from typing import Any, Dict, List, Optional, Set, Tuple
 import numpy as np
 
 from repro.core.ppo import PPOTrainer
+from repro.obs.metrics import (CounterDict, MetricsRegistry,
+                               merge_snapshots)
+from repro.obs.trace import Span, get_tracer
 from repro.serve import fingerprint as FP
 from repro.serve.admission import (AdmissionConfig, AdmissionController,
                                    degraded_placement)
 from repro.serve.cache import CacheEntry
 from repro.serve.persist import PersistentStore, policy_hash
 from repro.serve.service import (PlacementService, Request, ServeConfig,
-                                 SimulatedClock)
+                                 SimulatedClock, latency_summary)
 from repro.sim.device import Topology
 
 Key = Tuple[str, str]
@@ -129,7 +132,11 @@ class PlacementCluster:
         self.trainer = trainer
         self.policy_hash = policy_hash(trainer.state.params)
         self.ring = HashRing(config.num_workers, config.virtual_nodes)
-        self.admission = AdmissionController(config.admission)
+        # router-level registry: routing/admission counters live here;
+        # each worker keeps its own (merged by snapshot())
+        self.metrics = MetricsRegistry()
+        self.admission = AdmissionController(config.admission,
+                                             registry=self.metrics)
         self.workers: List[PlacementService] = []
         for w in range(config.num_workers):
             scfg = dataclasses.replace(config.serve, simulated=True,
@@ -138,11 +145,16 @@ class PlacementCluster:
                 store_root, self.policy_hash, worker_tag=f"w{w}",
                 sender_contention=scfg.sender_contention)
                 if store_root is not None else None)
-            self.workers.append(PlacementService(
+            svc = PlacementService(
                 trainer, scfg, SimulatedClock(), store=store,
-                preload=lambda key, w=w: self.ring.route(key[0]) == w))
+                preload=lambda key, w=w: self.ring.route(key[0]) == w)
+            svc.tid = w + 1      # trace lanes: router=0, workers=1..N
+            self.workers.append(svc)
         self.shed_completed: List[Request] = []
-        self.counts: Dict[str, int] = {"forwarded": 0, "shed": 0}
+        self.counts = CounterDict(
+            self.metrics.counter("cluster_router_total",
+                                 "router event counts", ("event",)),
+            initial=("forwarded", "shed"))
         self._next_shed_id = -1          # negative ids: router-made answers
         self._keys_per_worker: List[Set[Key]] = [
             set() for _ in range(config.num_workers)]
@@ -194,9 +206,12 @@ class PlacementCluster:
         if svc.cache.peek(key) is None:
             sib = self._sibling_entry(key, w)
             if sib is not None:        # cross-shard forward, no re-infer
-                svc.clock.advance_to(arrival_t)
-                svc.clock.advance(self.cfg.forward_s)
-                svc.adopt(key, sib)
+                with get_tracer().span("cluster.forward", cat="cluster",
+                                       clock=svc.clock, tid=svc.tid,
+                                       home=w):
+                    svc.clock.advance_to(arrival_t)
+                    svc.clock.advance(self.cfg.forward_s)
+                    svc.adopt(key, sib)
                 self.counts["forwarded"] += 1
         req = svc.submit(g, topo, arrival_t=arrival_t,
                          fp_order=(fp, order), topo_fp=key[1])
@@ -216,6 +231,10 @@ class PlacementCluster:
         req.done_t = arrival_t + self.cfg.admission.shed_s
         req.source = req.entry_source = "shed"
         self.counts["shed"] += 1
+        tr = get_tracer()
+        if tr.enabled:   # router lane (tid 0) runs on request-arrival time
+            tr.spans.append(Span("cluster.shed", "cluster", arrival_t,
+                                 self.cfg.admission.shed_s, tid=0))
         self.shed_completed.append(req)
         return req
 
@@ -251,9 +270,16 @@ class PlacementCluster:
 
     def stats(self) -> Dict[str, Any]:
         """Aggregate tier stats: merged ladder counts, cluster-wide
-        latency percentiles (shed answers included), admission and
-        forwarding counters, and a per-worker breakdown for shard
-        balance."""
+        latency percentiles, admission and forwarding counters, and a
+        per-worker breakdown for shard balance.
+
+        ``latency_*`` covers every resolved request *including* shed
+        fast-path answers, whose fixed tiny cost masks tail regressions
+        in the real ladder under overload; ``served_latency_*`` excludes
+        sheds and is the number to watch for the ladder's p99.  Both come
+        from the shared histogram implementation
+        (:func:`~repro.serve.service.latency_summary`).
+        """
         out: Dict[str, Any] = dict(self.counts)
         out.update(self.admission.stats.as_dict())
         agg: Dict[str, float] = {}
@@ -276,11 +302,18 @@ class PlacementCluster:
         out["hit_rate"] = out.get("hits", 0) / reqs if reqs else 0.0
         done = self.completed()
         out["served_total"] = len(done)
-        lats = np.asarray([r.latency for r in done], np.float64)
-        if lats.size:
-            out["latency_p50_s"] = float(np.percentile(lats, 50))
-            out["latency_p99_s"] = float(np.percentile(lats, 99))
-            out["latency_mean_s"] = float(lats.mean())
+        out.update(latency_summary(r.latency for r in done))
+        out.update(latency_summary(
+            (r.latency for r in done if r.source != "shed"),
+            prefix="served_latency"))
         out["makespan_s"] = self.makespan()
         out["per_worker"] = per_worker
         return out
+
+    def snapshot(self) -> Dict[str, Any]:
+        """Tier-wide metrics snapshot: the router registry (routing +
+        admission counters) merged with every worker's registry — the
+        artifact whose counters the legacy ``stats()`` values are checked
+        against bit-for-bit (see ``benchmarks/serve.py``)."""
+        return merge_snapshots([self.metrics.snapshot()] +
+                               [svc.snapshot() for svc in self.workers])

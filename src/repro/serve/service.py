@@ -62,6 +62,9 @@ from repro.core import policy as policy_mod
 from repro.core.featurize import bucket_size, featurize, jumbo_bucket
 from repro.core.policy import PolicyConfig
 from repro.core.ppo import PPOTrainer, clone_state
+from repro.obs import jaxprof
+from repro.obs.metrics import CounterDict, Histogram, MetricsRegistry
+from repro.obs.trace import get_tracer
 from repro.sim.device import Topology
 from repro.sim.scheduler import Env, prepare_sim_graph
 from repro.serve import fingerprint as FP
@@ -219,6 +222,35 @@ def _sample_batch_jit(params, pcfg: PolicyConfig, sgb, num_devices: int,
                                    num_samples, temperature)
 
 
+# the "compiles once per bucket" serving invariant is asserted off this
+# registration (tests pin its cache-size delta across warm replays)
+jaxprof.register("serve.sample_batch", _sample_batch_jit)
+
+# the serving ladder's historical stats() key set; CounterDict presets it
+# so snapshots expose every rung at 0 from the first request
+_LADDER_KEYS = ("cache", "disk", "zero_shot", "baseline", "finetunes",
+                "finetune_published", "forward_adopted", "stale_served",
+                "shed", "shed_rejected", "jumbo")
+
+
+def latency_summary(latencies, prefix: str = "latency") -> Dict[str, float]:
+    """p50/p99/mean of ``latencies`` through the shared Histogram.
+
+    One implementation behind every latency percentile the repo reports
+    (worker stats, cluster stats, benchmarks); retained-sample mode makes
+    the numbers bit-for-bit equal to the per-call ``np.percentile`` math
+    it replaced.  Empty input returns {} (legacy stats() omitted the keys).
+    """
+    h = Histogram(prefix)
+    for v in latencies:
+        h.observe(float(v))
+    if not h.count():
+        return {}
+    return {f"{prefix}_p50_s": h.percentile(50),
+            f"{prefix}_p99_s": h.percentile(99),
+            f"{prefix}_mean_s": h.mean()}
+
+
 class PlacementService:
     """Synchronous-submit / async-worker placement server.
 
@@ -270,12 +302,19 @@ class PlacementService:
         self._key = jax.random.PRNGKey(config.seed)
         self._next_id = 0
         self.completed: List[Request] = []
-        self.counts: Dict[str, int] = {"cache": 0, "disk": 0, "zero_shot": 0,
-                                       "baseline": 0, "finetunes": 0,
-                                       "finetune_published": 0,
-                                       "forward_adopted": 0,
-                                       "stale_served": 0, "shed": 0,
-                                       "shed_rejected": 0, "jumbo": 0}
+        # per-worker metrics registry; the historical ``counts`` dict API
+        # survives as a CounterDict view over one labeled counter, so the
+        # stats() schema (and every `svc.counts[...]` call site) is
+        # unchanged while the values ship in snapshots/JSONL/Prometheus
+        self.metrics = MetricsRegistry()
+        self.counts = CounterDict(
+            self.metrics.counter("serve_events_total",
+                                 "serving-ladder event counts", ("event",)),
+            initial=_LADDER_KEYS)
+        self._lat_hist = self.metrics.histogram(
+            "serve_latency_seconds",
+            "request latency observed at resolve time", ("source",))
+        self.tid = 0   # trace lane; the cluster assigns worker indices
         if self.store is not None:
             for key, se in self.store.items():
                 if preload is None or preload(key):
@@ -323,9 +362,11 @@ class PlacementService:
                                        self.cfg.max_graph_nodes,
                                        g.num_nodes)
 
-        entry = self.cache.get(key)
-        if self.clock.simulated:
-            self.clock.advance(self.cfg.costs.lookup_s)
+        with get_tracer().span("serve.lookup", cat="serve",
+                               clock=self.clock, tid=self.tid):
+            entry = self.cache.get(key)
+            if self.clock.simulated:
+                self.clock.advance(self.cfg.costs.lookup_s)
         if entry is not None:
             self._serve_entry(req, entry, "cache")
             return req
@@ -338,9 +379,11 @@ class PlacementService:
             return req
 
         if self.store is not None:             # disk rung: evicted / warm
-            if self.clock.simulated:
-                self.clock.advance(self.cfg.costs.store_lookup_s)
-            se = self.store.lookup(key)
+            with get_tracer().span("serve.store_lookup", cat="serve",
+                                   clock=self.clock, tid=self.tid):
+                if self.clock.simulated:
+                    self.clock.advance(self.cfg.costs.store_lookup_s)
+                se = self.store.lookup(key)
             if se is not None:
                 entry = se.to_cache_entry()
                 self.cache.put(key, entry)     # re-admit to memory
@@ -376,6 +419,7 @@ class PlacementService:
         req.source = req.entry_source = "shed"
         self.counts["shed"] += 1
         self.counts["shed_rejected"] += 1
+        self._lat_hist.observe(req.latency, source="shed")
         self.completed.append(req)
         return req
 
@@ -383,12 +427,15 @@ class PlacementService:
         """Serve one jumbo admission: a single segmented zero-shot decode
         (no micro-batching), then the normal select/publish/escalate path."""
         n = req.graph.num_nodes
-        if self.clock.simulated:
-            self.clock.advance(self.cfg.costs.jumbo_per_knode_s *
-                               max(n, 1) / 1000.0)
-        sampled, _ = policy_mod.sample(
-            self.trainer.state.params, self.pcfg, ctx.gb, ctx.num_devices,
-            self._split(), self.cfg.num_samples, self.cfg.temperature)
+        with get_tracer().span("serve.jumbo", cat="serve", clock=self.clock,
+                               tid=self.tid, num_nodes=n):
+            if self.clock.simulated:
+                self.clock.advance(self.cfg.costs.jumbo_per_knode_s *
+                                   max(n, 1) / 1000.0)
+            sampled, _ = policy_mod.sample(
+                self.trainer.state.params, self.pcfg, ctx.gb,
+                ctx.num_devices, self._split(), self.cfg.num_samples,
+                self.cfg.temperature)
         self.counts["jumbo"] += 1
         self._serve_zero_shot(req, np.asarray(sampled, np.int32))
 
@@ -483,24 +530,29 @@ class PlacementService:
         req.source = source
         req.entry_source = entry_source or source
         self.counts[source] += 1
+        self._lat_hist.observe(req.latency, source=source)
         self.completed.append(req)
 
     def _flush(self, flushes) -> None:
         for fl in flushes:
-            if self.clock.simulated:
-                self.clock.advance(self.cfg.costs.batch_base_s +
-                                   self.cfg.costs.batch_per_graph_s * fl.real)
-            # a segmented policy manages its own per-segment compiled
-            # programs — wrapping the Python segment loop in the outer
-            # jit would trace it into one graph-sized program
-            sample_fn = (policy_mod.sample_batch
-                         if self.pcfg.segment is not None
-                         else _sample_batch_jit)
-            placements, _ = sample_fn(
-                self.trainer.state.params, self.pcfg, fl.sgb, fl.key[1],
-                self._split(), self.cfg.num_samples,
-                self.cfg.temperature)
-            placements = np.asarray(placements, np.int32)   # [B, M, Npad]
+            with get_tracer().span("serve.batch", cat="serve",
+                                   clock=self.clock, tid=self.tid,
+                                   real=fl.real):
+                if self.clock.simulated:
+                    self.clock.advance(
+                        self.cfg.costs.batch_base_s +
+                        self.cfg.costs.batch_per_graph_s * fl.real)
+                # a segmented policy manages its own per-segment compiled
+                # programs — wrapping the Python segment loop in the outer
+                # jit would trace it into one graph-sized program
+                sample_fn = (policy_mod.sample_batch
+                             if self.pcfg.segment is not None
+                             else _sample_batch_jit)
+                placements, _ = sample_fn(
+                    self.trainer.state.params, self.pcfg, fl.sgb, fl.key[1],
+                    self._split(), self.cfg.num_samples,
+                    self.cfg.temperature)
+                placements = np.asarray(placements, np.int32)  # [B, M, Npad]
             for i, req in enumerate(fl.items):
                 self._serve_zero_shot(req, placements[i])
 
@@ -510,7 +562,9 @@ class PlacementService:
         ctx = self._ctx[req.key]
         n = req.graph.num_nodes
         pad_n = ctx.gb.op.shape[0]        # ctx arrays live at bucket width
-        mks, _, valid = ctx.env_true.rewards(sampled[:, :pad_n])
+        with get_tracer().span("serve.zero_shot", cat="serve",
+                               clock=self.clock, tid=self.tid):
+            mks, _, valid = ctx.env_true.rewards(sampled[:, :pad_n])
         mks = np.where(np.asarray(valid), np.asarray(mks), np.inf)
         best = int(mks.argmin())
         pl, mk, source = sampled[best, :n], float(mks[best]), "zero_shot"
@@ -538,15 +592,19 @@ class PlacementService:
         shared base policy; publish the placement iff it improves the
         cached one (PlacementCache.publish enforces monotonicity)."""
         ctx = self._ctx[key]
-        fork = PPOTrainer(self.pcfg, self.trainer.ppo,
-                          seed=self.cfg.seed + 17,
-                          state=clone_state(self.trainer.state))
-        res = fork.finetune(name, ctx.gb, ctx.env_shaped, ctx.num_devices,
-                            self.cfg.finetune_iters)
-        self.counts["finetunes"] += 1
-        if self.clock.simulated:
-            self.clock.advance(self.cfg.costs.finetune_iter_s *
-                               res["iterations"])
+        with get_tracer().span("serve.finetune", cat="serve",
+                               clock=self.clock, tid=self.tid,
+                               graph=name) as sp:
+            fork = PPOTrainer(self.pcfg, self.trainer.ppo,
+                              seed=self.cfg.seed + 17,
+                              state=clone_state(self.trainer.state))
+            res = fork.finetune(name, ctx.gb, ctx.env_shaped,
+                                ctx.num_devices, self.cfg.finetune_iters)
+            self.counts["finetunes"] += 1
+            if self.clock.simulated:
+                self.clock.advance(self.cfg.costs.finetune_iter_s *
+                                   res["iterations"])
+            sp.set(iterations=res["iterations"])
         if res["best_placement"] is None:
             return
         n = ctx.gb.num_nodes
@@ -561,13 +619,16 @@ class PlacementService:
     def _publish(self, key: Tuple[str, str], canon_pl: np.ndarray,
                  mk: float, source: str, finetune_step: int = 0) -> bool:
         """Monotone cache publish, mirrored to the persistent store."""
-        ok = self.cache.publish(key, canon_pl, mk, source=source,
-                                finetune_step=finetune_step,
-                                policy_hash=self.policy_hash)
-        if ok and self.store is not None:
-            self.store.record(key, self.cache.peek(key),
-                              finetune_step=finetune_step)
-            self.store.maybe_compact()
+        with get_tracer().span("serve.publish", cat="serve",
+                               clock=self.clock, tid=self.tid,
+                               source=source):
+            ok = self.cache.publish(key, canon_pl, mk, source=source,
+                                    finetune_step=finetune_step,
+                                    policy_hash=self.policy_hash)
+            if ok and self.store is not None:
+                self.store.record(key, self.cache.peek(key),
+                                  finetune_step=finetune_step)
+                self.store.maybe_compact()
         return ok
 
     def adopt(self, key: Tuple[str, str], entry: CacheEntry) -> bool:
@@ -610,8 +671,14 @@ class PlacementService:
     # -------------------------------------------------------------- stats
     def stats(self) -> Dict[str, Any]:
         """Aggregate counters: ladder counts, cache stats, latency
-        percentiles over completed requests, queue depths."""
-        lats = np.asarray([r.latency for r in self.completed], np.float64)
+        percentiles over completed requests, queue depths.
+
+        Percentiles are computed over final request latencies at call
+        time (not the resolve-time histogram observations) because a
+        cluster router back-dates ``arrival_t`` to the true arrival after
+        a busy worker resolves; both paths share the
+        :func:`latency_summary` implementation.
+        """
         out: Dict[str, Any] = dict(self.counts)
         out.update(self.cache.stats.as_dict())
         out["served"] = len(self.completed)
@@ -619,8 +686,20 @@ class PlacementService:
         out["ft_queue"] = len(self._ft_queue)
         if self.store is not None:
             out["store"] = self.store.stats.as_dict()
-        if lats.size:
-            out["latency_p50_s"] = float(np.percentile(lats, 50))
-            out["latency_p99_s"] = float(np.percentile(lats, 99))
-            out["latency_mean_s"] = float(lats.mean())
+        out.update(latency_summary(r.latency for r in self.completed))
         return out
+
+    def snapshot(self) -> Dict[str, Any]:
+        """Point-in-time metrics snapshot (plain JSON-able dict).
+
+        Refreshes the load/cache gauges and the process-wide jit
+        retrace gauges first, so the exported view is current.
+        """
+        g = self.metrics.gauge("serve_queue_depth",
+                               "unresolved work parked at this worker")
+        g.set(self.queue_depth())
+        self.metrics.gauge("serve_cache_entries",
+                           "live cache lines").set(len(self.cache))
+        jaxprof.export_gauges(self.metrics)
+        jaxprof.export_rss_gauge(self.metrics)
+        return self.metrics.snapshot()

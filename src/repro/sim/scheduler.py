@@ -29,6 +29,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.graph import DataflowGraph
+from repro.obs import jaxprof
+from repro.obs.trace import get_tracer
 from repro.sim.cost_model import node_compute_matrix
 from repro.sim.device import Topology
 
@@ -291,6 +293,11 @@ def _simulate_batch_jit(sg: SimGraph, placements, inv_bw, latency, mem_caps,
                           segment=segment)
 
 
+# one program per (shape, mode) — a compile-count regression here costs
+# ~0.5 s per Env.rewards call at serving sizes, so it is watched
+jaxprof.register("sim.simulate_batch", _simulate_batch_jit)
+
+
 @dataclasses.dataclass(frozen=True)
 class Env:
     """Bound environment: graph + topology, exposing jit-compiled rollout eval.
@@ -334,7 +341,9 @@ class Env:
         Routes through a stable jitted wrapper so repeated calls with the
         same shapes and modes hit the pjit cache instead of re-tracing."""
         st = self.sim_topology
-        return _simulate_batch_jit(self.sg, jnp.asarray(placements),
-                                   st.inv_bw, st.latency, st.mem_caps,
-                                   st.num_devices, self.shaped_reward,
-                                   self.sender_contention, self.segment)
+        with get_tracer().span("sim.rewards", cat="sim",
+                               num_nodes=int(self.sg.compute_t.shape[0])):
+            return _simulate_batch_jit(self.sg, jnp.asarray(placements),
+                                       st.inv_bw, st.latency, st.mem_caps,
+                                       st.num_devices, self.shaped_reward,
+                                       self.sender_contention, self.segment)

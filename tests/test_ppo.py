@@ -50,3 +50,25 @@ def test_per_node_advantage_estimator():
     adv = _per_node_advantage(pl, r, 2, r.copy(), mix=1.0)
     assert adv[0, 0] > 0.5 and adv[1, 0] < -0.5
     np.testing.assert_allclose(adv[:, 1], 0.0, atol=1e-6)
+
+
+def test_ppo_zero_recompiles_after_first_iteration():
+    """Retrace regression pin: iteration 1 traces the sample/update/logp
+    programs; iterations 2..N with the same task must add ZERO new jit
+    programs (deltas, not absolutes — jit caches persist across tests)."""
+    from repro.obs import jaxprof
+
+    g = S.rnnlm(2, time_steps=3)
+    gb = featurize(g, max_deg=8, topo=p100_topology(4))
+    pcfg = PolicyConfig(hidden=32, gnn_layers=2, placer_layers=1, ffn=64,
+                        window=32, max_devices=8)
+    tr = PPOTrainer(pcfg, PPOConfig(num_samples=8, epochs=2,
+                                    canonicalize=False), seed=0)
+    tr.iteration("t", gb, FracEnv(), 4)           # traces everything
+    mon = jaxprof.RetraceMonitor()
+    for _ in range(3):
+        m = tr.iteration("t", gb, FracEnv(), 4)
+        assert m["retraces"] == 0                 # per-iteration metric
+        assert m["iter_s"] > 0
+        assert np.isfinite(m["clip_frac"]) and np.isfinite(m["approx_kl"])
+    assert mon.total_delta() == 0                 # zero new programs total

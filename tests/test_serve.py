@@ -366,3 +366,53 @@ def test_admission_sheds_oversize_at_router():
     assert ac.stats.shed_oversize == 1
     assert ac.stats.shed == 1
     assert ac.stats.as_dict()["shed_oversize"] == 1
+
+
+# --------------------------------------------------------- retrace pinning
+def _flops_scaled(g, factor):
+    """Same topology/size, different content hash: a distinct cache key
+    that lands in the same compiled bucket."""
+    return topo_relabel(f"{g.name}-x{factor}", g.op_type, g.flops * factor,
+                        g.out_bytes, g.mem_bytes, g.out_shape, g.src, g.dst)
+
+
+def test_one_compile_per_bucket_on_warm_replay():
+    """Retrace regression pin: a warm 20-request replay across two serving
+    buckets adds ZERO new jit programs.  Each request is a distinct cache
+    key (flops-scaled variant), so every one runs real batched inference —
+    but the sampler compiles once per (bucket, devices, samples) config,
+    never per graph.  Module-level jit caches persist across tests, so the
+    pin is on deltas, not absolute cache sizes."""
+    from repro.obs import jaxprof
+
+    trainer = _small_trainer()
+    cfg = ServeConfig(max_batch=1, num_samples=2, simulated=True,
+                      finetune_iters=0, seed=0)
+    svc = PlacementService(trainer, cfg, SimulatedClock())
+    g_a = S.rnnlm(2, time_steps=3)        # 72 nodes  -> bucket 128
+    g_b = S.rnnlm(2, time_steps=12)       # 261 nodes -> bucket 512
+    assert bucket_size(g_a.num_nodes) != bucket_size(g_b.num_nodes)
+    topo = p100_topology(4)
+
+    t = [0.0]
+
+    def submit(g):
+        r = svc.submit(g, topo, arrival_t=t[0])
+        t[0] += 1.0
+        svc.drain()
+        return r
+
+    # cold: first request in each bucket compiles at most one program each
+    mon_cold = jaxprof.RetraceMonitor()
+    submit(g_a)
+    submit(g_b)
+    assert mon_cold.delta().get("serve.sample_batch", 0) <= 2
+
+    # warm replay: 20 fresh keys across the two warmed buckets
+    mon = jaxprof.RetraceMonitor()
+    for i in range(10):
+        ra = submit(_flops_scaled(g_a, 1.0 + 0.01 * (i + 1)))
+        rb = submit(_flops_scaled(g_b, 1.0 + 0.01 * (i + 1)))
+        assert ra.source == "zero_shot" and rb.source == "zero_shot"
+    assert svc.counts["zero_shot"] >= 22          # replay ran real inference
+    assert mon.delta() == {}                      # zero new compiles anywhere

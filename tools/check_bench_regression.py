@@ -25,6 +25,14 @@ code change moved the number: re-baseline deliberately with ``--update``
 diff alongside the change that caused it.
 
     python tools/check_bench_regression.py [--dir .] [--update] [--strict]
+
+A second, purely informational mode compares two observability metric
+snapshots (either a raw ``MetricsRegistry.snapshot()`` JSON or a
+``*.metrics.jsonl`` sidecar, whose last ``snapshot`` field is used) and
+prints per-metric deltas — counters as ``before -> after (+delta)``,
+gauges as ``before -> after``:
+
+    python tools/check_bench_regression.py --metrics old.jsonl new.jsonl
 """
 from __future__ import annotations
 
@@ -36,6 +44,9 @@ from typing import Any, Dict, List, Optional, Tuple
 
 DEFAULT_BASELINES = os.path.join(os.path.dirname(__file__), "..",
                                  "benchmarks", "bench_baselines.json")
+
+# the obs helpers live in src/; make the tool runnable without PYTHONPATH
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 
 def lookup(doc: Any, path: str) -> Optional[Any]:
@@ -128,6 +139,39 @@ def run(baselines_path: str, artifact_dir: str, update: bool = False,
     return 0
 
 
+def load_snapshot(path: str) -> Dict[str, Any]:
+    """Load a registry snapshot from a raw snapshot JSON or a
+    ``*.metrics.jsonl`` sidecar (last record with a ``snapshot`` field)."""
+    if path.endswith(".jsonl"):
+        snap = None
+        with open(path) as f:
+            for line in f:
+                rec = json.loads(line)
+                if isinstance(rec.get("snapshot"), dict):
+                    snap = rec["snapshot"]
+        if snap is None:
+            raise ValueError(f"{path}: no record with a 'snapshot' field")
+        return snap
+    with open(path) as f:
+        return json.load(f)
+
+
+def compare_metrics(path_a: str, path_b: str) -> int:
+    """Print per-metric deltas between two snapshots; always returns 0
+    (informational — counter drift is not by itself a regression)."""
+    from repro.obs.metrics import counters_flat
+
+    snap_a, snap_b = load_snapshot(path_a), load_snapshot(path_b)
+    # counters_flat covers both counters and gauges (last-write values)
+    flat_a, flat_b = counters_flat(snap_a), counters_flat(snap_b)
+    for key in sorted(set(flat_a) | set(flat_b)):
+        a, b = flat_a.get(key, 0), flat_b.get(key, 0)
+        delta = b - a
+        print(f"{'=' if delta == 0 else 'D':>2}  {key}: "
+              f"{a:g} -> {b:g} ({delta:+g})")
+    return 0
+
+
 def main() -> None:
     """CLI entry; see module docstring."""
     ap = argparse.ArgumentParser()
@@ -138,7 +182,13 @@ def main() -> None:
                     help="rewrite baselines from the current artifacts")
     ap.add_argument("--strict", action="store_true",
                     help="missing artifacts/metrics fail the check")
+    ap.add_argument("--metrics", nargs=2, metavar=("OLD", "NEW"),
+                    help="compare two obs metric snapshots "
+                         "(.json snapshot or .metrics.jsonl sidecar) "
+                         "and print per-metric deltas")
     args = ap.parse_args()
+    if args.metrics:
+        sys.exit(compare_metrics(*args.metrics))
     sys.exit(run(args.baselines, args.dir, update=args.update,
                  strict=args.strict))
 

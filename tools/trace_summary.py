@@ -1,0 +1,128 @@
+"""Summarise a Chrome trace-event JSON produced by ``repro.obs.trace``.
+
+The observability sidecars (``BENCH_*.trace.json``) are Perfetto-loadable,
+but CI logs and quick terminal triage want a text digest: which spans
+dominated the run, and how the wall clock splits across phases.  This tool
+prints two tables from a trace file:
+
+* **top-k slowest spans** — individual ``ph:"X"`` events ranked by
+  duration, with their category and args, so a single pathological
+  fine-tune or segment decode stands out;
+* **per-category totals** — summed duration, count, and mean per ``cat``
+  (serve / cluster / sim / placer / ppo), the "where did the time go"
+  view across the whole run.
+
+Durations are wall-clock for real services and simulated seconds for
+sections driven by a ``SimulatedClock`` — the trace format does not
+distinguish them, so compare within a category, not across clocks.
+
+    python tools/trace_summary.py BENCH_serve_cluster.trace.json [--top 15]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Any, Dict, List
+
+
+def load_events(path: str) -> List[Dict[str, Any]]:
+    """Read a trace file and return its complete ``ph:"X"`` events."""
+    with open(path) as f:
+        doc = json.load(f)
+    events = doc["traceEvents"] if isinstance(doc, dict) else doc
+    return [e for e in events
+            if e.get("ph") == "X" and isinstance(e.get("dur"), (int, float))]
+
+
+def _fmt_args(args: Dict[str, Any], width: int = 40) -> str:
+    if not args:
+        return ""
+    s = ",".join(f"{k}={v}" for k, v in sorted(args.items()))
+    return s if len(s) <= width else s[:width - 3] + "..."
+
+
+def top_spans(events: List[Dict[str, Any]], k: int) -> List[Dict[str, Any]]:
+    return sorted(events, key=lambda e: e["dur"], reverse=True)[:k]
+
+
+def category_totals(events: List[Dict[str, Any]]) -> Dict[str, Dict[str, float]]:
+    """Aggregate duration by ``cat`` then by span name within it."""
+    out: Dict[str, Dict[str, float]] = {}
+    for e in events:
+        for key in (e.get("cat") or "default", ""):
+            # "" accumulates the grand total row
+            row = out.setdefault(key, {"dur_us": 0.0, "count": 0})
+            row["dur_us"] += e["dur"]
+            row["count"] += 1
+    return out
+
+
+def name_totals(events: List[Dict[str, Any]]) -> Dict[str, Dict[str, float]]:
+    out: Dict[str, Dict[str, float]] = {}
+    for e in events:
+        row = out.setdefault(e.get("name", "?"), {"dur_us": 0.0, "count": 0})
+        row["dur_us"] += e["dur"]
+        row["count"] += 1
+    return out
+
+
+def summarise(path: str, k: int = 10, stream=None) -> Dict[str, Any]:
+    """Print the digest for one trace file; returns it as a dict too."""
+    stream = stream or sys.stdout
+    events = load_events(path)
+    if not events:
+        print(f"{path}: no complete spans", file=stream)
+        return {"events": 0}
+
+    print(f"{path}: {len(events)} spans", file=stream)
+    print(f"\ntop {k} slowest spans:", file=stream)
+    print(f"  {'dur_ms':>10}  {'cat':<10} {'name':<28} args", file=stream)
+    top = top_spans(events, k)
+    for e in top:
+        print(f"  {e['dur'] / 1e3:>10.3f}  {e.get('cat', ''):<10} "
+              f"{e.get('name', '?'):<28} {_fmt_args(e.get('args', {}))}",
+              file=stream)
+
+    cats = category_totals(events)
+    total_us = cats.pop("")["dur_us"]
+    print("\nper-category totals:", file=stream)
+    print(f"  {'cat':<10} {'total_ms':>12} {'count':>8} {'mean_ms':>10} "
+          f"{'share':>7}", file=stream)
+    for cat, row in sorted(cats.items(), key=lambda kv: -kv[1]["dur_us"]):
+        n = int(row["count"])
+        print(f"  {cat:<10} {row['dur_us'] / 1e3:>12.3f} {n:>8} "
+              f"{row['dur_us'] / n / 1e3:>10.3f} "
+              f"{row['dur_us'] / total_us:>6.1%}", file=stream)
+
+    names = name_totals(events)
+    print("\nper-span-name totals:", file=stream)
+    print(f"  {'name':<28} {'total_ms':>12} {'count':>8} {'mean_ms':>10}",
+          file=stream)
+    for name, row in sorted(names.items(), key=lambda kv: -kv[1]["dur_us"]):
+        n = int(row["count"])
+        print(f"  {name:<28} {row['dur_us'] / 1e3:>12.3f} {n:>8} "
+              f"{row['dur_us'] / n / 1e3:>10.3f}", file=stream)
+
+    return {"events": len(events),
+            "total_us": total_us,
+            "top": [{"name": e.get("name"), "cat": e.get("cat"),
+                     "dur_us": e["dur"]} for e in top],
+            "categories": cats}
+
+
+def main(argv: List[str] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Print top-k slowest spans and per-category totals "
+                    "from a Chrome trace-event JSON")
+    ap.add_argument("trace", nargs="+", help="trace file(s) to summarise")
+    ap.add_argument("--top", type=int, default=10,
+                    help="how many slowest spans to list (default 10)")
+    args = ap.parse_args(argv)
+    for path in args.trace:
+        summarise(path, k=args.top)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
