@@ -71,6 +71,11 @@ def main():
     print("[campaign] serve_cluster", flush=True)
     C.cache_section("serve_cluster", serve.run_cluster(quick=False),
                     campaign_grade=True)
+
+    print("[campaign] chaos", flush=True)
+    from benchmarks import chaos
+    C.cache_section("chaos", chaos.run(
+        pretrain_iters=max(iters // 3, 50), full=True), campaign_grade=True)
     print("[campaign] done", flush=True)
 
 

@@ -185,6 +185,24 @@ def main() -> None:
               f"recovered={wr.get('recovered')};"
               f"stale_served={wr.get('bump_stale_served')}")
 
+    _section("Chaos: device failures, migration-aware recovery, rescale")
+    if not args.skip_rl:
+        from benchmarks import chaos
+        chaos.run(pretrain_iters=12 if quick else 80,
+                  full=not quick)      # prints chaos.* CSV lines itself
+    if "chaos" in cached:
+        ch = cached["chaos"]
+        hl = ch.get("headline", {})
+        print(f"chaos.campaign.migration_bytes_ratio,"
+              f"{hl.get('migration_bytes_ratio', float('nan')):.3f},"
+              f"bytes_ok={hl.get('aware_beats_scratch_bytes')};"
+              f"mk_ok={hl.get('recovery_within_5pct')};"
+              f"lat={hl.get('replan_latency_mean_s', float('nan')):.2f}s")
+        sv = ch.get("serve", {})
+        print(f"chaos.campaign.stale_served,{sv.get('stale_served', -1)},"
+              f"replaced={sv.get('fleet_replaced')};"
+              f"rehomed={sv.get('rehomed')}")
+
     _section("Roofline: dry-run terms per (arch x shape x mesh)")
     try:
         from benchmarks import roofline

@@ -25,19 +25,68 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 
 def reshard_tree(tree: Any, specs: Any, mesh: Mesh) -> Any:
-    """Place logical (host) arrays onto ``mesh`` according to ``specs``."""
+    """Place logical (host) arrays onto ``mesh`` according to ``specs``.
+
+    Non-array leaves (None, python scalars, step counters) pass through
+    untouched; a missing/None spec means replicate; a spec longer than
+    the leaf's rank (e.g. a scalar leaf under a tree-wide dp spec) is
+    trimmed rather than crashing NamedSharding."""
 
     def place(x, spec):
-        if not hasattr(x, "shape") or x is None:
+        if x is None or not hasattr(x, "shape"):
             return x
-        sh = NamedSharding(mesh, spec if isinstance(spec, PartitionSpec)
-                           else PartitionSpec())
+        spec = spec if isinstance(spec, PartitionSpec) else PartitionSpec()
+        if len(tuple(spec)) > np.ndim(x):
+            spec = PartitionSpec(*tuple(spec)[:np.ndim(x)])
+        sh = NamedSharding(mesh, spec)
         return jax.device_put(np.asarray(x), sh)
 
     return jax.tree_util.tree_map(
         place, tree, specs,
         is_leaf=lambda x: isinstance(x, PartitionSpec) or not isinstance(
             x, (dict, list, tuple)))
+
+
+def adapt_batch_layout(state: Any, old_dp: int, new_dp: int) -> Any:
+    """Re-lay out per-replica batch state for a new data-parallel width.
+
+    The only shape-coupled state in this framework is whatever carries a
+    leading replica axis (per-replica RNG folds, running batch stats):
+    leaves whose leading dimension equals ``old_dp`` are re-laid out,
+    everything else passes through untouched.
+
+    * **grow** (``new_dp`` divisible by ``old_dp``): each replica row is
+      repeated ``new_dp // old_dp`` times — a freshly split data shard
+      starts from its parent replica's state;
+    * **shrink** (``old_dp`` divisible by ``new_dp``): each group of
+      ``old_dp // new_dp`` consecutive rows collapses to its first — the
+      canonical survivor of the merged shards.
+
+    ``grow(k)`` then ``shrink(k)`` is a bit-exact identity (pinned by
+    ``tests/test_elastic_straggler.py``), which is what makes a
+    256→512→256 capacity blip lossless.  Non-divisible widths raise
+    ValueError.
+    """
+    old_dp, new_dp = int(old_dp), int(new_dp)
+    if old_dp < 1 or new_dp < 1:
+        raise ValueError(f"replica counts must be >= 1: {old_dp}->{new_dp}")
+    if new_dp % old_dp and old_dp % new_dp:
+        raise ValueError(
+            f"cannot adapt batch layout {old_dp}->{new_dp}: one width "
+            "must divide the other")
+
+    def adapt(x):
+        if x is None or not hasattr(x, "shape") or np.ndim(x) == 0:
+            return x
+        if x.shape[0] != old_dp or new_dp == old_dp:
+            return x
+        arr = np.asarray(x)
+        if new_dp % old_dp == 0:
+            return np.repeat(arr, new_dp // old_dp, axis=0)
+        k = old_dp // new_dp
+        return arr.reshape((new_dp, k) + arr.shape[1:])[:, 0]
+
+    return jax.tree_util.tree_map(adapt, state)
 
 
 def validate_divisibility(tree: Any, specs: Any, mesh: Mesh) -> list:

@@ -111,16 +111,21 @@ def featurize(g: DataflowGraph, max_deg: int = 8,
     if topo is not None:
         from repro.sim.cost_model import node_compute_matrix
         # fractions against the tightest cap / best device: identical to
-        # the historical single-spec fractions on uniform pools
-        mem_frac[:n] = g.mem_bytes / topo.mem_caps.min()
+        # the historical single-spec fractions on uniform pools.  The
+        # tightest cap is the tightest POSITIVE cap — a failed device
+        # (sim.chaos: capacity 0) must not zero the denominator; it gets
+        # dev_mem_cap 0 below, so the memory-aware decode closes it.
+        caps = topo.mem_caps
+        alive = caps[caps > 0]
+        tight = alive.min() if alive.size else 1.0
+        mem_frac[:n] = g.mem_bytes / tight
         ct = node_compute_matrix(g, topo).min(axis=1)
         comp_frac[:n] = ct / max(ct.sum(), 1e-12)
         dev_feats = device_features(topo)
         # per-device caps in mem_frac units: the decoder's running
         # accumulators compare directly against these (memory-aware
         # masked decode, PolicyConfig.mask_full_devices)
-        dev_mem_cap = (topo.mem_caps / topo.mem_caps.min()).astype(
-            np.float32)
+        dev_mem_cap = (caps / tight).astype(np.float32)
     return GraphBatch(jnp.asarray(op), jnp.asarray(f), jnp.asarray(nbr_idx),
                       jnp.asarray(nbr_mask), jnp.asarray(node_mask),
                       jnp.asarray(mem_frac), jnp.asarray(comp_frac),

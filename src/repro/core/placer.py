@@ -28,6 +28,17 @@ Design notes mapped to the paper:
   decoder can rank devices by speed/memory/connectivity per node.  On a
   uniform pool all rows are equal, the term shifts every valid device's
   logit identically, and the distribution reduces to the homogeneous one.
+* **Incumbent-conditioned decode** (migration-aware re-placement): an
+  optional additive per-node logit bias ``incumbent_bias`` [N, Dmax]
+  tilts each node toward the device its state already lives on, weighted
+  by the node's memory footprint — the decoder trades makespan against
+  data movement when re-placing after a fleet change.  ``None`` (the
+  default) is bit-identical to the unbiased decode: the bias is threaded
+  as a pytree leaf-or-None through every path, so the off-path traces
+  the exact same program as before.  Applied in the fixed order
+  ``_head_logits → + bias → _mask_full_devices → / temperature`` in BOTH
+  the teacher-forced and AR paths, so PPO ratios stay exact and a full
+  device can never be resurrected by the bias.
 
 The teacher-forced pass and the sampling scan share all parameters and
 masks, so logp(sampled placement) is exact for PPO.
@@ -214,14 +225,17 @@ def apply_tf(params: Dict[str, Any], h: jnp.ndarray, node_mask: jnp.ndarray,
              window: int = 256, heads: int = 4, num_devices: int = 4,
              use_attention: bool = True,
              dev_mem_cap: Optional[jnp.ndarray] = None,
-             mask_full: bool = False) -> jnp.ndarray:
+             mask_full: bool = False,
+             incumbent_bias: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """Parallel logits for given placements (PPO ratio path).
 
     h: [N, H] (topo order); placements: [N] int32.  Returns device logits
     [N, Dmax].  Compiled shapes scale with N; for paper-scale graphs use
     :func:`apply_tf_segmented`, which is bit-identical.  ``mask_full``
     applies the memory-aware decode mask (must match the sampling side
-    so PPO ratios stay exact).
+    so PPO ratios stay exact).  ``incumbent_bias`` [N, Dmax] (or None)
+    is added to the head logits before the mask — same order as the AR
+    paths, so biased ratios stay exact too.
     """
     n, hid = h.shape
     prev, ctx, mem_before = _tf_ctx(params, placements, node_mask,
@@ -235,6 +249,8 @@ def apply_tf(params: Dict[str, Any], h: jnp.ndarray, node_mask: jnp.ndarray,
         x = _ffn(lp, x, c)
     logits = _head_logits(params, x, c, num_devices,
                           _dev_keys(params, dev_feats))
+    if incumbent_bias is not None:
+        logits = logits + incumbent_bias
     cap = _cap_vector(params, dev_mem_cap) if mask_full else None
     if cap is not None:
         logits = _mask_full_devices(logits, mem_before, mem_frac, cap,
@@ -245,14 +261,16 @@ def apply_tf(params: Dict[str, Any], h: jnp.ndarray, node_mask: jnp.ndarray,
 # --------------------------------------------------- segmented TF decode
 @partial(jax.jit, static_argnames=("heads", "num_devices", "use_attention"))
 def _tf_segment(params, x, kmem, vmem, node_mask, base, c, dev_keys,
-                mem_before, mem_frac, cap, *,
+                mem_before, mem_frac, cap, bias, *,
                 heads: int, num_devices: int, use_attention: bool):
     """One teacher-forced segment with Transformer-XL-style memory.
 
     x: [S, H] decoder inputs; kmem/vmem: [L, W-1, heads, hd] keys/values
     of the previous W-1 positions per layer; base: global index of x[0];
     mem_before/mem_frac/cap: the segment's slice of the memory-aware
-    decode mask inputs (cap None disables masking).
+    decode mask inputs (cap None disables masking); bias: the segment's
+    slice of the incumbent bias (None disables it, tracing the exact
+    pre-bias program).
     Returns (logits [S, Dmax], new kmem, new vmem).  The W-wide causal
     band is gathered from memory+segment exactly as ``_banded_attention``
     gathers it from the full sequence, so values are bit-identical.
@@ -283,6 +301,8 @@ def _tf_segment(params, x, kmem, vmem, node_mask, base, c, dev_keys,
             new_v.append(vmem[li])
         x = _ffn(lp, x, c)
     logits = _head_logits(params, x, c, num_devices, dev_keys)
+    if bias is not None:
+        logits = logits + bias
     if cap is not None:
         logits = _mask_full_devices(logits, mem_before, mem_frac, cap,
                                     num_devices)
@@ -298,7 +318,9 @@ def apply_tf_segmented(params: Dict[str, Any], h: jnp.ndarray,
                        heads: int = 4, num_devices: int = 4,
                        use_attention: bool = True,
                        dev_mem_cap: Optional[jnp.ndarray] = None,
-                       mask_full: bool = False) -> jnp.ndarray:
+                       mask_full: bool = False,
+                       incumbent_bias: Optional[jnp.ndarray] = None
+                       ) -> jnp.ndarray:
     """Teacher-forced logits via fixed-size segments (paper's scalable
     segmented attention): compiled shapes are per-(segment, window), so a
     graph of ANY length reuses one compiled step — a 50k-node GNMT never
@@ -319,6 +341,8 @@ def apply_tf_segmented(params: Dict[str, Any], h: jnp.ndarray,
         placements = jnp.pad(placements, (0, pad))
         mem_frac = jnp.pad(mem_frac, (0, pad))
         comp_frac = jnp.pad(comp_frac, (0, pad))
+        if incumbent_bias is not None:
+            incumbent_bias = jnp.pad(incumbent_bias, ((0, pad), (0, 0)))
     prev, ctx, mem_before = _tf_ctx(params, placements, node_mask,
                                     mem_frac, comp_frac)
     x = _inputs(params, h, prev, ctx)
@@ -340,7 +364,9 @@ def apply_tf_segmented(params: Dict[str, Any], h: jnp.ndarray,
                 params, x[sl], jax.lax.stop_gradient(kmem),
                 jax.lax.stop_gradient(vmem), node_mask[sl],
                 jnp.int32(s0), c, dev_keys, mem_before[sl], mem_frac[sl],
-                cap, heads=heads, num_devices=num_devices,
+                cap,
+                None if incumbent_bias is None else incumbent_bias[sl],
+                heads=heads, num_devices=num_devices,
                 use_attention=use_attention)
         outs.append(logits)
     return jnp.concatenate(outs)[:n]
@@ -354,16 +380,19 @@ def _ar_step_fn(params, c, dev_keys, temperature, *, heads: int,
 
     Carry: (kcache [L,w,heads,hd], vcache, poscache [w], prev_dev,
     mem_used [Dmax], comp_used [Dmax]); xs: (h_i, i, key_i, mem_frac_i,
-    comp_frac_i).  The ring-buffer width ``w`` is read off the carry.
-    ``cap`` [Dmax] enables the memory-aware decode mask (the carried
-    ``mem_used`` accumulator is exactly the TF pass's exclusive cumsum,
-    so sampling and ratio evaluation mask identically).
+    comp_frac_i, bias_i).  The ring-buffer width ``w`` is read off the
+    carry.  ``cap`` [Dmax] enables the memory-aware decode mask (the
+    carried ``mem_used`` accumulator is exactly the TF pass's exclusive
+    cumsum, so sampling and ratio evaluation mask identically).
+    ``bias_i`` is the node's incumbent-bias row [Dmax], or None — None
+    has no pytree leaves, so the unbiased scan is the same program as
+    before the bias existed.
     """
     dmax = params["head"]["b"].shape[0]
 
     def step(carry, xs):
         kc, vc, pc, prev_dev, mem_used, comp_used = carry
-        hi, i, ki, mfi, cfi = xs                # [H], idx, rng key, scalars
+        hi, i, ki, mfi, cfi, bi = xs            # [H], idx, rng key, scalars
         hid = hi.shape[0]
         hd = hid // heads
         w = pc.shape[0]
@@ -391,6 +420,8 @@ def _ar_step_fn(params, c, dev_keys, temperature, *, heads: int,
                 new_vc.append(vc[li])
             x = _ffn(lp, x[None], c)[0]
         logits = _head_logits(params, x[None], c, num_devices, dev_keys)[0]
+        if bi is not None:
+            logits = logits + bi
         if cap is not None:
             logits = _mask_full_devices(logits, mem_used, mfi, cap,
                                         num_devices)
@@ -425,7 +456,8 @@ def sample_ar(params: Dict[str, Any], h: jnp.ndarray, node_mask: jnp.ndarray,
               window: int = 256, heads: int = 4, num_devices: int = 4,
               use_attention: bool = True, temperature: float = 1.0,
               dev_mem_cap: Optional[jnp.ndarray] = None,
-              mask_full: bool = False
+              mask_full: bool = False,
+              incumbent_bias: Optional[jnp.ndarray] = None
               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Exact autoregressive sampling; returns (placement [N], logp [N]).
 
@@ -448,21 +480,23 @@ def sample_ar(params: Dict[str, Any], h: jnp.ndarray, node_mask: jnp.ndarray,
     keys = jax.random.split(key, n)
     _, (devs, lps) = jax.lax.scan(
         step, _ar_carry0(params, w=min(window, n), heads=heads, hid=hid),
-        (h, jnp.arange(n), keys, mem_frac, comp_frac))
+        (h, jnp.arange(n), keys, mem_frac, comp_frac, incumbent_bias))
     return devs, lps * node_mask
 
 
 @partial(jax.jit, static_argnames=("heads", "num_devices", "use_attention"))
 def _ar_segment_scan(params, h_seg, idx_seg, keys_seg, mf_seg, cf_seg,
-                     carry, c, dev_keys, temperature, cap, *, heads: int,
-                     num_devices: int, use_attention: bool):
+                     bias_seg, carry, c, dev_keys, temperature, cap, *,
+                     heads: int, num_devices: int, use_attention: bool):
     """Scan the shared AR step over one segment (the ONE compiled decode
-    program a segmented sampler reuses for every segment of every graph)."""
+    program a segmented sampler reuses for every segment of every graph).
+    ``bias_seg`` (incumbent bias slice, or None) is leaf-less when None,
+    so the unbiased program is exactly the historical one."""
     step = _ar_step_fn(params, c, dev_keys, temperature, heads=heads,
                        num_devices=num_devices, use_attention=use_attention,
                        cap=cap)
     return jax.lax.scan(step, carry,
-                        (h_seg, idx_seg, keys_seg, mf_seg, cf_seg))
+                        (h_seg, idx_seg, keys_seg, mf_seg, cf_seg, bias_seg))
 
 
 # "one program per segment config": every segment of every graph must hit
@@ -479,7 +513,8 @@ def sample_ar_segmented(params: Dict[str, Any], h: jnp.ndarray,
                         heads: int = 4, num_devices: int = 4,
                         use_attention: bool = True, temperature: float = 1.0,
                         dev_mem_cap: Optional[jnp.ndarray] = None,
-                        mask_full: bool = False
+                        mask_full: bool = False,
+                        incumbent_bias: Optional[jnp.ndarray] = None
                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Segment-native AR sampling: a Python loop over fixed-size segments,
     each a single compiled scan of the SAME step function as
@@ -499,6 +534,8 @@ def sample_ar_segmented(params: Dict[str, Any], h: jnp.ndarray,
         comp_frac = jnp.pad(comp_frac, (0, pad))
         keys = jnp.concatenate(
             [keys, jnp.broadcast_to(keys[-1:], (pad,) + keys.shape[1:])])
+        if incumbent_bias is not None:
+            incumbent_bias = jnp.pad(incumbent_bias, ((0, pad), (0, 0)))
     dev_keys = _dev_keys(params, dev_feats)
     cap = _cap_vector(params, dev_mem_cap) if mask_full else None
     carry = _ar_carry0(params, w=window, heads=heads, hid=hid)
@@ -512,7 +549,9 @@ def sample_ar_segmented(params: Dict[str, Any], h: jnp.ndarray,
                          segment=segment):
             carry, (d_seg, lp_seg) = _ar_segment_scan(
                 params, h[sl], idx[sl], keys[sl], mem_frac[sl],
-                comp_frac[sl], carry, c, dev_keys, temp, cap, heads=heads,
+                comp_frac[sl],
+                None if incumbent_bias is None else incumbent_bias[sl],
+                carry, c, dev_keys, temp, cap, heads=heads,
                 num_devices=num_devices, use_attention=use_attention)
         devs.append(d_seg)
         lps.append(lp_seg)

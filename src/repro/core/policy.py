@@ -76,6 +76,30 @@ def _decode_fn(cfg: PolicyConfig, gb: GraphBatch, num_devices: int):
     return placer.sample_ar, kwargs
 
 
+def incumbent_bias(cfg: PolicyConfig, gb: GraphBatch,
+                   incumbent: Optional[Any],
+                   migration_bias: float) -> Optional[jnp.ndarray]:
+    """[N, Dmax] additive decode bias toward an incumbent placement.
+
+    Each node's incumbent-device logit is lifted by ``migration_bias *
+    mem_frac`` — heavy nodes resist moving proportionally to the bytes a
+    move would ship, which is exactly the migration-aware re-placement
+    objective (minimize recovery makespan + data movement).  ``incumbent``
+    entries of ``-1`` (no incumbent: a new node, or padding) get a zero
+    row; ``None`` incumbent or zero strength returns ``None`` — the
+    decode paths then trace the exact unbiased program.
+    """
+    if incumbent is None or migration_bias == 0.0:
+        return None
+    inc = jnp.asarray(incumbent, jnp.int32)
+    n = gb.mem_frac.shape[0]
+    if inc.shape[0] < n:        # pad to the featurized length with "none"
+        inc = jnp.concatenate(
+            [inc, jnp.full((n - inc.shape[0],), -1, jnp.int32)])
+    oh = jax.nn.one_hot(inc[:n], cfg.max_devices)
+    return jnp.float32(migration_bias) * gb.mem_frac[:, None] * oh
+
+
 def _embed(params, cfg: PolicyConfig, gb: GraphBatch):
     h = gnn.apply(params["gnn"], gb, agg_impl=cfg.agg_impl,
                   chunk=cfg.gnn_chunk)
@@ -87,19 +111,27 @@ def _embed(params, cfg: PolicyConfig, gb: GraphBatch):
 
 
 def sample(params, cfg: PolicyConfig, gb: GraphBatch, num_devices: int,
-           key, num_samples: int, temperature: float = 1.0
+           key, num_samples: int, temperature: float = 1.0,
+           incumbent=None, migration_bias: float = 0.0
            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Returns (placements i32[M, N], per-node logp f32[M, N]).
 
     With ``cfg.segment`` set the AR decode runs segment-by-segment
     (callers must NOT wrap this in an outer jit — the segmented path
-    manages its own per-segment compiled programs)."""
+    manages its own per-segment compiled programs).
+
+    ``incumbent`` (i32[<=N], -1 = no incumbent) with ``migration_bias``
+    > 0 turns on the incumbent-conditioned decode: see
+    :func:`incumbent_bias`.  The defaults are bit-identical to the
+    unconditioned sampler."""
     h, c = _embed(params, cfg, gb)
     keys = jax.random.split(key, num_samples)
     fn, kwargs = _decode_fn(cfg, gb, num_devices)
+    bias = incumbent_bias(cfg, gb, incumbent, migration_bias)
     devs, lps = jax.vmap(lambda k: fn(
         params["placer"], h, gb.node_mask, c, k, gb.mem_frac, gb.comp_frac,
-        gb.dev_feats, temperature=temperature, **kwargs))(keys)
+        gb.dev_feats, temperature=temperature, incumbent_bias=bias,
+        **kwargs))(keys)
     return devs.astype(jnp.int32), lps
 
 
@@ -131,18 +163,24 @@ def sample_batch(params, cfg: PolicyConfig, sgb: GraphBatch,
 
 
 def logp_and_entropy(params, cfg: PolicyConfig, gb: GraphBatch,
-                     num_devices: int, placements: jnp.ndarray
+                     num_devices: int, placements: jnp.ndarray,
+                     incumbent=None, migration_bias: float = 0.0
                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Teacher-forced per-node logp of placements [M,N] + mean entropy."""
+    """Teacher-forced per-node logp of placements [M,N] + mean entropy.
+
+    ``incumbent``/``migration_bias`` must match the sampling call (both
+    default off) so biased PPO ratios stay exact."""
     h, c = _embed(params, cfg, gb)
     # the shared decode kwargs already carry segment= for segmented cfgs
     kwargs = _decode_fn(cfg, gb, num_devices)[1]
     tf_fn = (placer.apply_tf_segmented if cfg.segment is not None
              else placer.apply_tf)
+    bias = incumbent_bias(cfg, gb, incumbent, migration_bias)
 
     def one(pl):
         lg = tf_fn(params["placer"], h, gb.node_mask, pl, c, gb.mem_frac,
-                   gb.comp_frac, gb.dev_feats, **kwargs)
+                   gb.comp_frac, gb.dev_feats, incumbent_bias=bias,
+                   **kwargs)
         logp = jax.nn.log_softmax(lg, axis=-1)
         node_lp = jnp.take_along_axis(logp, pl[:, None], axis=-1)[:, 0]
         p = jnp.exp(logp)

@@ -11,7 +11,10 @@ fingerprint, cross-shard hits forwarded, admission control shedding
 overload to a degraded baseline fast path.  ``serve.persist`` backs every
 shard with an append-only, provenance-versioned on-disk store so restarts
 and rescales warm-start from disk and policy bumps invalidate stale
-entries.  See ``docs/serving.md`` for the operator guide and
+entries.  Fleet changes (device failures, degraded links — see
+``sim.chaos``) are provenance too: they re-key the tier automatically,
+and ``serve.replan`` re-places hot graphs migration-aware (``docs/
+chaos.md``).  See ``docs/serving.md`` for the operator guide and
 ``docs/architecture.md`` for how the tier fits the whole reproduction.
 """
 from repro.serve.fingerprint import (cache_key, canonical_order,  # noqa: F401
@@ -30,3 +33,6 @@ from repro.serve.service import (PlacementService, Rejection,  # noqa: F401
                                  SimulatedClock, WallClock)
 from repro.serve.cluster import (ClusterConfig, HashRing,  # noqa: F401
                                  PlacementCluster)
+from repro.serve.replan import (ReplanConfig, ReplanResult,  # noqa: F401
+                                make_replace_fn, make_scratch_fn,
+                                repair_placement, replan)

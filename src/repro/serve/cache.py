@@ -160,6 +160,16 @@ class PlacementCache:
         self.stats.publishes += 1
         return True
 
+    def invalidate(self, key: Key) -> bool:
+        """Drop ``key`` outright (no eviction/stat side effects).
+
+        Provenance invalidation, not capacity pressure: the serving tier
+        calls this when a fleet change retires a topology fingerprint —
+        the line is not *cold*, it is *wrong*, so it must not linger as
+        a sibling-forwardable entry.  Returns True iff the key existed.
+        """
+        return self._entries.pop(key, None) is not None
+
     # ------------------------------------------------------------evict
     def _evict_one(self) -> None:
         if self.policy == "lru":

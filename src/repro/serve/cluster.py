@@ -131,37 +131,47 @@ class PlacementCluster:
         self.cfg = config
         self.trainer = trainer
         self.policy_hash = policy_hash(trainer.state.params)
+        self._store_root = store_root    # rescale() builds new shards here
         self.ring = HashRing(config.num_workers, config.virtual_nodes)
         # router-level registry: routing/admission counters live here;
         # each worker keeps its own (merged by snapshot())
         self.metrics = MetricsRegistry()
         self.admission = AdmissionController(config.admission,
                                              registry=self.metrics)
-        self.workers: List[PlacementService] = []
-        for w in range(config.num_workers):
-            scfg = dataclasses.replace(config.serve, simulated=True,
-                                       seed=config.serve.seed + 1009 * w)
-            store = (PersistentStore(
-                store_root, self.policy_hash, worker_tag=f"w{w}",
-                sender_contention=scfg.sender_contention)
-                if store_root is not None else None)
-            svc = PlacementService(
-                trainer, scfg, SimulatedClock(), store=store,
-                preload=lambda key, w=w: self.ring.route(key[0]) == w)
-            svc.tid = w + 1      # trace lanes: router=0, workers=1..N
-            self.workers.append(svc)
+        self.workers: List[PlacementService] = [
+            self._make_worker(w, self.ring)
+            for w in range(config.num_workers)]
         self.shed_completed: List[Request] = []
+        self._retired: List[PlacementService] = []   # shrunk-away workers
         self.counts = CounterDict(
             self.metrics.counter("cluster_router_total",
                                  "router event counts", ("event",)),
-            initial=("forwarded", "shed"))
+            initial=("forwarded", "shed", "fleet_events",
+                     "fleet_invalidated", "fleet_replaced", "rescales",
+                     "rehomed"))
         self._next_shed_id = -1          # negative ids: router-made answers
         self._keys_per_worker: List[Set[Key]] = [
             set() for _ in range(config.num_workers)]
         # router keys must match worker keys, so the router's digests
-        # carry the tier's contention mode too
+        # carry the tier's communication modes too
         self._topo_fp = FP.TopologyFingerprinter(
-            config.serve.sender_contention)
+            **config.serve.sim.comm_mode_kwargs())
+
+    def _make_worker(self, w: int, ring: HashRing) -> PlacementService:
+        """Build shard ``w``: per-worker seed, simulated clock, and (with
+        a store root) a shared-root persistent store warmed with exactly
+        the keys ``ring`` routes to it."""
+        scfg = dataclasses.replace(self.cfg.serve, simulated=True,
+                                   seed=self.cfg.serve.seed + 1009 * w)
+        store = (PersistentStore(
+            self._store_root, self.policy_hash, worker_tag=f"w{w}",
+            mode_bits=scfg.mode_bits)
+            if self._store_root is not None else None)
+        svc = PlacementService(
+            self.trainer, scfg, SimulatedClock(), store=store,
+            preload=lambda key, w=w, r=ring: r.route(key[0]) == w)
+        svc.tid = w + 1          # trace lanes: router=0, workers=1..N
+        return svc
 
     # ------------------------------------------------------------ routing
     def home(self, g) -> int:
@@ -255,11 +265,138 @@ class PlacementCluster:
         for svc in self.workers:
             svc.shutdown()
 
+    # ------------------------------------------------------- fleet change
+    def on_fleet_change(self, old_topo: Topology, new_topo: Topology,
+                        failed=(), rcfg=None) -> Dict[str, Any]:
+        """React to a fleet change (failure / degradation / recovery).
+
+        Failure modes are provenance: the new fleet has a different
+        topology fingerprint, so every existing key simply stops
+        matching — nothing stale can ever be served.  This hook does the
+        two things re-keying alone cannot:
+
+        1. **invalidate** every cache line (and warm-start context) keyed
+           under the old fleet's fingerprint on every shard — those
+           placements may target dead devices and must not linger as
+           sibling-forwardable entries;
+        2. **re-place hot graphs incrementally**: each graph served under
+           the old fleet is re-planned with its cached placement as the
+           *incumbent* (``serve.replan``: migration-aware, so recovery
+           moves minimal bytes) and the result is published under the new
+           fingerprint on the graph's home shard — repeat traffic on the
+           new fleet hits a warm cache instead of re-paying inference.
+
+        Args:
+            old_topo / new_topo: the fleet before and after the event.
+            failed: device ids that died (forced-migration accounting).
+            rcfg: optional :class:`~repro.serve.replan.ReplanConfig`.
+
+        Returns a summary dict (counts + per-graph replan sources).
+        """
+        from repro.serve.replan import ReplanConfig, replan
+        rcfg = rcfg or ReplanConfig(num_samples=4)
+        old_fp = self._topo_fp(old_topo)
+        new_fp = self._topo_fp(new_topo)
+        self.counts["fleet_events"] += 1
+        invalidated = replaced = 0
+        sources: Dict[str, str] = {}
+        with get_tracer().span("cluster.fleet_change", cat="cluster",
+                               tid=0, old_fp=old_fp[:8], new_fp=new_fp[:8]):
+            # hot graphs: the latest resolved request per graph under the
+            # old fleet carries the graph object, canonical order, and the
+            # incumbent placement (in graph node order)
+            hot: Dict[str, Request] = {}
+            for svc in self.workers:
+                for r in svc.completed:
+                    if (r.key[1] == old_fp and r.placement is not None
+                            and r.source != "shed"):
+                        hot[r.key[0]] = r
+            for w, svc in enumerate(self.workers):
+                stale = [k for k, _ in svc.cache.items() if k[1] == old_fp]
+                for k in stale:
+                    svc.cache.invalidate(k)
+                    svc._ctx.pop(k, None)
+                    self._keys_per_worker[w].discard(k)
+                    invalidated += 1
+            params = self.trainer.state.params
+            for gfp, r in sorted(hot.items()):
+                res = replan(params, self.trainer.pcfg, r.graph, new_topo,
+                             r.placement, failed,
+                             sim=self.cfg.serve.sim, rcfg=rcfg)
+                sources[gfp] = res.source
+                if not res.valid:
+                    continue
+                w = self.ring.route(gfp)
+                new_key = (gfp, new_fp)
+                if self.workers[w]._publish(
+                        new_key, FP.to_canonical(res.placement, r.order),
+                        res.makespan, source="replanned"):
+                    self._keys_per_worker[w].add(new_key)
+                    replaced += 1
+        self.counts["fleet_invalidated"] += invalidated
+        self.counts["fleet_replaced"] += replaced
+        return {"old_fp": old_fp, "new_fp": new_fp,
+                "invalidated": invalidated, "replaced": replaced,
+                "hot_graphs": len(hot), "sources": sources}
+
+    def rescale(self, new_num_workers: int) -> Dict[str, Any]:
+        """Resize the worker fleet in place; warm state follows the ring.
+
+        A new consistent-hash ring is built for the new worker count;
+        cache entries whose home moved are re-homed via the monotone
+        ``adopt`` path (persisted at the new home too), grown-in workers
+        warm-start from the shared store root with the new routing, and
+        shrunk-away workers drain, checkpoint, and retire (their resolved
+        requests stay visible through :meth:`completed`).  Only the keys
+        the ring actually moved change shard — ~K/N of them — which is
+        the property ``tests/test_cluster.py`` pins.
+
+        Returns a summary dict (moved-key count etc.).
+        """
+        assert new_num_workers >= 1
+        old_n = len(self.workers)
+        new_ring = HashRing(new_num_workers, self.cfg.virtual_nodes)
+        self.counts["rescales"] += 1
+        moved = 0
+        with get_tracer().span("cluster.rescale", cat="cluster", tid=0,
+                               old=old_n, new=new_num_workers):
+            for w in range(old_n, new_num_workers):     # grow
+                self.workers.append(self._make_worker(w, new_ring))
+                self._keys_per_worker.append(set())
+            # re-home every cached entry whose home shard moved
+            for w in range(old_n):
+                svc = self.workers[w]
+                svc.drain()
+                for key, entry in list(svc.cache.items()):
+                    nw = new_ring.route(key[0])
+                    if nw == w and nw < new_num_workers:
+                        continue
+                    tgt = min(nw, new_num_workers - 1)
+                    if tgt != w:
+                        self.workers[tgt].adopt(key, entry)
+                        svc.cache.invalidate(key)
+                        self._keys_per_worker[w].discard(key)
+                        self._keys_per_worker[tgt].add(key)
+                        moved += 1
+            if new_num_workers < old_n:                 # shrink
+                for svc in self.workers[new_num_workers:]:
+                    svc.shutdown()
+                    self._retired.append(svc)
+                del self.workers[new_num_workers:]
+                del self._keys_per_worker[new_num_workers:]
+        self.ring = new_ring
+        self.cfg = dataclasses.replace(self.cfg,
+                                       num_workers=new_num_workers)
+        self.counts["rehomed"] += moved
+        return {"old_workers": old_n, "new_workers": new_num_workers,
+                "rehomed": moved}
+
     # -------------------------------------------------------------- stats
     def completed(self) -> List[Request]:
-        """Every resolved request: worker-served plus router-shed."""
+        """Every resolved request: worker-served plus router-shed, plus
+        requests served by since-retired (rescaled-away) workers."""
         out: List[Request] = []
-        for svc in self.workers:
+        for svc in self.workers + self._retired:
             out.extend(svc.completed)
         out.extend(self.shed_completed)
         return out
@@ -284,6 +421,13 @@ class PlacementCluster:
         out.update(self.admission.stats.as_dict())
         agg: Dict[str, float] = {}
         per_worker = []
+        for svc in self._retired:       # rescaled-away shards still count
+            st = svc.stats()
+            for k in ("cache", "disk", "zero_shot", "baseline", "finetunes",
+                      "finetune_published", "forward_adopted",
+                      "stale_served", "hits", "misses", "evictions",
+                      "publishes", "served"):
+                agg[k] = agg.get(k, 0) + st.get(k, 0)
         for w, svc in enumerate(self.workers):
             st = svc.stats()
             for k in ("cache", "disk", "zero_shot", "baseline", "finetunes",
@@ -316,4 +460,5 @@ class PlacementCluster:
         artifact whose counters the legacy ``stats()`` values are checked
         against bit-for-bit (see ``benchmarks/serve.py``)."""
         return merge_snapshots([self.metrics.snapshot()] +
-                               [svc.snapshot() for svc in self.workers])
+                               [svc.snapshot()
+                                for svc in self.workers + self._retired])

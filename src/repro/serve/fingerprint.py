@@ -162,18 +162,27 @@ def fingerprint_and_order(g: DataflowGraph, rounds: int = _WL_ROUNDS
 
 
 def topology_fingerprint(topo: Topology, *,
-                         sender_contention: bool = False) -> str:
+                         sender_contention: bool = False,
+                         receiver_contention: bool = False,
+                         jittered_bandwidth: bool = False,
+                         jitter_amp: float = 0.25,
+                         jitter_seed: int = 0) -> str:
     """Hex digest of the exact device pool (order-sensitive by design).
 
     Raw float64 bytes are hashed — inf (free same-device links) has its
     own bit pattern, so a free link never aliases a 0 B/s dead link.
 
-    ``sender_contention`` folds the simulator's contention mode into the
-    digest: a placement measured with contended send ports answers a
+    The simulator's communication modes fold into the digest — **failure
+    modes are provenance**: a placement measured with contended send
+    ports, contended receive ports, or jittered links answers a
     *different question* than one measured without, so the two must never
-    share a cache line or persisted record.  Contention-off hashes
-    exactly the historical bytes — every pre-existing digest (and the
-    provenance of every persisted placement) is unchanged.
+    share a cache line or persisted record.  ``jitter_amp``/``jitter_seed``
+    are digested only when ``jittered_bandwidth`` is on (a different
+    seed is a different fleet).  All-modes-off hashes exactly the
+    historical bytes — every pre-existing digest (and the provenance of
+    every persisted placement) is unchanged.  Likewise a degraded or
+    partially-failed fleet is a *different* ``Topology`` object with
+    different bytes, so fleet-change events re-key automatically.
     """
     h = hashlib.blake2b(digest_size=16)
     for s in topo.specs:
@@ -183,6 +192,12 @@ def topology_fingerprint(topo: Topology, *,
     h.update(topo.latency.astype(np.float64).tobytes())
     if sender_contention:
         h.update(b"|sender_contention")
+    if receiver_contention:
+        h.update(b"|receiver_contention")
+    if jittered_bandwidth:
+        h.update(b"|jittered_bandwidth")
+        h.update(np.float64(jitter_amp).tobytes())
+        h.update(np.int64(jitter_seed).tobytes())
     return h.hexdigest()
 
 
@@ -192,33 +207,51 @@ class TopologyFingerprinter:
     Serving traffic reuses a handful of ``Topology`` objects, so hashing
     the ``[D, D]`` matrices once per *object* (strong refs pin the ids)
     beats re-hashing per request.  Both the service and the cluster
-    router hold one of these, constructed with the tier's contention
-    mode so every key they mint carries it."""
+    router hold one of these, constructed with the tier's communication
+    modes so every key they mint carries them."""
 
-    def __init__(self, sender_contention: bool = False):
+    def __init__(self, sender_contention: bool = False,
+                 receiver_contention: bool = False,
+                 jittered_bandwidth: bool = False,
+                 jitter_amp: float = 0.25, jitter_seed: int = 0):
         self.sender_contention = sender_contention
+        self.receiver_contention = receiver_contention
+        self.jittered_bandwidth = jittered_bandwidth
+        self.jitter_amp = jitter_amp
+        self.jitter_seed = jitter_seed
         self._memo: dict = {}
 
     def __call__(self, topo: Topology) -> str:
-        """Fingerprint ``topo`` under this tier's mode, memoized by
+        """Fingerprint ``topo`` under this tier's modes, memoized by
         object identity."""
         hit = self._memo.get(id(topo))
         if hit is not None and hit[0] is topo:
             return hit[1]
-        fp = topology_fingerprint(topo,
-                                  sender_contention=self.sender_contention)
+        fp = topology_fingerprint(
+            topo, sender_contention=self.sender_contention,
+            receiver_contention=self.receiver_contention,
+            jittered_bandwidth=self.jittered_bandwidth,
+            jitter_amp=self.jitter_amp, jitter_seed=self.jitter_seed)
         self._memo[id(topo)] = (topo, fp)
         return fp
 
 
 def cache_key(g: DataflowGraph, topo: Topology, *,
-              sender_contention: bool = False) -> Tuple[str, str]:
+              sender_contention: bool = False,
+              receiver_contention: bool = False,
+              jittered_bandwidth: bool = False,
+              jitter_amp: float = 0.25, jitter_seed: int = 0
+              ) -> Tuple[str, str]:
     """(graph fingerprint, topology fingerprint) — the cache/store key
     identifying one placement problem up to node relabeling.  The
-    simulator's contention mode is part of the key (see
+    simulator's communication modes are part of the key (see
     :func:`topology_fingerprint`)."""
     return (graph_fingerprint(g),
-            topology_fingerprint(topo, sender_contention=sender_contention))
+            topology_fingerprint(topo, sender_contention=sender_contention,
+                                 receiver_contention=receiver_contention,
+                                 jittered_bandwidth=jittered_bandwidth,
+                                 jitter_amp=jitter_amp,
+                                 jitter_seed=jitter_seed))
 
 
 def to_canonical(placement: np.ndarray, order: np.ndarray) -> np.ndarray:

@@ -23,14 +23,16 @@ Layout and invariants:
 * Records whose policy hash differs from the loading store's
   ``policy_hash`` are **invalidated** (counted, never surfaced): after a
   policy-version bump the cluster re-infers rather than serving stale
-  placements.  The simulator's **contention mode** is provenance too:
-  records written under a different ``sender_contention`` setting are
+  placements.  The simulator's **communication modes** are provenance
+  too: records written under different ``mode_bits`` (sender/receiver
+  contention, bandwidth jitter — see ``SimConfig.mode_bits``) are
   invalidated the same way (their makespans answer a different cost
   question), so a mode flip re-infers instead of serving cross-mode
   placements — audited end-to-end by the service's ``stale_served``
-  counter, which must stay 0 across the flip.  A topology digest that
-  disagrees with the record's own key marks the record corrupt and it is
-  skipped.
+  counter, which must stay 0 across the flip.  The historical boolean
+  ``"cm"`` field reads back as mode bits unchanged (0/1 ⇔ sender
+  contention off/on).  A topology digest that disagrees with the
+  record's own key marks the record corrupt and it is skipped.
 * A torn tail (crash mid-append) must not poison a restart: the first
   undecodable line of a segment abandons *that segment's remainder* and
   replay continues with the next segment.
@@ -89,7 +91,12 @@ class StoredEntry:
     publishes: int
     finetune_step: int        # fine-tune iterations behind this placement
     policy_hash: str          # hash of the policy that produced it
-    sender_contention: bool = False   # simulator mode it was measured under
+    mode_bits: int = 0        # SimConfig.mode_bits it was measured under
+
+    @property
+    def sender_contention(self) -> bool:
+        """Bit 0 of ``mode_bits`` (back-compat view)."""
+        return bool(self.mode_bits & 1)
 
     def to_cache_entry(self) -> CacheEntry:
         """Materialize as an in-memory cache entry (counters preserved)."""
@@ -126,18 +133,23 @@ class PersistentStore:
             (one tag per concurrent writer, e.g. ``"w3"``).
         compact_min_records: :meth:`maybe_compact` triggers once this many
             owned records exist and they exceed twice the owned key count.
-        sender_contention: simulator contention mode this process serves
-            under; records measured under the other mode are invalidated
-            at load time exactly like a stale policy hash.
+        sender_contention: legacy single-mode knob, equivalent to
+            ``mode_bits=1``; ignored when ``mode_bits`` is given.
+        mode_bits: packed simulator communication modes this process
+            serves under (``SimConfig.mode_bits``); records measured
+            under any other mode combination are invalidated at load
+            time exactly like a stale policy hash.
     """
 
     def __init__(self, root, policy_hash: str, worker_tag: str = "w0",
                  compact_min_records: int = 512,
-                 sender_contention: bool = False):
+                 sender_contention: bool = False,
+                 mode_bits: Optional[int] = None):
         self.root = Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
         self.policy_hash = policy_hash
-        self.sender_contention = bool(sender_contention)
+        self.mode_bits = (int(mode_bits) if mode_bits is not None
+                          else int(bool(sender_contention)))
         self.worker_tag = worker_tag
         self.compact_min_records = compact_min_records
         self.stats = StoreStats()
@@ -185,7 +197,7 @@ class PersistentStore:
                             float(d["pred"]), float(d["mk"]),
                             str(d["src"]), int(d["hits"]), int(d["pubs"]),
                             int(d["fts"]), str(d["ph"]),
-                            bool(d.get("cm", False)))   # pre-mode records: off
+                            int(d.get("cm", 0)))   # pre-mode records: all off
         if not np.isfinite(entry.measured_makespan):
             raise ValueError("non-finite measured makespan")
         return key, entry
@@ -200,7 +212,7 @@ class PersistentStore:
             "mk": rec.measured_makespan, "src": rec.source,
             "hits": rec.hits, "pubs": rec.publishes,
             "fts": rec.finetune_step, "ph": rec.policy_hash,
-            "cm": int(rec.sender_contention),
+            "cm": int(rec.mode_bits),
         }) + "\n"
 
     def _load(self) -> None:
@@ -224,7 +236,7 @@ class PersistentStore:
                         self._merge(self._own, key,
                                     dataclasses.replace(rec))
                     if (rec.policy_hash != self.policy_hash or
-                            rec.sender_contention != self.sender_contention):
+                            rec.mode_bits != self.mode_bits):
                         self.stats.records_invalidated += 1
                         continue
                     self.stats.records_loaded += 1
@@ -259,7 +271,7 @@ class PersistentStore:
                           float(entry.predicted_makespan),
                           float(entry.measured_makespan), entry.source,
                           int(entry.hits), int(entry.publishes),
-                          int(finetune_step), ph, self.sender_contention)
+                          int(finetune_step), ph, self.mode_bits)
         self._open_for_append()
         self._fh.write(self._dump(key, rec))
         self._fh.flush()

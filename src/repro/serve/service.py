@@ -66,7 +66,7 @@ from repro.obs import jaxprof
 from repro.obs.metrics import CounterDict, Histogram, MetricsRegistry
 from repro.obs.trace import get_tracer
 from repro.sim.device import Topology
-from repro.sim.scheduler import Env, prepare_sim_graph
+from repro.sim.scheduler import Env, SimConfig, prepare_sim_graph
 from repro.serve import fingerprint as FP
 from repro.serve.batcher import MicroBatcher
 from repro.serve.cache import CacheEntry, PlacementCache
@@ -144,11 +144,15 @@ class ServeConfig:
     max_deg: int = 8
     seed: int = 0
     simulated: bool = False
-    # Simulator semantics this worker serves under (SimConfig mode): with
-    # contention on, every env, baseline and fine-tune is judged by the
-    # sender-port-serialized scheduler and every key's topology digest
-    # carries the mode.
+    # Simulator semantics this worker serves under (SimConfig modes):
+    # with any mode on, every env, baseline and fine-tune is judged by
+    # the mode-aware scheduler and every key's topology digest carries
+    # the full mode set (failure modes are provenance).
     sender_contention: bool = False
+    receiver_contention: bool = False
+    jittered_bandwidth: bool = False
+    jitter_amp: float = 0.25
+    jitter_seed: int = 0
     # Jumbo bucket (paper-scale admissions): graphs above
     # ``jumbo_threshold`` nodes skip the micro-batcher — they are padded
     # to the next multiple of ``jumbo_pad_multiple`` (featurize.
@@ -163,6 +167,20 @@ class ServeConfig:
     jumbo_pad_multiple: int = 2048
     max_graph_nodes: int = 1 << 17
     costs: ServiceCosts = dataclasses.field(default_factory=ServiceCosts)
+
+    @property
+    def sim(self) -> SimConfig:
+        """Evaluation :class:`SimConfig` for this worker (shaped off)."""
+        return SimConfig(sender_contention=self.sender_contention,
+                         receiver_contention=self.receiver_contention,
+                         jittered_bandwidth=self.jittered_bandwidth,
+                         jitter_amp=self.jitter_amp,
+                         jitter_seed=self.jitter_seed)
+
+    @property
+    def mode_bits(self) -> int:
+        """Packed communication modes (store invalidation key)."""
+        return self.sim.mode_bits
 
 
 @dataclasses.dataclass(frozen=True)
@@ -281,10 +299,10 @@ class PlacementService:
                                else WallClock())
         self.store = store
         if store is not None:
-            # a store replaying records under a different simulator mode
+            # a store replaying records under different simulator modes
             # would warm the cache with cross-mode placements
-            assert store.sender_contention == config.sender_contention, (
-                store.sender_contention, config.sender_contention)
+            assert store.mode_bits == config.mode_bits, (
+                store.mode_bits, config.mode_bits)
         self.policy_hash = (store.policy_hash if store is not None
                             else _policy_hash(trainer.state.params))
         self.cache = PlacementCache(config.cache_capacity, config.cache_policy)
@@ -298,7 +316,8 @@ class PlacementService:
         # (classic cache-stampede protection; one model call per key).
         self._inflight: Dict[Tuple[str, str], List[Request]] = {}
         self._ft_queue: Deque[Tuple[Tuple[str, str], str]] = deque()
-        self._topo_fp = FP.TopologyFingerprinter(config.sender_contention)
+        self._topo_fp = FP.TopologyFingerprinter(
+            **config.sim.comm_mode_kwargs())
         self._key = jax.random.PRNGKey(config.seed)
         self._next_id = 0
         self.completed: List[Request] = []
@@ -504,10 +523,10 @@ class PlacementService:
         seg = (self.pcfg.segment if self.pcfg.segment and
                pad_n % self.pcfg.segment == 0 else None)
         sg = prepare_sim_graph(g, topo, max_deg=16, pad_to=pad_n, pad_k=16)
-        contention = self.cfg.sender_contention
-        env_true = Env(sg, topo, sender_contention=contention, segment=seg)
-        env_shaped = Env(sg, topo, shaped_reward=True,
-                         sender_contention=contention, segment=seg)
+        env_true = Env.from_config(sg, topo, self.cfg.sim, segment=seg)
+        env_shaped = Env.from_config(
+            sg, topo, dataclasses.replace(self.cfg.sim, shaped_reward=True),
+            segment=seg)
         gb = featurize(g, max_deg=self.cfg.max_deg, pad_to=pad_n, topo=topo)
         base_best, base_pl = np.inf, None
         for fn in (B.human_expert, B.round_robin):

@@ -17,3 +17,6 @@ from repro.sim.cost_model import node_compute_times, node_compute_matrix  # noqa
 from repro.sim.scheduler import (SimConfig, SimGraph, SimTopology,
                                  prepare_sim_graph, simulate, simulate_batch,
                                  reward_from_runtime)  # noqa: F401
+from repro.sim.chaos import (FleetEvent, FailureSchedule, RecoveryStep,
+                             alive_devices, degrade_links, fail_devices,
+                             migration_bytes, recovery_trajectory)  # noqa: F401

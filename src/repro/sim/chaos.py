@@ -1,0 +1,245 @@
+"""Fault injection for elastic fleets: failure schedules as derived topologies.
+
+A production fleet is never the fixed healthy pool the training envs
+assume: devices get preempted, links degrade, capacity comes back.  This
+module models those events *in simulated time* and — crucially — as
+**derived** :class:`~repro.sim.device.Topology` objects rather than a new
+simulator mode:
+
+* a **failed** device keeps its slot (the device count, the policy head
+  width and the featurization are unchanged) but its memory capacity
+  drops to zero — the memory-aware decode (``placer._mask_full_devices``)
+  can no longer emit it, and any placement with resident bytes there is
+  invalid, exactly the paper's OOM semantics;
+* a **degraded** link is the same link with scaled bandwidth.
+
+Because a failed/degraded fleet has different ``Topology`` bytes, the
+serving tier's provenance machinery re-keys automatically: the topology
+fingerprint changes, stale cache/store entries stop matching, and the
+cluster re-places affected graphs (**failure modes are provenance** —
+see ``docs/architecture.md``).
+
+Determinism: a :class:`FailureSchedule` is a value (sorted events + a
+seed, with its own :meth:`~FailureSchedule.fingerprint`), derived
+topologies are pure functions of (base topology, schedule, time), and
+:func:`recovery_trajectory` evaluates recovery makespans through the
+jitted scheduler — so the same schedule replays bit-identically on the
+monolithic and segmented simulation paths (pinned by
+``tests/test_chaos.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Callable, Dict, FrozenSet, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.graph import DataflowGraph
+from repro.sim.device import Topology, _finalize_links
+from repro.sim.scheduler import Env, SimConfig, prepare_sim_graph
+
+EVENT_KINDS = ("fail", "restore", "degrade")
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetEvent:
+    """One fleet-change event at simulated time ``t``.
+
+    ``kind``:
+
+    * ``"fail"`` — ``devices`` are preempted (memory capacity → 0);
+    * ``"restore"`` — ``devices`` rejoin with their original capacity;
+    * ``"degrade"`` — the directed ``links`` get bandwidth scaled by
+      ``bw_scale`` (``1.0`` heals a previously degraded link; later
+      events on the same link override earlier ones).
+    """
+    t: float
+    kind: str
+    devices: Tuple[int, ...] = ()
+    links: Tuple[Tuple[int, int], ...] = ()
+    bw_scale: float = 1.0
+
+    def __post_init__(self):
+        assert self.kind in EVENT_KINDS, self.kind
+
+
+@dataclasses.dataclass(frozen=True)
+class FailureSchedule:
+    """A deterministic, fingerprintable sequence of fleet events.
+
+    Events are kept sorted by time (stable for ties, so two schedules
+    built from the same events are the same value).  ``seed`` names the
+    chaos trial; it feeds the fingerprint so two trials with identical
+    events remain distinguishable provenance-wise.
+    """
+    events: Tuple[FleetEvent, ...] = ()
+    seed: int = 0
+
+    def __post_init__(self):
+        ordered = tuple(sorted(self.events, key=lambda e: e.t))
+        object.__setattr__(self, "events", ordered)
+
+    def fingerprint(self) -> str:
+        """Hex digest of the exact schedule (events + seed)."""
+        h = hashlib.blake2b(digest_size=16)
+        h.update(np.int64(self.seed).tobytes())
+        for ev in self.events:
+            h.update(np.float64(ev.t).tobytes())
+            h.update(ev.kind.encode())
+            h.update(np.int64(ev.devices).tobytes())
+            h.update(np.int64(ev.links).tobytes() if ev.links else b"-")
+            h.update(np.float64(ev.bw_scale).tobytes())
+        return h.hexdigest()
+
+    def failed_at(self, t: float) -> FrozenSet[int]:
+        """Device ids dead at time ``t`` (fail/restore events folded)."""
+        dead: set = set()
+        for ev in self.events:
+            if ev.t > t:
+                break
+            if ev.kind == "fail":
+                dead.update(ev.devices)
+            elif ev.kind == "restore":
+                dead.difference_update(ev.devices)
+        return frozenset(dead)
+
+    def link_scales_at(self, t: float) -> Dict[Tuple[int, int], float]:
+        """Directed-link bandwidth scales in effect at time ``t``."""
+        scales: Dict[Tuple[int, int], float] = {}
+        for ev in self.events:
+            if ev.t > t:
+                break
+            if ev.kind == "degrade":
+                for link in ev.links:
+                    scales[(int(link[0]), int(link[1]))] = float(ev.bw_scale)
+        return {k: v for k, v in scales.items() if v != 1.0}
+
+    def topology_at(self, base: Topology, t: float) -> Topology:
+        """The derived fleet at time ``t`` (identity when nothing is in
+        effect, so the healthy fingerprint is exactly the base one)."""
+        topo = base
+        scales = self.link_scales_at(t)
+        if scales:
+            topo = degrade_links(topo, scales)
+        dead = self.failed_at(t)
+        if dead:
+            topo = fail_devices(topo, dead)
+        return topo
+
+    def times(self) -> List[float]:
+        """Distinct event times, ascending."""
+        out: List[float] = []
+        for ev in self.events:
+            if not out or ev.t != out[-1]:
+                out.append(ev.t)
+        return out
+
+
+def fail_devices(topo: Topology, devices: Sequence[int]) -> Topology:
+    """Derived fleet with ``devices`` preempted (memory capacity → 0).
+
+    The device count is preserved — placements, the policy head and the
+    featurizer keep their width; the dead devices are simply unusable
+    (memory-masked decode skips them, residency there is invalid).
+    """
+    dead = set(int(d) for d in devices)
+    assert all(0 <= d < topo.num_devices for d in dead), (dead,
+                                                          topo.num_devices)
+    specs = tuple(dataclasses.replace(s, mem_bytes=0.0) if i in dead else s
+                  for i, s in enumerate(topo.specs))
+    return dataclasses.replace(topo, specs=specs)
+
+
+def degrade_links(topo: Topology,
+                  scales: Dict[Tuple[int, int], float]) -> Topology:
+    """Derived fleet with directed links' bandwidth multiplied by their
+    scale (``{(i, j): 0.1}`` = link i→j at 10% bandwidth)."""
+    bw = topo.bw.copy()
+    for (i, j), s in scales.items():
+        assert s > 0.0, ((i, j), s)
+        bw[i, j] = bw[i, j] * s
+    bw, lat = _finalize_links(bw, topo.latency)
+    return dataclasses.replace(topo, bw=bw, latency=lat)
+
+
+def alive_devices(topo: Topology) -> np.ndarray:
+    """i64[] ids of devices with non-zero memory capacity."""
+    return np.flatnonzero(topo.mem_caps > 0.0)
+
+
+def migration_bytes(g: DataflowGraph, old_placement: np.ndarray,
+                    new_placement: np.ndarray,
+                    failed: Sequence[int] = ()) -> Tuple[float, float]:
+    """(moved_bytes, forced_bytes) between two placements of ``g``.
+
+    ``moved_bytes`` is the resident-tensor volume migrated *by choice*:
+    nodes whose old device survived but whose new device differs.
+    ``forced_bytes`` counts nodes whose old device failed — their state
+    must be restored (from checkpoint or a peer) no matter where they
+    land, so every replan pays it and only ``moved_bytes`` discriminates
+    between a migration-aware and a from-scratch replan.
+    """
+    old = np.asarray(old_placement, np.int64)
+    new = np.asarray(new_placement, np.int64)
+    assert old.shape == new.shape == (g.num_nodes,), (old.shape, new.shape)
+    dead = np.zeros(int(old.max(initial=0)) + 1, bool)
+    for d in failed:
+        if 0 <= int(d) < dead.size:
+            dead[int(d)] = True
+    on_dead = dead[old]
+    moved = (old != new) & ~on_dead
+    return (float(g.mem_bytes[moved].sum()),
+            float(g.mem_bytes[on_dead].sum()))
+
+
+@dataclasses.dataclass(frozen=True)
+class RecoveryStep:
+    """One event of a recovery trajectory (see :func:`recovery_trajectory`)."""
+    t: float
+    failed: Tuple[int, ...]
+    placement: np.ndarray      # i32[N], graph node order
+    makespan: float
+    valid: bool
+    moved_bytes: float
+    forced_bytes: float
+
+
+def recovery_trajectory(
+        g: DataflowGraph, base_topo: Topology, schedule: FailureSchedule,
+        initial_placement: np.ndarray,
+        replace_fn: Callable[[DataflowGraph, Topology, np.ndarray,
+                              FrozenSet[int]], np.ndarray],
+        sim: SimConfig = SimConfig(),
+        segment: Optional[int] = None) -> List[RecoveryStep]:
+    """Replay a failure schedule and re-place after every event.
+
+    At each event time the derived fleet is materialized, ``replace_fn(g,
+    topo, incumbent, failed)`` produces the recovery placement, and its
+    makespan is evaluated through the jitted scheduler under ``sim`` —
+    monolithically, or segment-batched when ``segment`` is given (the two
+    are bit-identical; ``tests/test_chaos.py`` pins the whole trajectory).
+
+    The incumbent placement carried into each step is the previous step's
+    recovery placement, so trajectories are deterministic functions of
+    (graph, base fleet, schedule, ``replace_fn``).
+    """
+    steps: List[RecoveryStep] = []
+    incumbent = np.asarray(initial_placement, np.int32)
+    for t in schedule.times():
+        topo = schedule.topology_at(base_topo, t)
+        failed = schedule.failed_at(t)
+        placement = np.asarray(
+            replace_fn(g, topo, incumbent.copy(), failed), np.int32)
+        sg = prepare_sim_graph(g, topo, pad_multiple=segment)
+        pad_n = sg.compute_t.shape[0]
+        pl = np.zeros(pad_n, np.int32)
+        pl[:g.num_nodes] = placement
+        env = Env.from_config(sg, topo, sim, segment=segment)
+        mk, _, valid = env.rewards(pl[None])
+        moved, forced = migration_bytes(g, incumbent, placement, failed)
+        steps.append(RecoveryStep(t, tuple(sorted(failed)), placement,
+                                  float(mk[0]), bool(valid[0]),
+                                  moved, forced))
+        incumbent = placement
+    return steps

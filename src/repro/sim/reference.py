@@ -4,9 +4,12 @@ Semantics identical to :func:`repro.sim.scheduler.simulate`; written
 independently with explicit loops so the jitted version is checked against
 it — including the heterogeneous path: per-(node, device) compute times,
 ``[D, D]`` link bandwidth/latency gathered per edge endpoint pair, and
-per-device memory caps.  An optional sender-port serialization mode is
-used to quantify how much link contention shifts makespans (reported in
-EXPERIMENTS.md).
+per-device memory caps.  The optional communication modes are mirrored
+too: sender-port serialization, receiver-port serialization, and the
+deterministic bandwidth jitter (the jitter hash is re-implemented here
+with plain python ints so the two implementations stay independent while
+producing identical uint32 values).  The modes quantify how much link
+contention/jitter shifts makespans (reported in EXPERIMENTS.md).
 """
 from __future__ import annotations
 
@@ -18,9 +21,37 @@ from repro.core.graph import DataflowGraph
 from repro.sim.cost_model import node_compute_matrix
 from repro.sim.device import Topology
 
+_M32 = 0xFFFFFFFF
+# must match repro.sim.scheduler.JITTER_MIX (pinned by tests/test_sim.py)
+_J1, _J2, _J3, _J4, _J5 = (0x9E3779B1, 0x85EBCA77, 0xC2B2AE3D,
+                           0x27D4EB2F, 0x165667B1)
+
+
+def jitter_factor_ref(u: int, v: int, pu: int, pv: int,
+                      amp: float, seed: int) -> float:
+    """Scalar bandwidth-jitter factor in ``[1, 1 + amp]``.
+
+    Python-int re-implementation of :func:`repro.sim.scheduler.
+    jitter_factors` — uint32 wraparound is emulated by masking after
+    every multiply, and the final scaling is done in float32 so the
+    factor matches the jitted scheduler bit-for-bit.
+    """
+    x = ((u * _J1) & _M32) ^ ((v * _J2) & _M32) ^ ((pu * _J3) & _M32) \
+        ^ ((pv * _J4) & _M32) ^ ((seed * _J5) & _M32)
+    x ^= x >> 16
+    x = (x * 0x7FEB352D) & _M32
+    x ^= x >> 15
+    x = (x * 0x846CA68B) & _M32
+    x ^= x >> 16
+    unit = np.float32(x) * np.float32(1.0 / 2 ** 32)
+    return float(np.float32(1.0) + np.float32(amp) * unit)
+
 
 def simulate_ref(g: DataflowGraph, placement: np.ndarray, topo: Topology,
-                 max_deg: int = 16, sender_contention: bool = False
+                 max_deg: int = 16, sender_contention: bool = False,
+                 receiver_contention: bool = False,
+                 jittered_bandwidth: bool = False,
+                 jitter_amp: float = 0.25, jitter_seed: int = 0
                  ) -> Tuple[float, float, bool]:
     """Returns (makespan_s, mem_util, valid) — see scheduler.simulate."""
     n = g.num_nodes
@@ -29,6 +60,7 @@ def simulate_ref(g: DataflowGraph, placement: np.ndarray, topo: Topology,
     finish = np.zeros(n)
     dev_free = np.zeros(topo.num_devices)
     send_free = np.zeros(topo.num_devices)
+    recv_free = np.zeros(topo.num_devices)
     with np.errstate(divide="ignore"):
         inv_bw = 1.0 / topo.bw                        # [D, D], diag 0 (inf bw)
     lat = topo.latency
@@ -42,12 +74,19 @@ def simulate_ref(g: DataflowGraph, placement: np.ndarray, topo: Topology,
             t = finish[u]
             if p[u] != p[v]:
                 dur = g.out_bytes[u] * inv_bw[p[u], p[v]]
+                if jittered_bandwidth:
+                    dur *= jitter_factor_ref(u, v, int(p[u]), int(p[v]),
+                                             jitter_amp, jitter_seed)
+                start = t
                 if sender_contention:
-                    start = max(t, send_free[p[u]])
+                    start = max(start, send_free[p[u]])
+                if receiver_contention:
+                    start = max(start, recv_free[p[v]])
+                if sender_contention:
                     send_free[p[u]] = start + dur
-                    t = start + lat[p[u], p[v]] + dur
-                else:
-                    t = t + lat[p[u], p[v]] + dur
+                if receiver_contention:
+                    recv_free[p[v]] = start + dur
+                t = start + lat[p[u], p[v]] + dur
             ready = max(ready, t)
         start = max(ready, dev_free[p[v]])
         finish[v] = start + ct[v, p[v]]

@@ -53,15 +53,86 @@ class SimConfig:
       digest (``serve.fingerprint.topology_fingerprint``) and the
       persistent store invalidates cross-mode records at load, exactly
       like a policy bump.
+    * ``receiver_contention`` — the mirror mode: serialize each device's
+      *incoming* transfers on a single receive port.  Composes freely
+      with ``sender_contention`` (both ports must be free before a
+      transfer starts).
+    * ``jittered_bandwidth`` — deterministic per-edge bandwidth jitter:
+      every cross-device transfer's duration is multiplied by a factor in
+      ``[1, 1 + jitter_amp]`` drawn from an integer hash of
+      ``(src, dst, src_dev, dst_dev, jitter_seed)``.  Same seed ⇒ same
+      makespans, bit-for-bit, on every path (monolithic, segmented, and
+      the numpy oracle reproduce the same factors).
     * ``shaped_reward`` — continuous memory penalty instead of the
       paper's −10 cliff (:func:`reward_shaped`); training envs use it,
       evaluation envs do not.
+
+    All communication modes are provenance: they feed the topology
+    fingerprint and the store's ``mode_bits``, so flipping any of them
+    invalidates cached/persisted placements exactly like a policy bump.
 
     The default config is bit-identical to the historical semantics —
     every golden-pinned makespan is a ``SimConfig()`` makespan.
     """
     sender_contention: bool = False
     shaped_reward: bool = False
+    receiver_contention: bool = False
+    jittered_bandwidth: bool = False
+    jitter_amp: float = 0.25   # only meaningful when jittered_bandwidth
+    jitter_seed: int = 0       # only meaningful when jittered_bandwidth
+
+    @property
+    def mode_bits(self) -> int:
+        """Communication modes packed into an int (store invalidation key).
+
+        Bit 0: sender_contention, bit 1: receiver_contention, bit 2:
+        jittered_bandwidth.  Backwards compatible with the historical
+        boolean ``"cm"`` store field (0/1 ⇔ sender only).
+        """
+        return (int(self.sender_contention)
+                | (int(self.receiver_contention) << 1)
+                | (int(self.jittered_bandwidth) << 2))
+
+    def comm_mode_kwargs(self) -> dict:
+        """The communication-mode knobs as kwargs, for threading into
+        ``serve.fingerprint.topology_fingerprint`` and friends."""
+        return dict(sender_contention=self.sender_contention,
+                    receiver_contention=self.receiver_contention,
+                    jittered_bandwidth=self.jittered_bandwidth,
+                    jitter_amp=self.jitter_amp,
+                    jitter_seed=self.jitter_seed)
+
+
+# lowbias32-style avalanche over a mix of edge coordinates: the jitter
+# factor of a transfer is a pure function of (src node, dst node, src
+# device, dst device, seed), so it is reproducible across the monolithic
+# loop, the segmented loop, and the numpy oracle (which re-implements the
+# same hash with python ints in repro/sim/reference.py).
+JITTER_MIX = (0x9E3779B1, 0x85EBCA77, 0xC2B2AE3D, 0x27D4EB2F, 0x165667B1)
+
+
+def jitter_factors(u: jnp.ndarray, v: jnp.ndarray, pu: jnp.ndarray,
+                   pv: jnp.ndarray, amp: float, seed: int) -> jnp.ndarray:
+    """Per-edge bandwidth jitter factors in ``[1, 1 + amp]`` (f32).
+
+    Inputs broadcast (the scheduler passes ``u``/``pu`` as ``[N, K]`` and
+    ``v``/``pv`` as ``[N, 1]``).  All arithmetic is uint32 with wraparound,
+    so the value is bit-identical to the reference oracle's python-int
+    implementation.
+    """
+    j1, j2, j3, j4, j5 = JITTER_MIX
+    x = (u.astype(jnp.uint32) * jnp.uint32(j1)
+         ^ v.astype(jnp.uint32) * jnp.uint32(j2)
+         ^ pu.astype(jnp.uint32) * jnp.uint32(j3)
+         ^ pv.astype(jnp.uint32) * jnp.uint32(j4)
+         ^ jnp.uint32((int(seed) * j5) & 0xFFFFFFFF))
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x7FEB352D)
+    x = x ^ (x >> 15)
+    x = x * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> 16)
+    unit = x.astype(jnp.float32) * jnp.float32(1.0 / 2 ** 32)
+    return (1.0 + jnp.float32(amp) * unit).astype(jnp.float32)
 
 
 class SimTopology(NamedTuple):
@@ -136,7 +207,10 @@ def prepare_sim_graph(g: DataflowGraph, topo: Topology, max_deg: int = 16,
 
 def simulate(sg: SimGraph, placement: jnp.ndarray, st: SimTopology,
              sender_contention: bool = False,
-             segment: Optional[int] = None
+             segment: Optional[int] = None, *,
+             receiver_contention: bool = False,
+             jittered_bandwidth: bool = False,
+             jitter_amp: float = 0.25, jitter_seed: int = 0
              ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Returns (makespan_s, mem_util, valid).
 
@@ -151,9 +225,16 @@ def simulate(sg: SimGraph, placement: jnp.ndarray, st: SimTopology,
     out of device *d* starts at ``max(producer_finish, send_free[d])``
     and occupies the port for its duration.  Edges are consumed in the
     same padded in-neighbor order as the oracle, so makespans match it
-    exactly.  The contended inner loop is sequential per edge (the port
-    state carries between edges), so prefer the default hoisted path
-    when contention does not matter.
+    exactly.  ``receiver_contention=True`` is the mirror: incoming
+    transfers serialize on the destination's receive port; with both on,
+    a transfer waits for *both* ports and occupies both.  The contended
+    inner loop is sequential per edge (the port state carries between
+    edges), so prefer the default hoisted path when neither matters.
+
+    ``jittered_bandwidth=True`` multiplies each cross-device transfer's
+    duration by a deterministic factor in ``[1, 1 + jitter_amp]``
+    (:func:`jitter_factors`); it composes with either contention mode
+    and keeps the hoisted fast path when used alone.
 
     ``segment`` runs the segment-batched loop instead: the outer
     ``fori_loop`` walks ``N // segment`` segments and the body scans the
@@ -172,45 +253,66 @@ def simulate(sg: SimGraph, placement: jnp.ndarray, st: SimTopology,
     finish0 = jnp.zeros(n + 1, jnp.float32)   # sentinel row stays 0
     dev_free0 = jnp.zeros(st.num_devices, jnp.float32)
 
-    if sender_contention:
+    pd = p_pad[sg.in_idx]                                        # [N, K]
+    pv_col = p[:, None]
+    jmat = None
+    if jittered_bandwidth:
+        v_idx = jnp.arange(n, dtype=jnp.int32)[:, None]          # [N, 1]
+        jmat = jitter_factors(sg.in_idx, v_idx, pd, pv_col,
+                              jitter_amp, jitter_seed)           # [N, K]
+
+    if sender_contention or receiver_contention:
         k = sg.in_idx.shape[1]
 
         def body_c(v, state):
-            finish, dev_free, send_free = state
+            finish, dev_free, send_free, recv_free = state
             pv = p[v]
 
             def edge(kk, acc):
-                ready, sf = acc
+                ready, sf, rf = acc
                 u = sg.in_idx[v, kk]
                 m = sg.in_mask[v, kk]
                 pu = p_pad[u]
                 t = finish[u]
                 dur = out_b_pad[u] * st.inv_bw[pu, pv]
-                start = jnp.maximum(t, sf[pu])
+                if jmat is not None:
+                    dur = dur * jmat[v, kk]
+                start = t
+                if sender_contention:
+                    start = jnp.maximum(start, sf[pu])
+                if receiver_contention:
+                    start = jnp.maximum(start, rf[pv])
                 crossing = (m > 0) & (pu != pv)
-                sf = jnp.where(crossing, sf.at[pu].set(start + dur), sf)
+                if sender_contention:
+                    sf = jnp.where(crossing, sf.at[pu].set(start + dur), sf)
+                if receiver_contention:
+                    rf = jnp.where(crossing, rf.at[pv].set(start + dur), rf)
                 t_edge = jnp.where(pu != pv,
                                    start + st.latency[pu, pv] + dur, t)
-                return jnp.maximum(ready, jnp.where(m > 0, t_edge, 0.0)), sf
+                return (jnp.maximum(ready, jnp.where(m > 0, t_edge, 0.0)),
+                        sf, rf)
 
-            ready, send_free = jax.lax.fori_loop(
-                0, k, edge, (jnp.float32(0.0), send_free))
+            ready, send_free, recv_free = jax.lax.fori_loop(
+                0, k, edge, (jnp.float32(0.0), send_free, recv_free))
             fin = jnp.maximum(ready, dev_free[pv]) + ct_eff[v, pv]
             return (finish.at[v].set(fin), dev_free.at[pv].set(fin),
-                    send_free)
+                    send_free, recv_free)
 
         body_fn = body_c
-        state0 = (finish0, dev_free0, jnp.zeros(st.num_devices, jnp.float32))
+        state0 = (finish0, dev_free0,
+                  jnp.zeros(st.num_devices, jnp.float32),
+                  jnp.zeros(st.num_devices, jnp.float32))
     else:
         # Everything except producer finish times is loop-independent:
         # hoist the per-edge communication cost out of the sequential scan
         # (the loop body is dispatch-overhead-bound on CPU; fewer ops per
-        # step ≈ 2-3x faster).
-        pd = p_pad[sg.in_idx]                                      # [N, K]
-        pv_col = p[:, None]
+        # step ≈ 2-3x faster).  Jitter is loop-independent too, so the
+        # jitter-only mode keeps this path.
         cross = (pd != pv_col).astype(jnp.float32) * sg.in_mask
-        comm = cross * (st.latency[pd, pv_col] +
-                        out_b_pad[sg.in_idx] * st.inv_bw[pd, pv_col])  # [N, K]
+        dur_mat = out_b_pad[sg.in_idx] * st.inv_bw[pd, pv_col]     # [N, K]
+        if jmat is not None:
+            dur_mat = dur_mat * jmat
+        comm = cross * (st.latency[pd, pv_col] + dur_mat)          # [N, K]
 
         def body(v, state):
             finish, dev_free = state
@@ -266,11 +368,17 @@ def reward_shaped(makespan: jnp.ndarray, mem_util: jnp.ndarray,
 
 def simulate_batch(sg: SimGraph, placements: jnp.ndarray, st: SimTopology,
                    shaped: bool = False, sender_contention: bool = False,
-                   segment: Optional[int] = None
+                   segment: Optional[int] = None, *,
+                   receiver_contention: bool = False,
+                   jittered_bandwidth: bool = False,
+                   jitter_amp: float = 0.25, jitter_seed: int = 0
                    ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """vmap over M placements: returns (makespan[M], reward[M], valid[M])."""
-    fn = jax.vmap(lambda pl: simulate(sg, pl, st, sender_contention,
-                                      segment=segment))
+    fn = jax.vmap(lambda pl: simulate(
+        sg, pl, st, sender_contention, segment=segment,
+        receiver_contention=receiver_contention,
+        jittered_bandwidth=jittered_bandwidth,
+        jitter_amp=jitter_amp, jitter_seed=jitter_seed))
     makespan, util, valid = fn(placements)
     if shaped:
         return makespan, reward_shaped(makespan, util), valid
@@ -278,11 +386,17 @@ def simulate_batch(sg: SimGraph, placements: jnp.ndarray, st: SimTopology,
 
 
 @partial(jax.jit, static_argnames=("num_devices", "shaped",
-                                   "sender_contention", "segment"))
+                                   "sender_contention", "segment",
+                                   "receiver_contention",
+                                   "jittered_bandwidth",
+                                   "jitter_amp", "jitter_seed"))
 def _simulate_batch_jit(sg: SimGraph, placements, inv_bw, latency, mem_caps,
                         num_devices: int, shaped: bool,
                         sender_contention: bool,
-                        segment: Optional[int] = None):
+                        segment: Optional[int] = None,
+                        receiver_contention: bool = False,
+                        jittered_bandwidth: bool = False,
+                        jitter_amp: float = 0.25, jitter_seed: int = 0):
     """Stable-identity jitted wrapper so repeated Env.rewards calls with
     the same shapes hit the pjit cache instead of re-tracing the scan
     (eager fori_loop re-compiles per call — ~0.5 s each at serving sizes;
@@ -290,7 +404,10 @@ def _simulate_batch_jit(sg: SimGraph, placements, inv_bw, latency, mem_caps,
     st = SimTopology(num_devices, inv_bw, latency, mem_caps)
     return simulate_batch(sg, placements, st, shaped=shaped,
                           sender_contention=sender_contention,
-                          segment=segment)
+                          segment=segment,
+                          receiver_contention=receiver_contention,
+                          jittered_bandwidth=jittered_bandwidth,
+                          jitter_amp=jitter_amp, jitter_seed=jitter_seed)
 
 
 # one program per (shape, mode) — a compile-count regression here costs
@@ -311,6 +428,10 @@ class Env:
     topo: Topology
     shaped_reward: bool = False
     sender_contention: bool = False
+    receiver_contention: bool = False
+    jittered_bandwidth: bool = False
+    jitter_amp: float = 0.25
+    jitter_seed: int = 0
     # Segment-batched evaluation (non-semantic: bit-identical makespans,
     # only the compiled loop structure changes).  The SimGraph's node dim
     # must be a multiple (prepare_sim_graph pad_multiple).
@@ -322,13 +443,20 @@ class Env:
         """Bind a graph + topology under one :class:`SimConfig`."""
         return cls(sg, topo, shaped_reward=sim.shaped_reward,
                    sender_contention=sim.sender_contention,
+                   receiver_contention=sim.receiver_contention,
+                   jittered_bandwidth=sim.jittered_bandwidth,
+                   jitter_amp=sim.jitter_amp, jitter_seed=sim.jitter_seed,
                    segment=segment)
 
     @property
     def config(self) -> SimConfig:
         """The :class:`SimConfig` this env evaluates under."""
         return SimConfig(sender_contention=self.sender_contention,
-                         shaped_reward=self.shaped_reward)
+                         shaped_reward=self.shaped_reward,
+                         receiver_contention=self.receiver_contention,
+                         jittered_bandwidth=self.jittered_bandwidth,
+                         jitter_amp=self.jitter_amp,
+                         jitter_seed=self.jitter_seed)
 
     @cached_property
     def sim_topology(self) -> SimTopology:
@@ -346,4 +474,7 @@ class Env:
             return _simulate_batch_jit(self.sg, jnp.asarray(placements),
                                        st.inv_bw, st.latency, st.mem_caps,
                                        st.num_devices, self.shaped_reward,
-                                       self.sender_contention, self.segment)
+                                       self.sender_contention, self.segment,
+                                       self.receiver_contention,
+                                       self.jittered_bandwidth,
+                                       self.jitter_amp, self.jitter_seed)

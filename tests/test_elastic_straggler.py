@@ -1,10 +1,13 @@
-"""Elastic resharding + straggler-mitigation policies."""
+"""Elastic resharding + batch-layout adaptation + straggler policies."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
 from jax.sharding import PartitionSpec as P
 
-from repro.ckpt.elastic import reshard_tree, validate_divisibility
+from repro.ckpt.elastic import (adapt_batch_layout, reshard_tree,
+                                validate_divisibility)
 from repro.core.rollout import (StragglerModel, plan_with_backups,
                                 simulate_iteration_latency)
 
@@ -23,6 +26,76 @@ def test_validate_divisibility_flags_bad_axes():
     tree = {"w": np.ones((5, 4))}
     # mesh axes are size 1 -> everything divides
     assert validate_divisibility(tree, {"w": P("model", None)}, mesh) == []
+
+
+def test_reshard_scalar_and_none_leaves_survive_dp_spec():
+    """A tree-wide dp spec over a state dict with scalar leaves (step
+    counters) and Nones must not crash NamedSharding: over-long specs
+    are trimmed to the leaf's rank, non-arrays pass through."""
+    mesh = jax.make_mesh((1,), ("data",))
+    tree = {"w": np.ones((4, 2)), "step": np.float32(7.0), "opt": None}
+    specs = {"w": P("data", None), "step": P("data"), "opt": P("data")}
+    out = reshard_tree(tree, specs, mesh)
+    np.testing.assert_allclose(np.asarray(out["w"]), tree["w"])
+    assert float(out["step"]) == 7.0
+    assert out["opt"] is None
+    # empty spec on an array leaf means replicate, not crash
+    out2 = reshard_tree({"w": np.ones(3)}, {"w": P()}, mesh)
+    np.testing.assert_allclose(np.asarray(out2["w"]), 1.0)
+
+
+def _replica_state(rng, dp):
+    """A realistic mixed pytree: per-replica leaves (leading dim dp),
+    replicated leaves, scalars and Nones."""
+    return {
+        "rng_folds": rng.randint(0, 2 ** 31, size=(dp, 2)).astype(np.uint32),
+        "batch_stats": rng.randn(dp, 3, 4).astype(np.float32),
+        "weights": rng.randn(5, 5).astype(np.float32),   # no replica axis
+        "step": np.int64(17),
+        "none": None,
+    }
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10 ** 6))
+def test_adapt_batch_layout_grow_shrink_roundtrip(seed):
+    """grow(k) then shrink(k) is a bit-exact identity for any replica
+    width and growth factor — a capacity blip (lose a pod, get it back)
+    is lossless for per-replica state."""
+    rng = np.random.RandomState(seed)
+    old_dp = int(rng.choice([1, 2, 4, 8, 256]))
+    factor = int(rng.choice([2, 4]))
+    state = _replica_state(rng, old_dp)
+    grown = adapt_batch_layout(state, old_dp, old_dp * factor)
+    assert grown["rng_folds"].shape[0] == old_dp * factor
+    # every child replica starts from its parent's exact state
+    np.testing.assert_array_equal(grown["batch_stats"][::factor],
+                                  state["batch_stats"])
+    back = adapt_batch_layout(grown, old_dp * factor, old_dp)
+    for k in ("rng_folds", "batch_stats", "weights"):
+        np.testing.assert_array_equal(back[k], state[k])
+        assert back[k].dtype == state[k].dtype
+    assert back["step"] == state["step"] and back["none"] is None
+
+
+def test_adapt_batch_layout_256_512_roundtrip_bit_exact():
+    """The headline elastic scenario: 256 -> 512 -> 256 replicas."""
+    rng = np.random.RandomState(0)
+    state = _replica_state(rng, 256)
+    out = adapt_batch_layout(adapt_batch_layout(state, 256, 512), 512, 256)
+    for k in ("rng_folds", "batch_stats", "weights"):
+        assert np.array_equal(out[k], state[k])
+
+
+def test_adapt_batch_layout_rejects_non_divisible():
+    state = {"x": np.zeros((256, 2))}
+    with pytest.raises(ValueError):
+        adapt_batch_layout(state, 256, 384)
+    with pytest.raises(ValueError):
+        adapt_batch_layout(state, 256, 0)
+    # leaves without the replica axis are untouched even when widths match
+    same = adapt_batch_layout({"w": np.ones((3, 2))}, 256, 512)
+    assert same["w"].shape == (3, 2)
 
 
 def test_backups_reduce_tail_latency():

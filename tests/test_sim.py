@@ -92,6 +92,77 @@ def test_jit_matches_reference_contention_heterogeneous(tname, g, seed):
     assert float(mk) >= float(mk0) - 1e-9            # contention only delays
 
 
+NEW_MODES = {
+    "receiver": dict(receiver_contention=True),
+    "jitter": dict(jittered_bandwidth=True),
+    "receiver+sender": dict(receiver_contention=True,
+                            sender_contention=True),
+    "jitter+sender": dict(jittered_bandwidth=True, sender_contention=True),
+    "all": dict(sender_contention=True, receiver_contention=True,
+                jittered_bandwidth=True, jitter_amp=0.5, jitter_seed=7),
+}
+
+
+@pytest.mark.parametrize("tname", sorted(HETERO_TOPOS))
+@pytest.mark.parametrize("mode", sorted(NEW_MODES))
+@pytest.mark.parametrize("seed", [0, 1])
+def test_jit_matches_reference_new_modes(tname, mode, seed):
+    """Receiver-port contention and deterministic bandwidth jitter (alone
+    and composed with the sender mode) match the numpy oracle on fleets
+    with non-uniform bandwidth — same bar the sender mode cleared."""
+    kw = NEW_MODES[mode]
+    topo = HETERO_TOPOS[tname]
+    d = topo.num_devices
+    g = GRAPHS[0]
+    sg = prepare_sim_graph(g, topo, max_deg=16)
+    rng = np.random.RandomState(seed)
+    p = rng.randint(0, d, g.num_nodes).astype(np.int32)
+    mk, util, valid = simulate(sg, jnp.asarray(p),
+                               SimTopology.from_topology(topo), **kw)
+    mk_ref, util_ref, valid_ref = simulate_ref(g, p, topo, **kw)
+    assert np.isclose(float(mk), mk_ref, rtol=1e-4)
+    assert np.isclose(float(util), util_ref, rtol=1e-5)
+    assert bool(valid) == valid_ref
+    # every mode only serializes or slows transfers: never speeds us up
+    mk0, _, _ = simulate(sg, jnp.asarray(p), SimTopology.from_topology(topo))
+    assert float(mk) >= float(mk0) - 1e-9
+
+
+def test_off_mode_goldens_untouched():
+    """All-modes-off must trace the exact historical program: explicit
+    False/default kwargs reproduce the no-kwarg call bit-for-bit, and
+    SimConfig's kwargs round-trip through comm_mode_kwargs."""
+    g = GRAPHS[0]
+    sg, topo = _env(g)
+    rng = np.random.RandomState(5)
+    p = jnp.asarray(rng.randint(0, 4, g.num_nodes).astype(np.int32))
+    st_ = SimTopology.from_topology(topo)
+    mk0, util0, valid0 = simulate(sg, p, st_)
+    mk1, util1, valid1 = simulate(sg, p, st_, sender_contention=False,
+                                  receiver_contention=False,
+                                  jittered_bandwidth=False)
+    assert float(mk0) == float(mk1) and float(util0) == float(util1)
+    assert bool(valid0) == bool(valid1)
+    cfg = SimConfig(receiver_contention=True, jitter_seed=3)
+    assert cfg.comm_mode_kwargs() == dict(
+        sender_contention=False, receiver_contention=True,
+        jittered_bandwidth=False, jitter_amp=0.25, jitter_seed=3)
+
+
+def test_jitter_hash_constants_pinned():
+    """JITTER_MIX is part of every jittered fleet's provenance (the same
+    seed must mean the same fleet across releases) — changing it is a
+    breaking change that must show up here, not in a stale cache."""
+    from repro.sim.scheduler import JITTER_MIX
+    assert JITTER_MIX == (0x9E3779B1, 0x85EBCA77, 0xC2B2AE3D, 0x27D4EB2F,
+                          0x165667B1)
+    from repro.sim.reference import jitter_factor_ref
+    f = jitter_factor_ref(3, 7, 1, 2, 0.25, 0)
+    assert 1.0 <= f <= 1.25
+    assert f == jitter_factor_ref(3, 7, 1, 2, 0.25, 0)   # pure
+    assert f != jitter_factor_ref(3, 7, 1, 2, 0.25, 1)   # seed matters
+
+
 def test_env_from_config_threads_contention():
     """SimConfig -> Env.from_config produces the same numbers as the raw
     simulate() flags, and the default config is the historical path."""
