@@ -76,6 +76,11 @@ def main():
     from benchmarks import chaos
     C.cache_section("chaos", chaos.run(
         pretrain_iters=max(iters // 3, 50), full=True), campaign_grade=True)
+
+    print("[campaign] roofline kernels", flush=True)
+    from benchmarks import roofline
+    C.cache_section("roofline_kernels", roofline.kernels_section(quick=False),
+                    campaign_grade=True)
     print("[campaign] done", flush=True)
 
 

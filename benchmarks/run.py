@@ -210,6 +210,17 @@ def main() -> None:
     except FileNotFoundError:
         print("roofline,SKIPPED,run repro/launch/dryrun.py first")
 
+    _section("Roofline: block-sparse kernels vs dense baselines")
+    from benchmarks import roofline as RF
+    kern = RF.kernels_section(quick=quick)
+    RF.report_kernels(kern)
+    if "roofline_kernels" in cached:
+        hl = cached["roofline_kernels"].get("headline", {})
+        print(f"roofline.kernels.campaign.headline,"
+              f"{hl.get('sparse_strictly_smaller_50k', -1)},"
+              f"attn50k={hl.get('attn_bytes_ratio_50k', float('nan')):.4f};"
+              f"pool50k={hl.get('maxpool_bytes_ratio_50k', float('nan')):.4f}")
+
     print(f"\n[benchmarks] total wall time: {time.time()-t0:.0f}s")
 
 

@@ -22,7 +22,7 @@ is N (a zero/-inf feature row is appended where needed).
 """
 from __future__ import annotations
 
-from typing import List, NamedTuple, Optional, Tuple
+from typing import Any, List, NamedTuple, Optional, Tuple
 
 import numpy as np
 import jax.numpy as jnp
@@ -45,6 +45,11 @@ class GraphBatch(NamedTuple):
     dev_feats: jnp.ndarray   # f32[D, F_DEV] normalized per-device capabilities
     dev_mem_cap: jnp.ndarray  # f32[D] device cap / tightest cap (mem_frac units)
     num_nodes: int           # real node count (static python int)
+    # BSR adjacency index for the CSR-blocked aggregation kernel
+    # (kernels.csr_maxpool.BlockIndex), or None.  Built by
+    # ``featurize(..., csr=True)``; ``pad_to_common`` drops it (re-padding
+    # invalidates the tile geometry — re-featurize to rebuild).
+    csr_blocks: Optional[Any] = None
 
 
 def device_features(topo) -> np.ndarray:
@@ -70,13 +75,17 @@ def device_features(topo) -> np.ndarray:
 
 def featurize(g: DataflowGraph, max_deg: int = 8,
               pad_to: Optional[int] = None, topo=None,
-              pad_multiple: Optional[int] = None) -> GraphBatch:
+              pad_multiple: Optional[int] = None, csr: bool = False,
+              csr_block_n: int = 64, csr_block_m: int = 128) -> GraphBatch:
     """``topo`` (sim.device.Topology) enables the resource-aware decoder
     context: per-node memory/compute fractions the AR placer accumulates
     per device while decoding, plus the per-device capability table
     (DESIGN.md §5-addendum).  ``pad_multiple`` rounds the padded node dim
     up to a multiple (segment-native pipelines pad to the decode segment
-    so every segment has one compiled shape)."""
+    so every segment has one compiled shape).  ``csr=True`` additionally
+    builds the BSR adjacency block index (O(edges) numpy work, done once
+    per graph) so the GNN can aggregate via the CSR-blocked kernel
+    (``PolicyConfig.agg_impl="pallas_csr"``)."""
     n = g.num_nodes
     pad_n = pad_to or n
     if pad_multiple:
@@ -126,10 +135,16 @@ def featurize(g: DataflowGraph, max_deg: int = 8,
         # accumulators compare directly against these (memory-aware
         # masked decode, PolicyConfig.mask_full_devices)
         dev_mem_cap = (caps / tight).astype(np.float32)
+    blocks = None
+    if csr:
+        from repro.kernels.csr_maxpool import build_block_index
+        blocks = build_block_index(nbr_idx, nbr_mask, pad_n,
+                                   block_n=csr_block_n, block_m=csr_block_m)
     return GraphBatch(jnp.asarray(op), jnp.asarray(f), jnp.asarray(nbr_idx),
                       jnp.asarray(nbr_mask), jnp.asarray(node_mask),
                       jnp.asarray(mem_frac), jnp.asarray(comp_frac),
-                      jnp.asarray(dev_feats), jnp.asarray(dev_mem_cap), n)
+                      jnp.asarray(dev_feats), jnp.asarray(dev_mem_cap), n,
+                      blocks)
 
 
 # Padded-size ladder for micro-batched serving: bucketing request graphs

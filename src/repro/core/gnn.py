@@ -52,7 +52,8 @@ def _gather_max(z_pad: jnp.ndarray, nbr_idx: jnp.ndarray,
 
 
 def _neighbor_max(z: jnp.ndarray, nbr_idx: jnp.ndarray, nbr_mask: jnp.ndarray,
-                  agg_impl: str, chunk: Optional[int] = None) -> jnp.ndarray:
+                  agg_impl: str, chunk: Optional[int] = None,
+                  csr_blocks=None) -> jnp.ndarray:
     """max over padded neighbors; z:[N,H], nbr_idx:[N,K] sentinel=N.
 
     ``chunk`` bounds the gather: node rows are processed ``chunk`` at a
@@ -60,10 +61,23 @@ def _neighbor_max(z: jnp.ndarray, nbr_idx: jnp.ndarray, nbr_mask: jnp.ndarray,
     at O(chunk·K·H) instead of O(N·K·H) — the difference between a 50k-
     node featurization fitting in memory or not.  Per-node reductions are
     unchanged, so chunked == unchunked bit-for-bit.
+
+    ``agg_impl="pallas_csr"`` streams only the non-empty adjacency tiles
+    via the BSR index carried on the GraphBatch (``csr_blocks``; built by
+    ``featurize(..., csr=True)``) — bytes touched scale with the edges,
+    not with chunk·N.
     """
     if agg_impl == "pallas":
         from repro.kernels import ops as kops
         return kops.neighbor_maxpool(z, nbr_idx, nbr_mask, chunk=chunk)
+    if agg_impl == "pallas_csr":
+        if csr_blocks is None:
+            raise ValueError(
+                "agg_impl='pallas_csr' needs a GraphBatch featurized with "
+                "csr=True (GraphBatch.csr_blocks is None)")
+        from repro.kernels import ops as kops
+        return kops.neighbor_maxpool_csr(z, csr_blocks,
+                                         num_rows=z.shape[0])
     z_pad = jnp.concatenate([z, jnp.full((1, z.shape[1]), NEG, z.dtype)])
     n, k = nbr_idx.shape
     if chunk is None or n <= chunk:
@@ -86,7 +100,8 @@ def apply(params: Dict[str, Any], gb: GraphBatch, *, agg_impl: str = "jnp",
     h = h * gb.node_mask[:, None]
     for lp in params["layers"]:
         z = jax.nn.sigmoid(nn.dense(lp["agg"], h))          # Eq. (2) affine+sigma
-        agg = _neighbor_max(z, gb.nbr_idx, gb.nbr_mask, agg_impl, chunk)
+        agg = _neighbor_max(z, gb.nbr_idx, gb.nbr_mask, agg_impl, chunk,
+                            getattr(gb, "csr_blocks", None))
         h = jax.nn.relu(nn.dense(lp["upd"], jnp.concatenate([h, agg], -1)))
         h = h * gb.node_mask[:, None]
     return h

@@ -53,6 +53,7 @@ import jax.numpy as jnp
 
 from repro.core import nn
 from repro.core.featurize import NUM_DEVICE_FEATURES
+from repro.kernels import ops as kops
 from repro.core.superposition import modulate
 from repro.obs import jaxprof
 from repro.obs.trace import get_tracer
@@ -226,7 +227,8 @@ def apply_tf(params: Dict[str, Any], h: jnp.ndarray, node_mask: jnp.ndarray,
              use_attention: bool = True,
              dev_mem_cap: Optional[jnp.ndarray] = None,
              mask_full: bool = False,
-             incumbent_bias: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+             incumbent_bias: Optional[jnp.ndarray] = None,
+             attn_impl: str = "jnp") -> jnp.ndarray:
     """Parallel logits for given placements (PPO ratio path).
 
     h: [N, H] (topo order); placements: [N] int32.  Returns device logits
@@ -235,7 +237,10 @@ def apply_tf(params: Dict[str, Any], h: jnp.ndarray, node_mask: jnp.ndarray,
     applies the memory-aware decode mask (must match the sampling side
     so PPO ratios stay exact).  ``incumbent_bias`` [N, Dmax] (or None)
     is added to the head logits before the mask — same order as the AR
-    paths, so biased ratios stay exact too.
+    paths, so biased ratios stay exact too.  ``attn_impl="pallas_band"``
+    computes the window band through the block-sparse pallas kernel
+    instead of the gather (tolerance-pinned parity; the default stays
+    the golden-pinned gather).
     """
     n, hid = h.shape
     prev, ctx, mem_before = _tf_ctx(params, placements, node_mask,
@@ -244,7 +249,13 @@ def apply_tf(params: Dict[str, Any], h: jnp.ndarray, node_mask: jnp.ndarray,
     for lp in params["layers"]:
         if use_attention:
             q, k, v = _proj_qkv(lp, x, c, heads)
-            out = _banded_attention(q, k, v, window).reshape(n, hid)
+            if attn_impl == "pallas_band":
+                out = kops.causal_window_attention(
+                    q.transpose(1, 0, 2), k.transpose(1, 0, 2),
+                    v.transpose(1, 0, 2), window=min(window, n),
+                    impl="band").transpose(1, 0, 2).reshape(n, hid)
+            else:
+                out = _banded_attention(q, k, v, window).reshape(n, hid)
             x = x + nn.dense(lp["wo"], modulate(c, out)) * node_mask[:, None]
         x = _ffn(lp, x, c)
     logits = _head_logits(params, x, c, num_devices,
@@ -259,10 +270,12 @@ def apply_tf(params: Dict[str, Any], h: jnp.ndarray, node_mask: jnp.ndarray,
 
 
 # --------------------------------------------------- segmented TF decode
-@partial(jax.jit, static_argnames=("heads", "num_devices", "use_attention"))
+@partial(jax.jit, static_argnames=("heads", "num_devices", "use_attention",
+                                   "attn_impl"))
 def _tf_segment(params, x, kmem, vmem, node_mask, base, c, dev_keys,
                 mem_before, mem_frac, cap, bias, *,
-                heads: int, num_devices: int, use_attention: bool):
+                heads: int, num_devices: int, use_attention: bool,
+                attn_impl: str = "jnp"):
     """One teacher-forced segment with Transformer-XL-style memory.
 
     x: [S, H] decoder inputs; kmem/vmem: [L, W-1, heads, hd] keys/values
@@ -274,6 +287,10 @@ def _tf_segment(params, x, kmem, vmem, node_mask, base, c, dev_keys,
     Returns (logits [S, Dmax], new kmem, new vmem).  The W-wide causal
     band is gathered from memory+segment exactly as ``_banded_attention``
     gathers it from the full sequence, so values are bit-identical.
+    ``attn_impl="pallas_band"`` computes the band in place through the
+    block-sparse kernel (no [S, W, heads, hd] gather copies; ``base``
+    stays a dynamic operand, so the one-compiled-program-per-segment-
+    config invariant is unchanged).
     """
     s, hid = x.shape
     wm1 = kmem.shape[1]
@@ -287,12 +304,16 @@ def _tf_segment(params, x, kmem, vmem, node_mask, base, c, dev_keys,
             q, k, v = _proj_qkv(lp, x, c, heads)             # [S, heads, hd]
             kbuf = jnp.concatenate([kmem[li], k])            # [W-1+S, ...]
             vbuf = jnp.concatenate([vmem[li], v])
-            kb, vb = kbuf[idx], vbuf[idx]                    # [S, W, heads, hd]
-            sc = jnp.einsum("nhd,nwhd->nhw", q, kb) / jnp.sqrt(
-                jnp.float32(hd))
-            sc = jnp.where(valid[:, None, :], sc, NEG)
-            aw = jax.nn.softmax(sc, axis=-1)
-            out = jnp.einsum("nhw,nwhd->nhd", aw, vb).reshape(s, hid)
+            if attn_impl == "pallas_band":
+                out = kops.band_mha_with_memory(
+                    q, kbuf, vbuf, base, window=w).reshape(s, hid)
+            else:
+                kb, vb = kbuf[idx], vbuf[idx]                # [S, W, heads, hd]
+                sc = jnp.einsum("nhd,nwhd->nhw", q, kb) / jnp.sqrt(
+                    jnp.float32(hd))
+                sc = jnp.where(valid[:, None, :], sc, NEG)
+                aw = jax.nn.softmax(sc, axis=-1)
+                out = jnp.einsum("nhw,nwhd->nhd", aw, vb).reshape(s, hid)
             x = x + nn.dense(lp["wo"], modulate(c, out)) * node_mask[:, None]
             new_k.append(kbuf[s:])
             new_v.append(vbuf[s:])
@@ -319,12 +340,14 @@ def apply_tf_segmented(params: Dict[str, Any], h: jnp.ndarray,
                        use_attention: bool = True,
                        dev_mem_cap: Optional[jnp.ndarray] = None,
                        mask_full: bool = False,
-                       incumbent_bias: Optional[jnp.ndarray] = None
-                       ) -> jnp.ndarray:
+                       incumbent_bias: Optional[jnp.ndarray] = None,
+                       attn_impl: str = "jnp") -> jnp.ndarray:
     """Teacher-forced logits via fixed-size segments (paper's scalable
     segmented attention): compiled shapes are per-(segment, window), so a
     graph of ANY length reuses one compiled step — a 50k-node GNMT never
-    compiles a 50k-shaped program.
+    compiles a 50k-shaped program.  ``attn_impl="pallas_band"`` routes
+    each segment's band through the block-sparse kernel (tolerance-pinned
+    parity vs the default gather in tier-1).
 
     Bit-identical to :func:`apply_tf` (pinned by tests/test_segmented.py):
     the causal W-band each node attends to is reproduced exactly from the
@@ -367,7 +390,7 @@ def apply_tf_segmented(params: Dict[str, Any], h: jnp.ndarray,
                 cap,
                 None if incumbent_bias is None else incumbent_bias[sl],
                 heads=heads, num_devices=num_devices,
-                use_attention=use_attention)
+                use_attention=use_attention, attn_impl=attn_impl)
         outs.append(logits)
     return jnp.concatenate(outs)[:n]
 
@@ -521,6 +544,12 @@ def sample_ar_segmented(params: Dict[str, Any], h: jnp.ndarray,
     :func:`sample_ar` with the carry threaded through — samples are
     bit-identical to the monolithic scan (tests/test_segmented.py), but
     compiled shapes never exceed ``segment``.
+
+    There is deliberately no ``attn_impl`` here: AR decode is inherently
+    sequential (node *i*'s decoder input embeds the device sampled at
+    *i-1*), so no parallel attention kernel applies — and the ring-buffer
+    KV cache already touches exactly the W-wide band the block-sparse TF
+    kernel computes, so there are no wasted bytes to win back.
     """
     n, hid = h.shape
     pad = (-n) % segment

@@ -28,7 +28,14 @@ class PolicyConfig:
     max_devices: int = 16
     use_attention: bool = True          # Fig. 3 ablation switch
     use_superposition: bool = True      # Fig. 3 ablation switch
-    agg_impl: str = "jnp"               # "jnp" | "pallas"
+    agg_impl: str = "jnp"               # "jnp" | "pallas" | "pallas_csr"
+    # Teacher-forced attention implementation: "jnp" (band gather; the
+    # golden-pinned default) or "pallas_band" (block-sparse band kernel —
+    # no [S, W] band copies; tolerance-pinned parity in tier-1).  Only the
+    # TF paths route through it: AR sampling is inherently sequential and
+    # its ring-buffer cache is already exactly band-sized (see
+    # placer.sample_ar_segmented).
+    attn_impl: str = "jnp"
     # Segmented decode (paper's scalable segmented attention): decode in
     # fixed-size segments with carried Transformer-XL-style state, so
     # compiled shapes are per-segment and a graph of ANY length reuses
@@ -171,8 +178,11 @@ def logp_and_entropy(params, cfg: PolicyConfig, gb: GraphBatch,
     ``incumbent``/``migration_bias`` must match the sampling call (both
     default off) so biased PPO ratios stay exact."""
     h, c = _embed(params, cfg, gb)
-    # the shared decode kwargs already carry segment= for segmented cfgs
-    kwargs = _decode_fn(cfg, gb, num_devices)[1]
+    # the shared decode kwargs already carry segment= for segmented cfgs;
+    # attn_impl is TF-only (the AR sampler has no parallel attention to
+    # kernelize), so it joins here rather than in _decode_fn
+    kwargs = dict(_decode_fn(cfg, gb, num_devices)[1],
+                  attn_impl=cfg.attn_impl)
     tf_fn = (placer.apply_tf_segmented if cfg.segment is not None
              else placer.apply_tf)
     bias = incumbent_bias(cfg, gb, incumbent, migration_bias)

@@ -1,0 +1,163 @@
+"""Pallas TPU kernel: CSR-blocked GraphSAGE neighbor max-pool.
+
+The chunked aggregation path (``segment_maxpool.neighbor_maxpool_chunked``)
+bounds peak memory but still *streams* a dense ``[chunk, M]`` adjacency
+slab per row block — O(chunk·M) bytes of mostly-zero mask for dataflow
+graphs whose mean degree is ~2-8.  This kernel streams only the non-empty
+``[bn, bm]`` adjacency tiles.
+
+Format (BSR — block compressed sparse row, built host-side at featurize
+time by :func:`build_block_index`):
+
+* ``col_blocks``: i32[nR, T] — for row-block ``r``, the column-block ids
+  holding at least one neighbor edge, sentinel ``-1`` padded to the max
+  tile count ``T`` (one compiled shape per graph).
+* ``adj``: bool[nR, T, bn, bm] — the densified tiles themselves, in the
+  same order.
+
+The grid is (row-block, feature-block, tile); the innermost axis walks the
+row-block's tile list and accumulates a running max in the revisited
+output tile, exactly the ``segment_maxpool`` accumulation pattern.  A
+sentinel tile is skipped under ``pl.when``, so the inner trip count is
+``T`` but the *bytes touched* are proportional to the true tile count
+(:func:`nnz_blocks` — the roofline's modeled-bytes source).
+
+TPU NOTE: this interpret-mode implementation keeps the full ``z`` in one
+VMEM block and slices the ``[bm, bh]`` feature tile with a dynamic-start
+``pl.dslice`` (data-dependent column block).  On a real TPU the same
+index drives a ``PrefetchScalarGridSpec`` scalar-prefetch ``index_map``
+instead, so only the referenced tile crosses HBM→VMEM; the format and
+kernel body are unchanged.  CPU tests run with interpret=True.
+
+Oracle: ``repro.kernels.ref.neighbor_maxpool_from_lists_ref`` (same
+padded-neighbor-list inputs the index is built from).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -1e9
+
+
+class BlockIndex(NamedTuple):
+    """BSR adjacency: tile ids + densified tiles (see module docstring).
+
+    Block sizes are carried by the array shapes (``adj.shape[2:]``), so the
+    tuple jit-flattens to two arrays and nothing retraces on value changes.
+    """
+    col_blocks: jnp.ndarray   # i32[nR, T], sentinel -1
+    adj: jnp.ndarray          # bool[nR, T, bn, bm]
+
+
+def build_block_index(nbr_idx, nbr_mask, num_cols: int, *,
+                      block_n: int = 64, block_m: int = 128) -> BlockIndex:
+    """Host-side (numpy) BSR build from padded neighbor lists.
+
+    ``nbr_idx``: [N, K] with sentinel >= ``num_cols``; ``nbr_mask``: [N, K];
+    ``num_cols`` = M, the number of ``z`` rows the kernel may gather.
+    O(nnz) work; row/col counts need not divide the block sizes (the
+    kernel wrapper pads ``z`` and slices the output).
+    """
+    idx = np.asarray(nbr_idx)
+    msk = (np.asarray(nbr_mask) > 0) & (idx < num_cols)
+    n, _ = idx.shape
+    n_row_blocks = max(1, -(-n // block_n))
+    per_row: list = []
+    for r in range(n_row_blocks):
+        sl = slice(r * block_n, min((r + 1) * block_n, n))
+        rr, kk = np.nonzero(msk[sl])
+        cols = idx[sl][rr, kk]
+        cbs = np.unique(cols // block_m)
+        tiles = {}
+        for c in cbs:
+            t = np.zeros((block_n, block_m), bool)
+            sel = cols // block_m == c
+            t[rr[sel], cols[sel] % block_m] = True
+            tiles[int(c)] = t
+        per_row.append(tiles)
+    t_max = max(1, max(len(t) for t in per_row))
+    col_blocks = np.full((n_row_blocks, t_max), -1, np.int32)
+    adj = np.zeros((n_row_blocks, t_max, block_n, block_m), bool)
+    for r, tiles in enumerate(per_row):
+        for t, (c, tile) in enumerate(sorted(tiles.items())):
+            col_blocks[r, t] = c
+            adj[r, t] = tile
+    return BlockIndex(jnp.asarray(col_blocks), jnp.asarray(adj))
+
+
+def nnz_blocks(blocks: BlockIndex) -> int:
+    """Number of real (non-sentinel) adjacency tiles — the modeled-bytes
+    unit for ``benchmarks/roofline.py --kernels``."""
+    return int((np.asarray(blocks.col_blocks) >= 0).sum())
+
+
+def _csr_kernel(cb_ref, adj_ref, z_ref, o_ref, *, block_m: int):
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        o_ref[...] = jnp.full_like(o_ref, NEG)
+
+    # NB: slice-only indexers (pl.dslice, never a bare int) — integer
+    # indexers break interpret-mode state discharge on jax 0.4.3x.
+    cb = pl.load(cb_ref, (pl.dslice(0, 1), pl.dslice(t, 1)))[0, 0]
+
+    @pl.when(cb >= 0)
+    def _accumulate():
+        adj = pl.load(adj_ref, (pl.dslice(0, 1), pl.dslice(0, 1),
+                                slice(None), slice(None)))[0, 0]   # [bn, bm]
+        z = pl.load(z_ref, (pl.dslice(cb * block_m, block_m),
+                            slice(None))).astype(jnp.float32)      # [bm, bh]
+        masked = jnp.where(adj[:, :, None], z[None, :, :], NEG)
+        o_ref[...] = jnp.maximum(o_ref[...],
+                                 masked.max(axis=1).astype(o_ref.dtype))
+
+
+@functools.partial(jax.jit, static_argnames=("block_h", "interpret"))
+def _csr_call(z, col_blocks, adj, *, block_h: int, interpret: bool):
+    n_row_blocks, t_max, bn, bm = adj.shape
+    m, h = z.shape
+    bh = min(block_h, h)
+    grid = (n_row_blocks, h // bh, t_max)        # t innermost: accumulation
+    kernel = functools.partial(_csr_kernel, block_m=bm)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, t_max), lambda r, hh, t: (r, 0)),
+            pl.BlockSpec((1, 1, bn, bm), lambda r, hh, t: (r, t, 0, 0)),
+            pl.BlockSpec((m, bh), lambda r, hh, t: (0, hh)),
+        ],
+        out_specs=pl.BlockSpec((bn, bh), lambda r, hh, t: (r, hh)),
+        out_shape=jax.ShapeDtypeStruct((n_row_blocks * bn, h), z.dtype),
+        interpret=interpret,
+    )(col_blocks, adj, z)
+
+
+def neighbor_maxpool_csr(z: jnp.ndarray, blocks: BlockIndex, *,
+                         num_rows: int = None, block_h: int = 128,
+                         interpret: bool = False) -> jnp.ndarray:
+    """z: [M, H] neighbor features; blocks: BSR index over [N, M] -> [N, H].
+
+    ``num_rows`` slices the output back to the real N (the index rounds
+    rows up to the row-block).  Rows with no neighbors return NEG (caller
+    zeroes them) — identical contract to ``neighbor_maxpool_dense``.
+    """
+    n_row_blocks, _, bn, bm = blocks.adj.shape
+    m, h = z.shape
+    pad_m = (-m) % bm
+    if pad_m:
+        z = jnp.concatenate([z, jnp.zeros((pad_m, h), z.dtype)])
+    pad_h = (-h) % min(block_h, h)
+    if pad_h:
+        z = jnp.pad(z, ((0, 0), (0, pad_h)))
+    out = _csr_call(z, blocks.col_blocks, blocks.adj,
+                    block_h=min(block_h, h + pad_h), interpret=interpret)
+    n = num_rows if num_rows is not None else n_row_blocks * bn
+    return out[:n, :h]

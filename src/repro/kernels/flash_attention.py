@@ -26,11 +26,11 @@ NEG = -1e30
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, sm_scale: float,
                   block_q: int, block_k: int, seq_k: int, causal: bool,
-                  window: Optional[int], q_offset: int):
+                  window: Optional[int], q_offset: int, kv_len: int):
     qi = pl.program_id(1)
     q = q_ref[0].astype(jnp.float32) * sm_scale          # [bq, d]
     bq, d = q.shape
-    nk = seq_k // block_k
+    nk = min((kv_len + block_k - 1) // block_k, seq_k // block_k)
 
     q_pos = q_offset + qi * block_q + jax.lax.iota(jnp.int32, block_q)
 
@@ -55,7 +55,10 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, sm_scale: float,
                                 slice(None)))[0].astype(jnp.float32)
         s = jax.lax.dot_general(q, k_blk, (((1,), (1,)), ((), ())))  # [bq,bk]
         k_pos = j * block_k + jax.lax.iota(jnp.int32, block_k)
-        mask = jnp.ones((bq, block_k), jnp.bool_)
+        # padded-key guard: keys at/after the true length never reach the
+        # softmax (sequence dims are padded to block multiples by the ops
+        # wrappers; without this mask the zero padding attends as real keys)
+        mask = (k_pos < kv_len)[None, :] | jnp.zeros((bq, 1), jnp.bool_)
         if causal:
             mask &= k_pos[None, :] <= q_pos[:, None]
         if window is not None:
@@ -79,27 +82,34 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, sm_scale: float,
 
 @functools.partial(jax.jit, static_argnames=(
     "causal", "window", "sm_scale", "block_q", "block_k", "q_offset",
-    "interpret"))
+    "kv_len", "interpret"))
 def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                     causal: bool = True, window: Optional[int] = None,
                     sm_scale: Optional[float] = None, block_q: int = 128,
                     block_k: int = 128, q_offset: int = 0,
+                    kv_len: Optional[int] = None,
                     interpret: bool = False) -> jnp.ndarray:
     """q: [BH, Sq, D]; k/v: [BH, Sk, D] -> [BH, Sq, D].
 
     GQA is handled by the ops wrapper (q heads grouped onto kv heads before
     the call).  Sq/Sk must divide block_q/block_k (wrapper pads).
+    ``kv_len`` (static) is the number of REAL keys: when Sk was padded up
+    to a block multiple, keys at index >= kv_len are masked out of the
+    softmax and trailing fully-padded K/V blocks are never visited.
     """
     bh, sq, d = q.shape
     sk = k.shape[1]
     block_q = min(block_q, sq)
     block_k = min(block_k, sk)
     assert sq % block_q == 0 and sk % block_k == 0, (sq, block_q, sk, block_k)
+    kv_len = sk if kv_len is None else kv_len
+    assert 0 < kv_len <= sk, (kv_len, sk)
     sm = sm_scale if sm_scale is not None else 1.0 / math.sqrt(d)
     grid = (bh, sq // block_q)
     kernel = functools.partial(
         _flash_kernel, sm_scale=sm, block_q=block_q, block_k=block_k,
-        seq_k=sk, causal=causal, window=window, q_offset=q_offset)
+        seq_k=sk, causal=causal, window=window, q_offset=q_offset,
+        kv_len=kv_len)
     return pl.pallas_call(
         kernel,
         grid=grid,

@@ -33,6 +33,36 @@ def flash_attention_ref(q, k, v, *, causal: bool = True,
     return out.astype(q.dtype)
 
 
+def band_attention_ref(q, k, v, *, diag_lo: int, diag_hi: int,
+                       kv_lo: int = 0, kv_len: Optional[int] = None,
+                       sm_scale: Optional[float] = None) -> jnp.ndarray:
+    """q: [BH, Sq, D]; k/v: [BH, Sk, D] — banded softmax attention.
+
+    Query row ``i`` attends column ``j`` iff ``diag_lo <= j - i <= diag_hi``
+    and ``kv_lo <= j < kv_len`` (the band geometry of
+    ``band_attention.band_attention``).  Rows with no valid column return 0
+    here; the kernel leaves them unspecified, so parity tests must compare
+    only rows with at least one valid column.
+    """
+    import math
+    d = q.shape[-1]
+    sm = sm_scale if sm_scale is not None else 1.0 / math.sqrt(d)
+    sq, sk = q.shape[1], k.shape[1]
+    kv_len = sk if kv_len is None else kv_len
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * sm
+    qi = jnp.arange(sq)
+    ki = jnp.arange(sk)
+    delta = ki[None, :] - qi[:, None]
+    mask = (delta >= diag_lo) & (delta <= diag_hi)
+    mask &= (ki >= kv_lo)[None, :] & (ki < kv_len)[None, :]
+    s = jnp.where(mask[None], s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask[None], p, 0.0)          # fully-masked rows -> 0
+    out = jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
 def neighbor_maxpool_ref(z, adj) -> jnp.ndarray:
     """z: [M, H]; adj: [N, M] bool -> [N, H]; empty rows -> -1e9."""
     masked = jnp.where(adj[:, :, None], z[None, :, :].astype(jnp.float32),
@@ -46,3 +76,25 @@ def neighbor_maxpool_from_lists_ref(z, nbr_idx, nbr_mask) -> jnp.ndarray:
     gathered = z_pad[nbr_idx]
     masked = jnp.where(nbr_mask[..., None] > 0, gathered, -1e9)
     return masked.max(axis=1)
+
+
+def csr_maxpool_blocks_ref(z, col_blocks, adj) -> jnp.ndarray:
+    """BSR-index form of the max-pool oracle (same inputs as the kernel).
+
+    z: [M, H]; col_blocks: i32[nR, T] (sentinel -1); adj: bool[nR, T, bn,
+    bm] -> [nR*bn, H] with -1e9 for rows without neighbors — the raw
+    kernel contract, before the ops wrapper zeroes isolates.  Pure jnp and
+    differentiable: this is the backward path of the CSR kernel's
+    custom_vjp (it materializes [nR, T, bn, bm, H] tile outer products, so
+    it is a training-scale path, not a 50k-inference one).
+    """
+    n_r, t_max, bn, bm = adj.shape
+    m, h = z.shape
+    pad_m = (-m) % bm
+    zp = jnp.concatenate([z, jnp.zeros((pad_m, h), z.dtype)]) if pad_m else z
+    tiles = zp.reshape(zp.shape[0] // bm, bm, h)
+    zsel = tiles[jnp.clip(col_blocks, 0, tiles.shape[0] - 1)]  # [nR,T,bm,H]
+    ok = (col_blocks >= 0)[:, :, None, None] & adj             # [nR,T,bn,bm]
+    masked = jnp.where(ok[..., None],
+                       zsel[:, :, None, :, :].astype(jnp.float32), -1e9)
+    return masked.max(axis=(1, 3)).reshape(n_r * bn, h).astype(z.dtype)

@@ -1,0 +1,186 @@
+"""benchmarks/roofline.py: MODEL_FLOPS units, dominant-term classing, and
+the block-sparse kernels section (cell invariants + cache provenance +
+the artifact the nightly gate reads).
+
+The kernels-section fixture is computed once per module — it builds the
+real 50k-node gnmt-8 graph and runs the interpret-mode parity cells, so
+every test here reads the same section a nightly run would write.
+"""
+import json
+import os
+
+import pytest
+
+from benchmarks import common as C
+from benchmarks import roofline as RF
+from repro.configs import SHAPES, get_config
+from repro.configs.base import list_archs
+
+
+# ------------------------------------------------------------ model_flops
+def test_model_flops_positive_everywhere():
+    for arch in list_archs():
+        for shape in SHAPES:
+            assert RF.model_flops(arch, shape) > 0, (arch, shape)
+
+
+def test_model_flops_train_counts_fwd_plus_bwd():
+    """Train cells charge fb=3 (fwd + bwd) per token; the base term alone
+    must therefore exceed 3 * 2 * N_active * tokens - epsilon, and the
+    attention term keeps the total strictly above that floor."""
+    cfg = get_config("qwen3-8b")
+    sh = SHAPES["train_4k"]
+    base = 2.0 * cfg.active_param_count() * sh.global_batch * sh.seq_len * 3
+    assert RF.model_flops("qwen3-8b", "train_4k") > base
+
+
+def test_model_flops_prefill_includes_attention_quadratic():
+    """Without the S^2 attention term the 32k prefill would equal the
+    2*N*D base — the whole point of the term is that it does not."""
+    cfg = get_config("qwen3-8b")
+    sh = SHAPES["prefill_32k"]
+    base = 2.0 * cfg.active_param_count() * sh.global_batch * sh.seq_len
+    flops = RF.model_flops("qwen3-8b", "prefill_32k")
+    assert flops > base * 1.01
+
+
+def test_model_flops_decode_charges_per_step_tokens():
+    """Decode tokens = batch (one step), not batch * seq: a decode cell
+    must come in far below the same arch's prefill cell."""
+    assert (RF.model_flops("qwen3-8b", "decode_32k")
+            < RF.model_flops("qwen3-8b", "prefill_32k") / 100)
+
+
+def test_model_flops_enc_dec_branch():
+    """whisper-base exercises the enc_dec branch (self-enc + cross attn
+    layers added): total stays strictly above the fb=3 base."""
+    cfg = get_config("whisper-base")
+    assert cfg.enc_dec
+    sh = SHAPES["train_4k"]
+    base = 2.0 * cfg.active_param_count() * sh.global_batch * sh.seq_len * 3
+    assert RF.model_flops("whisper-base", "train_4k") > base
+
+
+# ---------------------------------------------------------- dominant_term
+@pytest.mark.parametrize("tc,tm,tl,want", [
+    (3.0, 1.0, 1.0, "compute"),
+    (1.0, 3.0, 1.0, "memory"),
+    (1.0, 1.0, 3.0, "collective"),
+    (2.0, 2.0, 1.0, "compute"),      # tie breaks toward compute
+    (1.0, 2.0, 2.0, "memory"),       # then toward memory
+    (2.0, 2.0, 2.0, "compute"),
+])
+def test_dominant_term(tc, tm, tl, want):
+    assert RF.dominant_term(tc, tm, tl) == want
+
+
+# ------------------------------------------------- kernels-section cells
+@pytest.fixture(scope="module")
+def section():
+    return RF.kernels_section(quick=True)
+
+
+def test_band_attention_cell_invariants():
+    for n, w, s in [(512, 32, 64), (8192, 128, 512), (53909, 256, 2048)]:
+        c = RF.band_attention_cell(n, window=w, segment=s)
+        assert c["segments"] == -(-n // s)
+        assert 0 < c["kv_blocks"] <= c["kv_blocks_dense"]
+        assert c["kernel_bytes"] <= c["dense_bytes"]
+        assert c["bytes_ratio"] == pytest.approx(
+            c["kernel_bytes"] / c["dense_bytes"])
+    big = RF.band_attention_cell(53909, window=256, segment=2048)
+    assert big["kernel_bytes"] < big["dense_bytes"]     # strict at 50k
+    assert big["bytes_ratio"] < 0.05
+
+
+def test_band_attention_cell_monotone_in_window():
+    """Wider windows touch more K/V blocks — never fewer."""
+    prev = 0
+    for w in (32, 64, 128, 256):
+        c = RF.band_attention_cell(8192, window=w, segment=512)
+        assert c["kv_blocks"] >= prev
+        prev = c["kv_blocks"]
+
+
+def test_csr_maxpool_cell_real_graph():
+    from repro.graphs import synthetic as S
+    g = S.rnnlm(2, time_steps=6)
+    c = RF.csr_maxpool_cell(g)
+    assert c["n"] == g.num_nodes and c["edges"] == g.num_edges
+    assert 0 <= c["nnz_blocks"] <= c["total_blocks"]
+    assert c["kernel_bytes"] <= c["dense_bytes"]
+    assert 0 < c["bytes_ratio"] <= 1.0
+
+
+def test_kernels_section_headline(section):
+    hl = section["headline"]
+    assert hl["sparse_never_worse"] == 1
+    assert hl["sparse_strictly_smaller_50k"] == 1
+    assert hl["parity_ok"] == 1
+    assert 0 < hl["attn_bytes_ratio_50k"] < 0.05
+    assert 0 < hl["maxpool_bytes_ratio_50k"] < 0.05
+    par = section["parity"]
+    assert par["band_ok"] and par["csr_ok"]
+    assert par["band_max_err"] < 2e-5 and par["csr_max_err"] == 0.0
+
+
+def test_kernels_section_covers_the_50k_cell(section):
+    """The gated headline numbers must come from the paper-scale graph,
+    not a toy stand-in."""
+    assert section["maxpool"]["gnmt-8-50k"]["n"] > 50_000
+    assert "n53909_w256_s2048" in section["attention"]
+
+
+# ----------------------------------------------- provenance + gate wiring
+@pytest.fixture()
+def tmp_cache(tmp_path, monkeypatch):
+    path = os.path.join(tmp_path, "experiments.json")
+    monkeypatch.setattr(C, "RESULTS_PATH", path)
+    return path
+
+
+def test_kernels_section_cache_provenance_roundtrip(section, tmp_cache):
+    """campaign.py's cache_section call: the section lands in the cache
+    with a campaign-grade stamp that run.py's gate accepts; a quick run
+    is refused the label entirely."""
+    C.cache_section("roofline_kernels", section, campaign_grade=True)
+    cached = C.load_cached()
+    prov = cached.pop(C.PROVENANCE_KEY)
+    assert C.is_campaign_grade("roofline_kernels", cached["roofline_kernels"],
+                               prov["roofline_kernels"])
+    got = cached["roofline_kernels"]["headline"]
+    assert got["attn_bytes_ratio_50k"] == pytest.approx(
+        section["headline"]["attn_bytes_ratio_50k"])
+
+    # sub-campaign runs must not write (and hence can never mislabel)
+    C.cache_section("roofline_kernels_quick", section, campaign_grade=False)
+    assert "roofline_kernels_quick" not in C.load_cached()
+
+
+def test_kernels_section_without_stamp_is_not_campaign(section):
+    assert not C.is_campaign_grade("roofline_kernels", section, None)
+
+
+def test_cli_artifact_feeds_the_regression_gate(section, tmp_path,
+                                                monkeypatch):
+    """--kernels --out writes strict JSON in which every
+    BENCH_roofline.json metric path of bench_baselines.json resolves —
+    the exact contract tools/check_bench_regression.py relies on."""
+    monkeypatch.setattr(RF, "kernels_section",
+                        lambda quick=True, parity=True: section)
+    out = os.path.join(tmp_path, "BENCH_roofline.json")
+    RF.cli(["--kernels", "--out", out])
+    with open(out) as f:
+        doc = json.load(f)
+    base = os.path.join(os.path.dirname(RF.__file__),
+                        "bench_baselines.json")
+    with open(base) as f:
+        metrics = [m for m in json.load(f)["metrics"]
+                   if m["file"] == "BENCH_roofline.json"]
+    assert len(metrics) == 5
+    for m in metrics:
+        node = doc
+        for part in m["path"].split("."):
+            assert part in node, (m["path"], part)
+            node = node[part]
+        assert isinstance(node, (int, float))
