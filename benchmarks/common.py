@@ -26,6 +26,7 @@ from repro.core import baselines as B
 from repro.core.featurize import featurize
 from repro.core.policy import PolicyConfig
 from repro.core.ppo import PPOConfig, PPOTrainer
+from repro.core.scale import ScaleConfig
 from repro.core.hdp import HDPConfig, HDPTrainer
 from repro.graphs import synthetic as S
 from repro.obs import jaxprof
@@ -86,7 +87,8 @@ def make_task_topo(name: str, g, topo, sim: SimConfig = SimConfig(),
     return Task(name, g, topo,
                 Env.from_config(sg, topo, train, segment=segment),
                 Env.from_config(sg, topo, true, segment=segment),
-                featurize(g, max_deg=8, topo=topo, pad_multiple=segment),
+                featurize(g, max_deg=8, topo=topo,
+                          scale=ScaleConfig(pad_multiple=segment)),
                 topo.num_devices)
 
 

@@ -24,6 +24,14 @@ Results print as ``large.*`` CSV lines and are written to
 ``BENCH_large.json`` (schema in ``docs/benchmarks.md``); the nightly CI
 campaign runs quick mode and gates regressions via
 ``tools/check_bench_regression.py``.
+
+The **jumbo tier** (``run_jumbo``) goes an order of magnitude past the
+segment-native ceiling: real model-zoo training graphs, scan-expanded
+(``extract_arch(expand=)``) to hundreds of thousands of nodes, placed
+through the hierarchical coarsen→place→refine pipeline behind
+``repro.api.place``.  Each jumbo row records the coarse fingerprint and
+the coarse→refined makespan trajectory, so a row is reproducible from
+its config hash alone.
 """
 from __future__ import annotations
 
@@ -40,6 +48,7 @@ from benchmarks import common as C
 from repro.core import baselines as B
 from repro.core.policy import PolicyConfig
 from repro.core.ppo import PPOConfig, PPOTrainer, clone_state
+from repro.core.scale import ScaleConfig
 from repro.graphs import synthetic as S
 from repro.obs.metrics import RunLog
 from repro.obs.trace import Tracer, get_tracer, set_tracer
@@ -51,6 +60,7 @@ OUT_PATH = os.environ.get("BENCH_LARGE_OUT", "BENCH_large.json")
 # the campaign; the chunk bounds the GNN gather to O(chunk * K * H).
 SEGMENT = 512
 GNN_CHUNK = 2048
+LARGE_SCALE = ScaleConfig(segment=SEGMENT, gnn_chunk=GNN_CHUNK)
 
 
 def large_policy() -> PolicyConfig:
@@ -61,8 +71,7 @@ def large_policy() -> PolicyConfig:
     sample (a colocation-biased policy overflows the per-device caps on
     every draw), so the campaign decodes memory-aware — every sample is
     feasible by construction and PPO spends its budget on makespan."""
-    return dataclasses.replace(C.POLICY, segment=SEGMENT,
-                               gnn_chunk=GNN_CHUNK,
+    return dataclasses.replace(C.POLICY, scale=LARGE_SCALE,
                                mask_full_devices=True)
 
 
@@ -113,14 +122,128 @@ def large_graphs(quick: bool) -> List[Tuple[str, Any]]:
     ]
 
 
+# ---------------------------------------------------------------------------
+# Jumbo tier: scan-expanded model-zoo graphs through the hierarchical
+# coarsen→place→refine pipeline (repro.hier behind repro.api.place).
+# ---------------------------------------------------------------------------
+SHARD_CACHE = os.environ.get("REPRO_SHARD_CACHE",
+                             os.path.join(".cache", "shards"))
+
+
+def jumbo_configs(quick: bool) -> List[Tuple[str, Dict[str, Any]]]:
+    """Jumbo workloads: (row name, extract_arch spec + pipeline knobs).
+
+    Quick mode's qwen3-8b backward graph (~90k nodes) keeps the nightly
+    CI row under a few minutes; full mode's jamba-398B backward graph at
+    seq 16384 expands past 500k nodes — the hierarchical pipeline's
+    headline scale."""
+    if quick:
+        return [("qwen3-grad", dict(
+            arch="qwen3-8b", mode="grad", seq=4096, expand=64,
+            coarse_target=2048, refine_window=8192, max_windows=4))]
+    return [("jamba-grad-16k", dict(
+        arch="jamba-1.5-large-398b", mode="grad", seq=16384, expand=128,
+        coarse_target=8192, refine_window=8192, max_windows=None))]
+
+
+def _jumbo_shards(name: str, spec: Dict[str, Any]):
+    """Extract (disk-cached) and shard (disk-cached) one jumbo graph."""
+    from repro.graphs.jaxpr_extract import arch_digest, extract_arch
+    from repro.graphs.shards import open_shards, write_shards
+    digest = arch_digest(spec["arch"], mode=spec["mode"], seq=spec["seq"],
+                         expand=spec["expand"])
+    sdir = os.path.join(SHARD_CACHE, f"{name}-{digest[:16]}")
+    sh = open_shards(sdir)
+    if sh is not None:
+        return sh
+    g = extract_arch(spec["arch"], mode=spec["mode"], seq=spec["seq"],
+                     expand=spec["expand"])
+    return write_shards(g, sdir)
+
+
+def run_jumbo(quick: bool = True, finetune_iters: int = 12,
+              num_samples: int = 4, seed: int = 0,
+              run_log: Optional[RunLog] = None) -> Dict[str, Any]:
+    """One BENCH_large.json row per jumbo config.
+
+    Each row is fully reproducible: the coarse fingerprint pins the
+    coarsening, the trajectory records every refinement acceptance, and
+    the extract/shard caches mean a rerun re-places without re-tracing."""
+    from repro.api import Budget, place
+    from repro.sim import p100_topology, prepare_sim_graph
+    from repro.sim.scheduler import Env
+
+    rows: Dict[str, Any] = {}
+    for name, spec in jumbo_configs(quick):
+        t0 = time.time()
+        sh = _jumbo_shards(name, spec)
+        n = sh.num_nodes
+        cap = sh.totals["mem_bytes"] / 8 * SLACK
+        topo = p100_topology(8).with_mem_caps(cap)
+        sc = dataclasses.replace(LARGE_SCALE,
+                                 coarse_target=spec["coarse_target"],
+                                 refine_window=spec["refine_window"])
+        plan = place(sh, topo, method="hierarchical", scale=sc,
+                     pcfg=dataclasses.replace(large_policy(), scale=sc),
+                     ppo=large_ppo(num_samples),
+                     budget=Budget(finetune_iters=finetune_iters,
+                                   samples=num_samples, seed=seed,
+                                   refine_windows=spec["max_windows"]))
+        place_s = time.time() - t0
+
+        t1 = time.time()
+        g = sh.load_graph()
+        env = Env.from_config(prepare_sim_graph(g, topo), topo, SimConfig())
+        rr_pl = B.round_robin(g, topo)
+        mk, _, ok = env.rewards(np.asarray(rr_pl, np.int32)[None])
+        rr = float(mk[0]) if bool(ok[0]) else float("inf")
+        d_rr, beats = C.vs_baseline(plan.makespan, rr)
+        row = {
+            "nodes": n,
+            "devices": 8,
+            "arch": spec["arch"], "mode": spec["mode"],
+            "seq": spec["seq"], "expand": spec["expand"],
+            "coarse_nodes": spec["coarse_target"],
+            "coarse_fingerprint": plan.fingerprints["coarse"],
+            "graph_digest": plan.fingerprints["graph"],
+            "coarse_makespan": float(plan.trajectory[0]),
+            "gdp": float(plan.makespan),
+            "valid": plan.valid,
+            "round_robin": rr,
+            "gdp_vs_round_robin": d_rr,
+            "beats_rr": beats,
+            "trajectory": [float(x) for x in plan.trajectory],
+            "refined_windows": len(plan.trajectory) - 1,
+            "place_s": place_s,
+            "baseline_s": time.time() - t1,
+            "wall_s": time.time() - t0,
+            "peak_rss_bytes": C.peak_rss_bytes(),
+        }
+        if run_log is not None:
+            run_log.emit(dict(row, phase="jumbo", graph=name,
+                              trajectory=None))
+        rows[name] = row
+        print(f"jumbo.{name},{row['gdp']:.5f},nodes={n};"
+              f"coarse={row['coarse_makespan']:.5f};rr={rr:.5f};"
+              f"dRR={C.fmt_pct(d_rr)};"
+              f"rss_gb={row['peak_rss_bytes']/2**30:.2f};"
+              f"wall={row['wall_s']:.0f}s", flush=True)
+    return rows
+
+
 def run(quick: bool = True, pretrain_iters: int = 10,
         finetune_iters: int = 8, num_samples: int = 4,
         seed: int = 0, only: Optional[List[str]] = None,
-        run_log: Optional[RunLog] = None) -> Dict[str, Any]:
+        run_log: Optional[RunLog] = None,
+        jumbo: bool = False, jumbo_only: bool = False) -> Dict[str, Any]:
     """Full campaign; returns the BENCH_large.json dict.
 
     ``only`` restricts the large-graph list by name (the slow tier-1
-    test runs just the >=50k-node gnmt-8 to bound its wall clock)."""
+    test runs just the >=50k-node gnmt-8 to bound its wall clock);
+    ``jumbo_only`` skips the classic pretrain+finetune tier entirely and
+    runs just the hierarchical jumbo tier (the 1M-node full-mode row
+    without the hours-long classic full campaign attached)."""
+    jumbo = jumbo or jumbo_only
     # validate the filter before the expensive pre-training phase — a
     # typo (or a full-mode-only name in quick mode) would otherwise
     # surface as max() over an empty dict after minutes of work
@@ -128,17 +251,20 @@ def run(quick: bool = True, pretrain_iters: int = 10,
     if only is not None and not set(only) & set(names):
         raise ValueError(f"only={only!r} matches no large graph in "
                          f"{'quick' if quick else 'full'} mode: {names}")
-    pcfg = large_policy()
-    tr = PPOTrainer(pcfg, large_ppo(num_samples=8), seed=seed)
-    tr.run_log = run_log
-    tasks = pretrain_tasks()
-    t0 = time.time()
-    tr.train([(t.name, t.gb, t.env, t.num_devices) for t in tasks],
-             iterations=pretrain_iters, log_every=0)
-    pretrain_s = time.time() - t0
-
+    pretrain_s = 0.0
+    tasks: List[C.Task] = []
     graphs: Dict[str, Any] = {}
-    for name, g in large_graphs(quick):
+    if not jumbo_only:
+        pcfg = large_policy()
+        tr = PPOTrainer(pcfg, large_ppo(num_samples=8), seed=seed)
+        tr.run_log = run_log
+        tasks = pretrain_tasks()
+        t0 = time.time()
+        tr.train([(t.name, t.gb, t.env, t.num_devices) for t in tasks],
+                 iterations=pretrain_iters, log_every=0)
+        pretrain_s = time.time() - t0
+
+    for name, g in ([] if jumbo_only else large_graphs(quick)):
         if only is not None and name not in only:
             continue
         t1 = time.time()
@@ -203,6 +329,12 @@ def run(quick: bool = True, pretrain_iters: int = 10,
               f"dRR={C.fmt_pct(d_rr)};"
               f"wall={row['wall_s']:.0f}s", flush=True)
 
+    jumbo_rows: Dict[str, Any] = {}
+    if jumbo:
+        jumbo_rows = run_jumbo(quick=quick, finetune_iters=finetune_iters,
+                               num_samples=num_samples, seed=seed,
+                               run_log=run_log)
+
     out = {
         "quick": quick,
         "segment": SEGMENT,
@@ -213,20 +345,26 @@ def run(quick: bool = True, pretrain_iters: int = 10,
         "pretrain_s": pretrain_s,
         "pretrain_graphs": [t.name for t in tasks],
         "graphs": graphs,
-        "max_nodes": max(r["nodes"] for r in graphs.values()),
+        "jumbo": jumbo_rows,
+        "max_nodes": max(r["nodes"] for r in
+                         list(graphs.values()) + list(jumbo_rows.values())),
         # only genuine wins count — a graph whose round_robin baseline
-        # is infeasible (beats_rr None) can't claim a beat
-        "all_beat_rr": bool(all(r["beats_rr"] is True
-                                for r in graphs.values())),
+        # is infeasible (beats_rr None) can't claim a beat; None when the
+        # classic tier didn't run (jumbo_only)
+        "all_beat_rr": (bool(all(r["beats_rr"] is True
+                                 for r in graphs.values()))
+                        if graphs else None),
         "peak_rss_bytes": C.peak_rss_bytes(),
     }
-    print(f"large.all_beat_rr,{int(out['all_beat_rr'])},"
+    beat = out["all_beat_rr"]
+    print(f"large.all_beat_rr,{'na' if beat is None else int(beat)},"
           f"max_nodes={out['max_nodes']};"
           f"peak_rss_gb={out['peak_rss_bytes']/2**30:.2f}", flush=True)
     return out
 
 
-def main(quick: bool = True, out: str = None) -> Dict[str, Any]:
+def main(quick: bool = True, out: str = None,
+         jumbo: bool = True, jumbo_only: bool = False) -> Dict[str, Any]:
     """CLI/campaign entry: run, write the BENCH_large.json artifact
     (strict JSON: inf becomes null).  Only a full run (>=50k-node
     GNMT-8) is cached into experiments.json — quick numbers must never
@@ -245,7 +383,8 @@ def main(quick: bool = True, out: str = None) -> Dict[str, Any]:
         results = run(quick=quick,
                       pretrain_iters=10 if quick else 60,
                       finetune_iters=8 if quick else 24,
-                      num_samples=4, run_log=run_log)
+                      num_samples=4, run_log=run_log, jumbo=jumbo,
+                      jumbo_only=jumbo_only)
     finally:
         tracer = get_tracer()
         tracer.export_chrome(trace_path)
@@ -255,7 +394,10 @@ def main(quick: bool = True, out: str = None) -> Dict[str, Any]:
     results["obs"] = {"metrics_jsonl": metrics_path,
                       "trace_json": trace_path,
                       "spans": len(tracer.spans)}
-    C.cache_section("large", results, campaign_grade=not quick,
+    # a jumbo-only run is not the classic full campaign — never let it
+    # masquerade as campaign-grade large.* numbers
+    C.cache_section("large", results,
+                    campaign_grade=not quick and not jumbo_only,
                     obs_paths=(metrics_path, trace_path))
     with open(out, "w") as f:
         json.dump(C.json_safe(results), f, indent=1, default=float,
@@ -270,5 +412,10 @@ if __name__ == "__main__":
                     help=">=50k-node GNMT-8 + deep WaveNet/Transformer-XL")
     ap.add_argument("--out", default=None,
                     help=f"artifact path (default: {OUT_PATH})")
+    ap.add_argument("--no-jumbo", action="store_true",
+                    help="skip the hierarchical jumbo tier")
+    ap.add_argument("--jumbo-only", action="store_true",
+                    help="run just the hierarchical jumbo tier")
     args = ap.parse_args()
-    main(quick=not args.full, out=args.out)
+    main(quick=not args.full, out=args.out, jumbo=not args.no_jumbo,
+         jumbo_only=args.jumbo_only)

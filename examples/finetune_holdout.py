@@ -2,16 +2,19 @@
 
 Pre-trains GDP-batch on a graph set with one family held out, then
 evaluates the held-out graph zero-shot and after a <=50-step fine-tune.
+Both evaluations go through ``repro.api.place`` — the pre-train corpus
+rides in as ``pretrain_tasks``, and ``Budget.finetune_iters`` selects
+zero-shot (0) vs fine-tuned.
 
     PYTHONPATH=src python examples/finetune_holdout.py
 """
 import os, sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
-import numpy as np
 
 from benchmarks import common as C
-from repro.core.ppo import PPOTrainer
+from repro.api import Budget, place
+from repro.core.ppo import PPOTrainer, clone_state
 
 
 def main(pretrain_iters: int = 30, finetune_iters: int = 25):
@@ -24,19 +27,16 @@ def main(pretrain_iters: int = 30, finetune_iters: int = 25):
     tr.train([(t.name, t.gb, t.env, t.num_devices) for t in rest],
              iterations=pretrain_iters, log_every=10)
 
-    zs = tr.best_of_samples(held_out.gb, held_out.env_true,
-                            held_out.num_devices, 16)
-    print(f"zero-shot on {held_out.name}: {zs:.4f}s")
+    zs = place(held_out.graph, held_out.topo, pcfg=C.POLICY, ppo=C.PPO,
+               trainer=tr, budget=Budget(finetune_iters=0, samples=16))
+    print(f"zero-shot on {held_out.name}: {zs.makespan:.4f}s")
 
-    best = np.inf
-    for it in range(finetune_iters):
-        m = tr.iteration(held_out.name, held_out.gb, held_out.env,
-                         held_out.num_devices)
-        best = min(best, m["best_makespan"])
-    best = min(best, tr.best_of_samples(held_out.gb, held_out.env_true,
-                                        held_out.num_devices, 16))
+    fork = PPOTrainer(C.POLICY, C.PPO, seed=7, state=clone_state(tr.state))
+    ft = place(held_out.graph, held_out.topo, pcfg=C.POLICY, ppo=C.PPO,
+               trainer=fork,
+               budget=Budget(finetune_iters=finetune_iters, samples=16))
     base = C.baseline_rows(held_out)
-    print(f"after {finetune_iters}-step fine-tune: {best:.4f}s "
+    print(f"after {finetune_iters}-step fine-tune: {ft.makespan:.4f}s "
           f"(human expert: {base['human']:.4f}s)")
 
 

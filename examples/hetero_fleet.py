@@ -3,20 +3,17 @@
 Builds a multi-generation topology — an NVLink island of 2 A100s and an
 island of 2 P100s bridged over PCIe — and shows why topology awareness
 matters: a round-robin striping that ignores device speed is beaten both
-by the throughput-aware expert heuristic and by a short GDP search whose
-decoder is conditioned on the per-device capability table.
+by the throughput-aware expert heuristic and by a short GDP search
+(``repro.api.place``) whose decoder is conditioned on the per-device
+capability table.
 
     PYTHONPATH=src python examples/hetero_fleet.py
 """
-import time
-
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import Budget, place
 from repro.core import baselines as B
-from repro.core.featurize import featurize
-from repro.core.policy import PolicyConfig
-from repro.core.ppo import PPOConfig, PPOTrainer
 from repro.graphs import synthetic as S
 from repro.sim import A100, P100, multi_gen_fleet, prepare_sim_graph
 from repro.sim.scheduler import Env
@@ -32,9 +29,6 @@ def main(iterations: int = 40):
         print((topo.bw / 1e9).round(1))
 
     env_true = Env(prepare_sim_graph(g, topo, max_deg=16), topo)
-    env = Env(env_true.sg, topo, shaped_reward=True)
-    gb = featurize(g, max_deg=8, topo=topo)
-
     for name, fn in (("round-robin (blind)", B.round_robin),
                      ("human-expert", B.human_expert),
                      ("metis-like", B.metis_like)):
@@ -42,19 +36,10 @@ def main(iterations: int = 40):
         print(f"{name:>20s}: {float(mk[0]):.4f}s"
               f"{'' if bool(ok[0]) else '  (OOM -> invalid)'}")
 
-    tr = PPOTrainer(PolicyConfig(hidden=64, gnn_layers=2, placer_layers=2,
-                                 ffn=256, window=64, max_devices=8),
-                    PPOConfig(num_samples=32, lr=1e-3, canonicalize=True,
-                              per_node_credit=False), seed=0)
-    t0, best = time.time(), np.inf
-    for it in range(iterations):
-        m = tr.iteration("fleet", gb, env, topo.num_devices)
-        best = min(best, m["best_makespan"])
-        if it % 10 == 0:
-            print(f"[gdp] it={it:3d} best={best:.4f}s ({time.time()-t0:.0f}s)")
-    best = min(best, tr.best_of_samples(gb, env_true, topo.num_devices, 16))
-    print(f"\nGDP best placement on the mixed fleet: {best:.4f}s "
-          f"(search {time.time()-t0:.0f}s)")
+    plan = place(g, topo, budget=Budget(finetune_iters=iterations,
+                                        samples=32))
+    print(f"\nGDP best placement on the mixed fleet: {plan.makespan:.4f}s "
+          f"(method={plan.method}, search {plan.wall_s:.0f}s)")
 
 
 if __name__ == "__main__":

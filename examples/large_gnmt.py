@@ -2,16 +2,15 @@
 
 The paper's headline scalability result places an 8-layer GNMT with over
 50k nodes.  This demo runs that pipeline end-to-end: a GDP policy with
-**segmented attention** (``PolicyConfig.segment`` — decode in fixed-size
-segments with carried Transformer-XL-style state, so one compiled step
-serves any graph length) and **chunked GNN featurization**
-(``PolicyConfig.gnn_chunk`` — the neighbor gather never materializes more
-than a chunk), pre-trains on small graphs, then superposition-fine-tunes
-a fork on a large held-out GNMT judged by the segment-batched simulator.
+segmented attention and chunked GNN featurization (one ``ScaleConfig``
+carries both knobs), pre-trained on small graphs, then
+superposition-fine-tuned through ``repro.api.place`` on a large held-out
+GNMT judged by the segment-batched simulator.
 
 Default is a few-thousand-node GNMT so the demo finishes in minutes;
 ``--full`` unrolls past 50k nodes (the paper's scale — expect a long
-run on CPU).  The full campaign is ``benchmarks/large_graph.py``.
+run on CPU).  The full campaign is ``benchmarks/large_graph.py``; for
+500k+-node graphs see the hierarchical pipeline (``docs/scaling.md``).
 
     python examples/large_gnmt.py [--full]
 """
@@ -29,6 +28,7 @@ import numpy as np
 from benchmarks import common as C
 from benchmarks.large_graph import (SEGMENT, SLACK, large_policy,
                                     large_ppo, pretrain_tasks)
+from repro.api import Budget, place
 from repro.core import baselines as B
 from repro.core.ppo import PPOTrainer, clone_state
 from repro.graphs import synthetic as S
@@ -37,8 +37,8 @@ from repro.graphs import synthetic as S
 def main(full: bool = False, pretrain_iters: int = 8,
          finetune_iters: int = 6):
     pcfg = large_policy()
-    print(f"segment-native policy: segment={pcfg.segment} "
-          f"window={pcfg.window} gnn_chunk={pcfg.gnn_chunk}")
+    print(f"segment-native policy: segment={pcfg.scale.segment} "
+          f"window={pcfg.window} gnn_chunk={pcfg.scale.gnn_chunk}")
 
     tasks = pretrain_tasks()
     tr = PPOTrainer(pcfg, large_ppo(num_samples=8), seed=0)
@@ -65,20 +65,18 @@ def main(full: bool = False, pretrain_iters: int = 8,
               f"{'' if bool(ok[0]) else '  (OOM -> invalid)'}")
 
     t1 = time.time()
-    zs = tr.best_of_samples(task.gb, task.env_true, task.num_devices, 4)
-    print(f"{'GDP zero-shot':>16s}: {zs:.4f}s  ({time.time()-t1:.0f}s, "
-          f"no weight updates)")
+    zs = place(g, task.topo, pcfg=pcfg, trainer=tr, scale=pcfg.scale,
+               budget=Budget(finetune_iters=0, samples=4))
+    print(f"{'GDP zero-shot':>16s}: {zs.makespan:.4f}s  "
+          f"({time.time()-t1:.0f}s, no weight updates)")
 
     t2 = time.time()
     fork = PPOTrainer(pcfg, large_ppo(num_samples=4), seed=7,
                       state=clone_state(tr.state))
-    res = fork.finetune(task.name, task.gb, task.env, task.num_devices,
-                        finetune_iters)
-    ft = min(res["best_makespan"],
-             fork.best_of_samples(task.gb, task.env_true,
-                                  task.num_devices, 4))
-    print(f"{'GDP fine-tuned':>16s}: {ft:.4f}s  ({res['iterations']} "
-          f"iterations, {time.time()-t2:.0f}s)")
+    ft = place(g, task.topo, pcfg=pcfg, trainer=fork, scale=pcfg.scale,
+               budget=Budget(finetune_iters=finetune_iters, samples=4))
+    print(f"{'GDP fine-tuned':>16s}: {ft.makespan:.4f}s  "
+          f"(method={ft.method}, {time.time()-t2:.0f}s)")
     print(f"\npeak RSS: {C.peak_rss_bytes()/2**30:.2f} GiB")
 
 

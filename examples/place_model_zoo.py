@@ -1,60 +1,41 @@
 """Place a REAL JAX model's dataflow graph with GDP.
 
 Traces the reduced qwen3-8b training-loss jaxpr from the model zoo into
-the dataflow IR, trains GDP briefly against the simulator, and exports the
-best placement as a TPU pipeline-stage plan (DESIGN.md §3).
+the dataflow IR (``extract_arch`` — shape-only tracing with a disk
+cache, so reruns never re-trace), places it through ``repro.api.place``,
+and exports the best placement as a TPU pipeline-stage plan
+(DESIGN.md §3).
 
     PYTHONPATH=src python examples/place_model_zoo.py
 """
-import dataclasses
-
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_reduced
+from repro.api import Budget, place
 from repro.core import baselines as B
 from repro.core.export import placement_to_stage_plan, plan_summary
-from repro.core.featurize import featurize
-from repro.core.policy import PolicyConfig
-from repro.core.ppo import PPOConfig, PPOTrainer
-from repro.graphs.jaxpr_extract import extract
-from repro.models.model import build_model
+from repro.graphs.jaxpr_extract import extract_arch
 from repro.sim import p100_topology, prepare_sim_graph
 from repro.sim.scheduler import Env
 
 
 def main(iterations: int = 40):
-    cfg = get_reduced("qwen3-8b")
-    model = build_model(cfg)
-    params = model.init_params(jax.random.PRNGKey(0))
-    batch = {"tokens": jnp.zeros((4, 32), jnp.int32),
-             "labels": jnp.zeros((4, 32), jnp.int32)}
-    g = extract(model.loss, params, batch, name="qwen3-reduced-loss")
+    g = extract_arch("qwen3-8b", reduced=True, mode="loss", seq=32, batch=4)
     print("extracted:", g.subgraph_stats())
 
     topo = p100_topology(2).with_mem_caps(g.total_mem() / 2 * 1.9)
     env_true = Env(prepare_sim_graph(g, topo, max_deg=16), topo)
-    env = dataclasses.replace(env_true, shaped_reward=True)
-    gb = featurize(g, max_deg=8, topo=topo)
-
     hp = B.human_expert(g, topo)
     mk_h = float(env_true.rewards(jnp.asarray(hp)[None])[0][0])
     print(f"human-expert: {mk_h:.5f}s")
 
-    tr = PPOTrainer(PolicyConfig(hidden=64, gnn_layers=2, placer_layers=2,
-                                 ffn=256, window=64, max_devices=8),
-                    PPOConfig(num_samples=32, canonicalize=True,
-                              per_node_credit=False), seed=0)
-    best, best_pl = np.inf, hp
-    for it in range(iterations):
-        m = tr.iteration("qwen3", gb, env, 2)
-        if m["best_makespan"] < best:
-            best = m["best_makespan"]
-    print(f"GDP best: {best:.5f}s after {iterations} iterations")
+    plan = place(g, topo, budget=Budget(finetune_iters=iterations,
+                                        samples=32))
+    print(f"GDP best: {plan.makespan:.5f}s after {iterations} iterations "
+          f"(valid={plan.valid})")
 
-    plan = placement_to_stage_plan(g, np.asarray(best_pl), 2)
-    print("stage plan:", plan_summary(plan))
+    stage = placement_to_stage_plan(g, np.asarray(plan.placement), 2)
+    print("stage plan:", plan_summary(stage))
 
 
 if __name__ == "__main__":

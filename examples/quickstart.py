@@ -1,20 +1,16 @@
 """Quickstart: place a Transformer-XL dataflow graph with GDP.
 
-Builds the graph, the memory-constrained 2-GPU environment, trains the
-policy for a couple of minutes of PPO, and compares the best placement
-against the human-expert and METIS baselines.
+Builds the graph and the memory-constrained 2-GPU environment, compares
+the human-expert and METIS baselines, then runs the whole GDP search
+through the one-call facade — ``repro.api.place`` — which wraps
+featurization, PPO fine-tuning, and simulator evaluation.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import time
-
 import jax.numpy as jnp
-import numpy as np
 
+from repro.api import Budget, place
 from repro.core import baselines as B
-from repro.core.featurize import featurize
-from repro.core.policy import PolicyConfig
-from repro.core.ppo import PPOConfig, PPOTrainer
 from repro.graphs import synthetic as S
 from repro.sim import p100_topology, prepare_sim_graph
 from repro.sim.scheduler import Env
@@ -24,11 +20,9 @@ def main(iterations: int = 60):
     g = S.transformer_xl(2, segments=3)
     cap = g.total_mem() / 2 * 1.8           # memory-constrained (paper regime)
     topo = p100_topology(2).with_mem_caps(cap)
-    sg = prepare_sim_graph(g, topo, max_deg=16)
-    env, env_true = Env(sg, topo, shaped_reward=True), Env(sg, topo)
-    gb = featurize(g, max_deg=8, topo=topo)
     print(g.subgraph_stats())
 
+    env_true = Env(prepare_sim_graph(g, topo, max_deg=16), topo)
     for name, fn in (("human-expert", B.human_expert),
                      ("metis-like", B.metis_like),
                      ("single-device", B.single_device)):
@@ -36,20 +30,13 @@ def main(iterations: int = 60):
         print(f"{name:>14s}: {float(mk[0]):.4f}s"
               f"{'' if bool(ok[0]) else '  (OOM -> invalid)'}")
 
-    tr = PPOTrainer(PolicyConfig(hidden=64, gnn_layers=2, placer_layers=2,
-                                 ffn=256, window=64, max_devices=8),
-                    PPOConfig(num_samples=32, lr=1e-3, canonicalize=True,
-                              per_node_credit=False), seed=0)
-    t0, best = time.time(), np.inf
-    for it in range(iterations):
-        m = tr.iteration("txl2", gb, env, 2)
-        best = min(best, m["best_makespan"])
-        if it % 10 == 0:
-            print(f"[gdp] it={it:3d} best={best:.4f}s "
-                  f"entropy={m['entropy']:.2f} ({time.time()-t0:.0f}s)")
-    best = min(best, tr.best_of_samples(gb, env_true, 2, 16))
-    print(f"\nGDP best placement: {best:.4f}s "
-          f"(search {time.time()-t0:.0f}s, {iterations} PPO iterations)")
+    plan = place(g, topo, budget=Budget(finetune_iters=iterations,
+                                        samples=32))
+    print(f"\nGDP best placement: {plan.makespan:.4f}s "
+          f"(method={plan.method}, search {plan.wall_s:.0f}s, "
+          f"{iterations} PPO iterations)")
+    print(f"provenance: graph={plan.fingerprints['graph'][:12]} "
+          f"topology={plan.fingerprints['topology'][:12]}")
 
 
 if __name__ == "__main__":

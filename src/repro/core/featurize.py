@@ -76,16 +76,28 @@ def device_features(topo) -> np.ndarray:
 def featurize(g: DataflowGraph, max_deg: int = 8,
               pad_to: Optional[int] = None, topo=None,
               pad_multiple: Optional[int] = None, csr: bool = False,
-              csr_block_n: int = 64, csr_block_m: int = 128) -> GraphBatch:
+              csr_block_n: int = 64, csr_block_m: int = 128,
+              scale=None) -> GraphBatch:
     """``topo`` (sim.device.Topology) enables the resource-aware decoder
     context: per-node memory/compute fractions the AR placer accumulates
     per device while decoding, plus the per-device capability table
-    (DESIGN.md §5-addendum).  ``pad_multiple`` rounds the padded node dim
-    up to a multiple (segment-native pipelines pad to the decode segment
-    so every segment has one compiled shape).  ``csr=True`` additionally
-    builds the BSR adjacency block index (O(edges) numpy work, done once
-    per graph) so the GNN can aggregate via the CSR-blocked kernel
-    (``PolicyConfig.agg_impl="pallas_csr"``)."""
+    (DESIGN.md §5-addendum).  ``scale``
+    (:class:`repro.core.scale.ScaleConfig`) supplies the padding grid
+    (``scale.pad_multiple`` rounds the padded node dim up to a multiple —
+    segment-native pipelines pad to the decode segment so every segment
+    has one compiled shape) and ``scale.csr`` (build the BSR adjacency
+    block index, O(edges) numpy work done once per graph, so the GNN can
+    aggregate via the CSR-blocked kernel,
+    ``PolicyConfig.agg_impl="pallas_csr"``).  ``pad_multiple=``/``csr=``
+    are the deprecated keyword aliases for those two — passing either
+    without ``scale`` warns and keeps working for one release."""
+    if scale is not None:
+        pad_multiple, csr = scale.pad_multiple, scale.csr
+    elif pad_multiple is not None or csr:
+        from repro.core.scale import warn_deprecated_alias
+        warn_deprecated_alias(
+            "featurize", "pad_multiple" if pad_multiple is not None
+            else "csr")
     n = g.num_nodes
     pad_n = pad_to or n
     if pad_multiple:
@@ -145,6 +157,122 @@ def featurize(g: DataflowGraph, max_deg: int = 8,
                       jnp.asarray(mem_frac), jnp.asarray(comp_frac),
                       jnp.asarray(dev_feats), jnp.asarray(dev_mem_cap), n,
                       blocks)
+
+
+class _ColsView(NamedTuple):
+    """Duck-typed stand-in for DataflowGraph inside the cost model (which
+    only reads op_type / flops / out_bytes / num_nodes)."""
+    op_type: np.ndarray
+    flops: np.ndarray
+    out_bytes: np.ndarray
+    num_nodes: int
+
+
+def _window_neighbors(edges, lo: int, hi: int, k: int, pad_n: int
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+    """Padded neighbor matrix for window ``[lo, hi)`` from a shard edge
+    range ``(key, nbr, w)`` sorted by (key, nbr).
+
+    Replicates ``graph._padded_neighbors`` exactly — same grouping order,
+    same keep-heaviest truncation (``w`` is the per-edge copy of the
+    weight that function looks up) — then remaps neighbor ids into window
+    coordinates; neighbors outside the window become masked sentinels
+    (their features live in other windows)."""
+    key, nbr, w = edges
+    n = hi - lo
+    idx = np.full((pad_n, k), pad_n, np.int32)
+    mask = np.zeros((pad_n, k), np.float32)
+    starts = np.searchsorted(key, np.arange(lo, hi))
+    ends = np.searchsorted(key, np.arange(lo, hi) + 1)
+    for v in range(n):
+        nb, wt = nbr[starts[v]:ends[v]], w[starts[v]:ends[v]]
+        if nb.size > k:
+            sel = np.argsort(-wt, kind="stable")[:k]
+            nb = nb[sel]
+        inside = (nb >= lo) & (nb < hi)
+        idx[v, :nb.size] = np.where(inside, nb - lo, pad_n)
+        mask[v, :nb.size] = inside
+    return idx, mask
+
+
+def featurize_window(shards, lo: int = 0, hi: Optional[int] = None,
+                     max_deg: int = 8, pad_to: Optional[int] = None,
+                     topo=None, scale=None) -> GraphBatch:
+    """Out-of-core :func:`featurize`: one window ``[lo, hi)`` of a
+    sharded graph (:class:`repro.graphs.shards.GraphShards`), without
+    ever materializing whole-graph feature/neighbor arrays.
+
+    Over the full window this is bit-identical to
+    ``featurize(shards.load_graph(), ...)`` (pinned by tests/test_hier.py):
+    degree features are the stored *global* degrees, the topo-position
+    column uses global node ids, the neighbor matrices keep the global
+    padded width (from the shard meta's degree maxima, so every window of
+    one graph shares a compiled shape) and the exact stable-sort /
+    keep-heaviest truncation order of the in-RAM path, and ``comp_frac``
+    is normalized by the whole-graph compute total (summed in one
+    ``np.sum`` over the full column — no per-chunk reassociation).
+    Neighbors that fall outside the window are masked out; the
+    hierarchical refiner compensates by fixing their assignments as
+    incumbents.  ``scale.pad_multiple`` rounds the padded window length;
+    ``scale.csr`` is ignored (windows aggregate via the chunked path).
+    """
+    n_all = shards.num_nodes
+    hi = n_all if hi is None else hi
+    assert 0 <= lo <= hi <= n_all, (lo, hi, n_all)
+    n = hi - lo
+    pad_n = pad_to or n
+    if scale is not None and scale.pad_multiple:
+        m = scale.pad_multiple
+        pad_n = ((pad_n + m - 1) // m) * m
+    assert pad_n >= n, (pad_n, n)
+
+    nd = shards.nodes(lo, hi)
+    f = np.zeros((pad_n, NUM_NUMERIC_FEATURES), np.float32)
+    f[:n, 0] = np.log1p(nd["flops"]) / 30.0
+    f[:n, 1] = np.log1p(nd["out_bytes"]) / 30.0
+    f[:n, 2] = np.log1p(nd["mem_bytes"]) / 30.0
+    f[:n, 3] = np.log1p(nd["in_degree"]) / 5.0
+    f[:n, 4] = np.log1p(nd["out_degree"]) / 5.0
+    f[:n, 5] = (np.arange(lo, hi, dtype=np.float32)
+                / max(n_all - 1, 1))
+    f[:n, 6:6 + MAX_SHAPE_RANK] = np.log1p(nd["out_shape"]) / 20.0
+
+    k_in = max(min(int(shards.meta["max_in_degree"]), max_deg), 1)
+    k_out = max(min(int(shards.meta["max_out_degree"]), max_deg), 1)
+    s_i, d_i, w_i = shards.in_edges(lo, hi)
+    ii, mi = _window_neighbors((d_i, s_i, w_i), lo, hi, k_in, pad_n)
+    s_o, d_o, w_o = shards.out_edges(lo, hi)
+    oo, mo = _window_neighbors((s_o, d_o, w_o), lo, hi, k_out, pad_n)
+    nbr_idx = np.concatenate([ii, oo], axis=1)
+    nbr_mask = np.concatenate([mi, mo], axis=1)
+
+    op = np.zeros(pad_n, np.int32)
+    op[:n] = nd["op_type"]
+    node_mask = np.zeros(pad_n, np.float32)
+    node_mask[:n] = 1.0
+
+    mem_frac = np.zeros(pad_n, np.float32)
+    comp_frac = np.zeros(pad_n, np.float32)
+    dev_feats = np.zeros((0, NUM_DEVICE_FEATURES), np.float32)
+    dev_mem_cap = np.zeros(0, np.float32)
+    if topo is not None:
+        from repro.sim.cost_model import node_compute_matrix
+        caps = topo.mem_caps
+        alive = caps[caps > 0]
+        tight = alive.min() if alive.size else 1.0
+        mem_frac[:n] = nd["mem_bytes"] / tight
+        # global compute total: full scalar columns (cached on the shard
+        # handle) through the same cost-model code as the in-RAM path
+        view = _ColsView(shards.column("op_type"), shards.column("flops"),
+                         shards.column("out_bytes"), n_all)
+        ct = node_compute_matrix(view, topo).min(axis=1)
+        comp_frac[:n] = ct[lo:hi] / max(ct.sum(), 1e-12)
+        dev_feats = device_features(topo)
+        dev_mem_cap = (caps / tight).astype(np.float32)
+    return GraphBatch(jnp.asarray(op), jnp.asarray(f), jnp.asarray(nbr_idx),
+                      jnp.asarray(nbr_mask), jnp.asarray(node_mask),
+                      jnp.asarray(mem_frac), jnp.asarray(comp_frac),
+                      jnp.asarray(dev_feats), jnp.asarray(dev_mem_cap), n)
 
 
 # Padded-size ladder for micro-batched serving: bucketing request graphs

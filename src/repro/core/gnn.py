@@ -92,9 +92,19 @@ def _neighbor_max(z: jnp.ndarray, nbr_idx: jnp.ndarray, nbr_mask: jnp.ndarray,
 
 
 def apply(params: Dict[str, Any], gb: GraphBatch, *, agg_impl: str = "jnp",
-          chunk: Optional[int] = None) -> jnp.ndarray:
-    """Returns node embeddings f32[N, H] (``chunk`` bounds the neighbor-
-    gather peak memory to O(chunk·K·H); results are bit-identical)."""
+          chunk: Optional[int] = None, scale=None) -> jnp.ndarray:
+    """Returns node embeddings f32[N, H].
+
+    ``scale`` (:class:`repro.core.scale.ScaleConfig`) supplies the
+    chunked-gather bound (``scale.gnn_chunk``: peak memory O(chunk·K·H),
+    bit-identical results).  ``chunk=`` is the deprecated alias for it —
+    passing it without ``scale`` warns and keeps working for one
+    release."""
+    if scale is not None:
+        chunk = scale.gnn_chunk
+    elif chunk is not None:
+        from repro.core.scale import warn_deprecated_alias
+        warn_deprecated_alias("gnn.apply", "chunk")
     x = jnp.concatenate([params["op_emb"][gb.op], gb.feats], axis=-1)
     h = jax.nn.relu(nn.dense(params["in"], x))
     h = h * gb.node_mask[:, None]

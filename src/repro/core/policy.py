@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from repro.core import gnn, placer, superposition
 from repro.core.featurize import GraphBatch
+from repro.core.scale import ScaleConfig, warn_deprecated_alias
 
 
 @dataclasses.dataclass(frozen=True)
@@ -36,14 +37,14 @@ class PolicyConfig:
     # its ring-buffer cache is already exactly band-sized (see
     # placer.sample_ar_segmented).
     attn_impl: str = "jnp"
-    # Segmented decode (paper's scalable segmented attention): decode in
-    # fixed-size segments with carried Transformer-XL-style state, so
-    # compiled shapes are per-segment and a graph of ANY length reuses
-    # one compiled step.  None = monolithic (bit-identical results; the
-    # invariant is pinned by tests/test_segmented.py).
+    # DEPRECATED alias for ``scale.segment`` (segmented decode: fixed-size
+    # segments with carried Transformer-XL-style state; None = monolithic,
+    # bit-identical — pinned by tests/test_segmented.py).  Constructing
+    # with ``segment=`` and no ``scale`` warns and synthesizes a
+    # ScaleConfig; reads of ``cfg.segment`` stay canonical either way.
     segment: Optional[int] = None
-    # Chunked GNN neighbor aggregation: bound the [chunk, K, H] gather so
-    # featurization peak memory is O(chunk), not O(N).  None = one-shot.
+    # DEPRECATED alias for ``scale.gnn_chunk`` (chunked GNN neighbor
+    # aggregation: the [chunk, K, H] gather peaks at O(chunk), not O(N)).
     gnn_chunk: Optional[int] = None
     # Memory-aware decode: mask devices a node would push past their
     # memory cap (the decoder's running per-device accumulators vs
@@ -54,6 +55,30 @@ class PolicyConfig:
     # it on (at 50k nodes an unconstrained policy fork can spend its
     # whole fine-tune budget before drawing one valid sample).
     mask_full_devices: bool = False
+    # The consolidated scale knobs (segmented decode, chunked GNN gather,
+    # padding grid, hierarchy thresholds — see repro.core.scale).  When
+    # set it is authoritative: the legacy ``segment``/``gnn_chunk``
+    # fields are synced from it so every internal reader keeps working.
+    scale: Optional[ScaleConfig] = None
+
+    def __post_init__(self):
+        if self.scale is not None:
+            for alias, new in (("segment", self.scale.segment),
+                               ("gnn_chunk", self.scale.gnn_chunk)):
+                old = getattr(self, alias)
+                if old is not None and old != new:
+                    raise ValueError(
+                        f"PolicyConfig({alias}={old}) conflicts with "
+                        f"scale.{alias}={new}; set the value on "
+                        f"ScaleConfig only")
+            object.__setattr__(self, "segment", self.scale.segment)
+            object.__setattr__(self, "gnn_chunk", self.scale.gnn_chunk)
+        elif self.segment is not None or self.gnn_chunk is not None:
+            for alias in ("segment", "gnn_chunk"):
+                if getattr(self, alias) is not None:
+                    warn_deprecated_alias("PolicyConfig", alias)
+            object.__setattr__(self, "scale", ScaleConfig(
+                segment=self.segment, gnn_chunk=self.gnn_chunk))
 
 
 def init(key, cfg: PolicyConfig) -> Dict[str, Any]:
@@ -109,7 +134,7 @@ def incumbent_bias(cfg: PolicyConfig, gb: GraphBatch,
 
 def _embed(params, cfg: PolicyConfig, gb: GraphBatch):
     h = gnn.apply(params["gnn"], gb, agg_impl=cfg.agg_impl,
-                  chunk=cfg.gnn_chunk)
+                  scale=cfg.scale or ScaleConfig())
     c = None
     if cfg.use_superposition:
         x0 = gnn.graph_summary(h, gb.node_mask)

@@ -14,8 +14,12 @@ through here and placed by the learned policy (see
 """
 from __future__ import annotations
 
+import dataclasses
+import hashlib
+import json
 import math
-from typing import Any, Callable, Dict, List
+import os
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import numpy as np
@@ -119,67 +123,326 @@ def _trip_count(eqn) -> float:
     return 1.0
 
 
-def extract(fn: Callable, *args, name: str = "jaxpr", **kwargs) -> DataflowGraph:
+class _Accum:
+    """Mutable node/edge accumulator shared by the (possibly recursive)
+    jaxpr walk."""
+
+    def __init__(self, max_nodes: int):
+        self.op_type: List[int] = []
+        self.flops: List[float] = []
+        self.out_bytes: List[float] = []
+        self.mem_bytes: List[float] = []
+        self.out_shape: List[tuple] = []
+        self.src: List[int] = []
+        self.dst: List[int] = []
+        self.max_nodes = max_nodes
+
+    def new_node(self, op: str, aval, fl: float, extra_mem: float = 0.0) -> int:
+        nid = len(self.op_type)
+        if nid >= self.max_nodes:
+            raise RuntimeError(
+                f"extract: expansion exceeded max_nodes={self.max_nodes}; "
+                f"lower `expand` or raise `max_nodes`")
+        self.op_type.append(op_id(op))
+        self.flops.append(fl)
+        b = _aval_bytes(aval)
+        self.out_bytes.append(b)
+        self.mem_bytes.append(b + extra_mem)
+        self.out_shape.append(_aval_shape(aval))
+        return nid
+
+    def edge(self, s: int, d: int) -> None:
+        if s != d:
+            self.src.append(s)
+            self.dst.append(d)
+
+
+def _producers_of(eqn, env: Dict[Any, int]) -> List[int]:
+    out = []
+    for iv in eqn.invars:
+        if isinstance(iv, jcore.Literal):
+            continue
+        p = env.get(iv)
+        if p is not None:
+            out.append(p)
+    return out
+
+
+def _fused_node(acc: _Accum, eqn, env: Dict[Any, int]) -> None:
+    """Legacy behavior: one ``scan`` node for a fused region, cost =
+    traced body cost times the trip count."""
+    inner = _inner_jaxpr(eqn)
+    fl = (_jaxpr_flops(inner) * _trip_count(eqn)) if inner is not None \
+        else _eqn_flops(eqn)
+    nid = acc.new_node("scan", eqn.outvars[0].aval, fl,
+                       extra_mem=sum(_aval_bytes(v.aval)
+                                     for v in eqn.outvars[1:]))
+    for p in _producers_of(eqn, env):
+        acc.edge(p, nid)
+    for ov in eqn.outvars:
+        env[ov] = nid
+
+
+def _bind_inner(acc: _Accum, jaxpr, in_nodes: List[int]) -> Dict[Any, int]:
+    """Environment for an inlined inner jaxpr: invars map to the caller's
+    producer nodes, constvars become parameter nodes."""
+    env: Dict[Any, int] = {}
+    for v in jaxpr.constvars:
+        env[v] = acc.new_node("parameter", v.aval, 0.0)
+    for v, n in zip(jaxpr.invars, in_nodes):
+        if n is not None:
+            env[v] = n
+    return env
+
+
+def _expand_scan(acc: _Accum, eqn, env: Dict[Any, int],
+                 expand: int, depth: int) -> bool:
+    """Unroll one scan eqn trip by trip.  Returns False (caller keeps the
+    fused node) when the trip count exceeds ``expand`` or the jaxpr
+    doesn't look like a canonical scan."""
+    inner = _inner_jaxpr(eqn)
+    length = int(eqn.params.get("length", 0))
+    nc = int(eqn.params.get("num_consts", 0))
+    ncar = int(eqn.params.get("num_carry", 0))
+    if (inner is None or length <= 0 or length > expand
+            or len(inner.invars) != len(eqn.invars)
+            or len(inner.outvars) < ncar):
+        return False
+    nxs = len(eqn.invars) - nc - ncar
+    const_nodes = [env.get(iv) if not isinstance(iv, jcore.Literal) else None
+                   for iv in eqn.invars[:nc]]
+    carry_nodes = [env.get(iv) if not isinstance(iv, jcore.Literal) else None
+                   for iv in eqn.invars[nc:nc + ncar]]
+    xs_nodes = [env.get(iv) if not isinstance(iv, jcore.Literal) else None
+                for iv in eqn.invars[nc + ncar:]]
+    ys_vars = eqn.outvars[ncar:]
+    ys_trip_nodes: List[List[int]] = [[] for _ in ys_vars]
+
+    for t in range(length):
+        # per-trip xs slices: a "split" node per scanned operand, so the
+        # edge into the body carries element bytes, not the stacked array
+        x_nodes: List[Any] = []
+        for j, xn in enumerate(xs_nodes):
+            xv = inner.invars[nc + ncar + j]
+            if xn is None:
+                x_nodes.append(None)
+                continue
+            sl = acc.new_node("split", xv.aval, 0.0)
+            acc.edge(xn, sl)
+            x_nodes.append(sl)
+        trip_env = _bind_inner(acc, inner,
+                               const_nodes + carry_nodes + x_nodes)
+        _walk(acc, inner, trip_env, expand, depth + 1)
+        carry_nodes = [trip_env.get(ov) if not isinstance(ov, jcore.Literal)
+                       else None for ov in inner.outvars[:ncar]]
+        for j, ov in enumerate(inner.outvars[ncar:ncar + len(ys_vars)]):
+            if not isinstance(ov, jcore.Literal) and ov in trip_env:
+                ys_trip_nodes[j].append(trip_env[ov])
+
+    for v, n in zip(eqn.outvars[:ncar], carry_nodes):
+        if n is not None:
+            env[v] = n
+    for v, trips in zip(ys_vars, ys_trip_nodes):
+        cat = acc.new_node("concat", v.aval, 0.0)
+        for n in trips:
+            acc.edge(n, cat)
+        env[v] = cat
+    return True
+
+
+def _expand_call(acc: _Accum, eqn, env: Dict[Any, int],
+                 expand: int, depth: int) -> bool:
+    """Inline a call-like fused eqn (pjit / remat / custom_*_call /
+    closed_call) once.  Returns False on shape mismatch (caller keeps
+    the fused node)."""
+    inner = _inner_jaxpr(eqn)
+    if inner is None or len(inner.invars) != len(eqn.invars):
+        return False
+    in_nodes = [env.get(iv) if not isinstance(iv, jcore.Literal) else None
+                for iv in eqn.invars]
+    sub_env = _bind_inner(acc, inner, in_nodes)
+    _walk(acc, inner, sub_env, expand, depth + 1)
+    if len(inner.outvars) != len(eqn.outvars):
+        return False
+    for v, ov in zip(eqn.outvars, inner.outvars):
+        if not isinstance(ov, jcore.Literal) and ov in sub_env:
+            env[v] = sub_env[ov]
+    return True
+
+
+_MAX_EXPAND_DEPTH = 12
+
+# fused primitives the expander can see through (`while`/`cond` trip
+# structure is data-dependent — they always stay fused).  "remat2" is
+# jax's current checkpoint primitive: the legacy fused path predates it
+# and treats it as a plain node (kept bit-identical), but expansion must
+# inline it or every layer body stays hidden inside the checkpoint.
+_EXPANDABLE = {"scan", "pjit", "closed_call", "custom_vjp_call",
+               "custom_jvp_call", "remat", "checkpoint", "remat2"}
+
+
+def _walk(acc: _Accum, jaxpr, env: Dict[Any, int],
+          expand, depth: int) -> None:
+    for eqn in jaxpr.eqns:
+        pname = eqn.primitive.name
+        if pname in _FUSED or (expand and pname in _EXPANDABLE):
+            if (expand and depth < _MAX_EXPAND_DEPTH
+                    and pname in _EXPANDABLE):
+                done = (_expand_scan(acc, eqn, env, expand, depth)
+                        if pname == "scan"
+                        else _expand_call(acc, eqn, env, expand, depth))
+                if done:
+                    continue
+            _fused_node(acc, eqn, env)
+            continue
+        op = _PRIM_TO_OP.get(pname, "other")
+        nid = acc.new_node(op, eqn.outvars[0].aval, _eqn_flops(eqn),
+                           extra_mem=sum(_aval_bytes(v.aval)
+                                         for v in eqn.outvars[1:]))
+        for p in _producers_of(eqn, env):
+            acc.edge(p, nid)
+        for ov in eqn.outvars:
+            env[ov] = nid
+
+
+def extract(fn: Callable, *args, name: str = "jaxpr",
+            expand: Optional[int] = None, max_nodes: int = 2_000_000,
+            **kwargs) -> DataflowGraph:
+    """Trace ``fn`` and emit a :class:`DataflowGraph`.
+
+    Default (``expand=None``) is the historical fused granularity:
+    ``scan``/``while``/``pjit`` become single ``scan`` nodes with cost =
+    body cost × trip count.  With ``expand=T`` the extractor *inlines*
+    fused regions instead — call-like primitives (pjit / remat /
+    custom_* / closed_call) are inlined in place and every ``scan``
+    whose trip count is ≤ ``T`` is unrolled trip by trip (per-trip
+    ``split`` slice nodes on the scanned operands, per-output ``concat``
+    collectors, carries chained across trips); deeper scans stay fused.
+    That is how the jumbo configs in ``src/repro/configs`` become
+    500k+-node graphs for the hierarchical pipeline.  Arguments may be
+    ``jax.ShapeDtypeStruct``s — nothing is materialized."""
     closed = jax.make_jaxpr(fn)(*args, **kwargs)
     jaxpr = closed.jaxpr
 
-    op_type: List[int] = []
-    flops: List[float] = []
-    out_bytes: List[float] = []
-    mem_bytes: List[float] = []
-    out_shape: List[tuple] = []
-    src: List[int] = []
-    dst: List[int] = []
-
-    producer: Dict[Any, int] = {}
-
-    def new_node(op: str, aval, fl: float, extra_mem: float = 0.0) -> int:
-        nid = len(op_type)
-        op_type.append(op_id(op))
-        flops.append(fl)
-        b = _aval_bytes(aval)
-        out_bytes.append(b)
-        mem_bytes.append(b + extra_mem)
-        out_shape.append(_aval_shape(aval))
-        return nid
-
+    acc = _Accum(max_nodes)
+    env: Dict[Any, int] = {}
     for v in jaxpr.constvars:
-        producer[v] = new_node("parameter", v.aval, 0.0)
+        env[v] = acc.new_node("parameter", v.aval, 0.0)
     for v in jaxpr.invars:
-        producer[v] = new_node("input", v.aval, 0.0)
+        env[v] = acc.new_node("input", v.aval, 0.0)
+    _walk(acc, jaxpr, env, expand, 0)
 
-    for eqn in jaxpr.eqns:
-        pname = eqn.primitive.name
-        op = _PRIM_TO_OP.get(pname, "other")
-        if pname in _FUSED:
-            inner = _inner_jaxpr(eqn)
-            fl = (_jaxpr_flops(inner) * _trip_count(eqn)) if inner is not None \
-                else _eqn_flops(eqn)
-            op = "scan"
-        else:
-            fl = _eqn_flops(eqn)
-        out_aval = eqn.outvars[0].aval
-        nid = new_node(op, out_aval, fl,
-                       extra_mem=sum(_aval_bytes(v.aval) for v in eqn.outvars[1:]))
-        for iv in eqn.invars:
-            if isinstance(iv, jcore.Literal):
-                continue
-            p = producer.get(iv)
-            if p is not None and p != nid:
-                src.append(p)
-                dst.append(nid)
-        for ov in eqn.outvars:
-            producer[ov] = nid
-
-    shp = np.zeros((len(op_type), MAX_SHAPE_RANK), dtype=np.int64)
-    for i, s in enumerate(out_shape):
+    shp = np.zeros((len(acc.op_type), MAX_SHAPE_RANK), dtype=np.int64)
+    for i, s in enumerate(acc.out_shape):
         shp[i, :len(s)] = s
     # dedupe parallel edges
-    if src:
-        pairs = np.unique(np.stack([src, dst], 1), axis=0)
+    if acc.src:
+        pairs = np.unique(np.stack([acc.src, acc.dst], 1), axis=0)
         src_a, dst_a = pairs[:, 0], pairs[:, 1]
     else:
         src_a = np.zeros(0, np.int64)
         dst_a = np.zeros(0, np.int64)
-    return topo_relabel(name, op_type, flops, out_bytes, mem_bytes, shp,
-                        src_a, dst_a)
+    if expand and (src_a.size == 0 or np.all(src_a < dst_a)):
+        # nodes were emitted in dataflow order, so creation order IS a
+        # topological order — skip the O(N+E) python Kahn pass, which
+        # dominates wall time at 500k+ nodes.  (The fused path keeps
+        # topo_relabel for bit-identical node orders vs historical runs.)
+        g = DataflowGraph(
+            name=name, op_type=np.asarray(acc.op_type, np.int32),
+            flops=np.asarray(acc.flops, np.float64),
+            out_bytes=np.asarray(acc.out_bytes, np.float64),
+            mem_bytes=np.asarray(acc.mem_bytes, np.float64),
+            out_shape=shp, src=src_a.astype(np.int32),
+            dst=dst_a.astype(np.int32))
+        g.validate()
+        return g
+    return topo_relabel(name, acc.op_type, acc.flops, acc.out_bytes,
+                        acc.mem_bytes, shp, src_a, dst_a)
+
+
+# ---------------------------------------------------------------------------
+# Model-zoo extraction with a content-addressed disk cache.
+# ---------------------------------------------------------------------------
+CACHE_ENV = "REPRO_JAXPR_CACHE"
+_DEFAULT_CACHE = os.path.join(".cache", "jaxprs")
+
+
+def arch_digest(arch_name: str, *, reduced: bool = False,
+                mode: str = "loss", seq: Optional[int] = None,
+                batch: int = 8, expand: Optional[int] = None) -> str:
+    """Stable hash of everything that determines an extracted arch graph:
+    the full :class:`~repro.configs.base.ArchConfig` contents plus the
+    trace shape and expansion settings.  Repeated campaign runs key the
+    disk cache on this, so a config edit re-traces and a rerun doesn't."""
+    from repro.configs import get_config, get_reduced
+    cfg = get_reduced(arch_name) if reduced else get_config(arch_name)
+    payload = json.dumps(
+        {"cfg": dataclasses.asdict(cfg), "reduced": reduced, "mode": mode,
+         "seq": seq, "batch": batch, "expand": expand, "v": 2},
+        sort_keys=True, default=str)
+    return hashlib.sha256(payload.encode()).hexdigest()
+
+
+def _graph_to_npz(g: DataflowGraph, path: str) -> None:
+    np.savez_compressed(path, name=np.array(g.name), op_type=g.op_type,
+                        flops=g.flops, out_bytes=g.out_bytes,
+                        mem_bytes=g.mem_bytes, out_shape=g.out_shape,
+                        src=g.src, dst=g.dst)
+
+
+def _graph_from_npz(path: str) -> DataflowGraph:
+    with np.load(path) as z:
+        g = DataflowGraph(name=str(z["name"]), op_type=z["op_type"],
+                          flops=z["flops"], out_bytes=z["out_bytes"],
+                          mem_bytes=z["mem_bytes"], out_shape=z["out_shape"],
+                          src=z["src"], dst=z["dst"])
+    g.validate()
+    return g
+
+
+def extract_arch(arch_name: str, *, reduced: bool = False,
+                 mode: str = "loss", seq: Optional[int] = None,
+                 batch: int = 8, expand: Optional[int] = None,
+                 cache_dir: Optional[str] = None,
+                 max_nodes: int = 2_000_000) -> DataflowGraph:
+    """Extract a model-zoo architecture's dataflow graph, disk-cached.
+
+    ``mode`` is ``"loss"`` (forward + loss) or ``"grad"`` (forward +
+    backward: ``jax.grad`` of the loss — roughly 3× the nodes).  ``seq``
+    overrides the trace sequence length (default: the arch's trained
+    seq, 4096); ``batch`` is the traced global batch (node count is
+    batch-independent — only per-node costs scale).  Tracing uses
+    ``jax.eval_shape``/``ShapeDtypeStruct`` throughout, so a 398B-param
+    config costs abstract shapes, not memory.
+
+    Results are cached under ``cache_dir`` (default ``$REPRO_JAXPR_CACHE``
+    or ``.cache/jaxprs``) keyed by :func:`arch_digest` — re-running a
+    jumbo campaign never re-traces an unchanged config.
+    """
+    digest = arch_digest(arch_name, reduced=reduced, mode=mode, seq=seq,
+                         batch=batch, expand=expand)
+    cache_dir = cache_dir or os.environ.get(CACHE_ENV, _DEFAULT_CACHE)
+    path = os.path.join(cache_dir, f"{arch_name}-{digest[:16]}.npz")
+    if os.path.exists(path):
+        return _graph_from_npz(path)
+
+    from repro.configs import get_config, get_reduced
+    from repro.models.model import build_model
+    cfg = get_reduced(arch_name) if reduced else get_config(arch_name)
+    model = build_model(cfg)
+    params = jax.eval_shape(model.init_params, jax.random.PRNGKey(0))
+    s = int(seq if seq is not None else 4096)
+    tok = jax.ShapeDtypeStruct((batch, s), np.int32)
+    batch_avals = {"tokens": tok, "labels": tok}
+    fn = model.loss if mode == "loss" else (
+        lambda p, b: jax.grad(model.loss)(p, b))
+    if mode not in ("loss", "grad"):
+        raise ValueError(f"extract_arch: unknown mode {mode!r}")
+    name = f"{arch_name}{'-r' if reduced else ''}-{mode}-s{s}"
+    g = extract(fn, params, batch_avals, name=name, expand=expand,
+                max_nodes=max_nodes)
+    os.makedirs(cache_dir, exist_ok=True)
+    tmp = path[:-len(".npz")] + ".tmp.npz"   # np.savez appends .npz itself
+    _graph_to_npz(g, tmp)
+    os.replace(tmp, path)
+    return g

@@ -1,0 +1,237 @@
+"""On-disk node/edge shards for out-of-core graph pipelines.
+
+A 500k+-node jaxpr does not need to live in RAM as padded featurization
+arrays: the hierarchical pipeline (``repro.hier``) streams it window by
+window.  :func:`write_shards` lays a :class:`~repro.core.graph.
+DataflowGraph` out as numpy shard files; :class:`GraphShards` is the
+read-side handle that serves node ranges and the in-/out-edge lists
+touching a range without loading anything else.
+
+Layout of a shard directory::
+
+    meta.json               counts, totals, degree maxima, array digest
+    nodes_00000.npz         op_type/flops/out_bytes/mem_bytes/out_shape
+                            + global in_degree/out_degree for the range
+    edges_dst_00000.npz     edges whose dst falls in the range,
+                            sorted by (dst, src), with w = out_bytes[src]
+    edges_src_00000.npz     edges whose src falls in the range,
+                            sorted by (src, dst), with w = out_bytes[dst]
+
+Both edge sorts mirror the stable orders ``DataflowGraph``'s padded-
+neighbor builders produce, and the per-edge weights are exactly the
+truncation keys they use — so ``featurize_window`` over shards is
+bit-identical to in-RAM ``featurize`` (pinned by tests/test_hier.py).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core.graph import DataflowGraph, MAX_SHAPE_RANK
+
+_VERSION = 1
+_NODE_FIELDS = ("op_type", "flops", "out_bytes", "mem_bytes", "out_shape",
+                "in_degree", "out_degree")
+
+
+def _arrays_digest(g: DataflowGraph) -> str:
+    """Deterministic content hash of a graph's arrays (NOT relabeling-
+    invariant — that is ``serve.fingerprint.graph_fingerprint``'s job;
+    this one is O(bytes) so it scales to 500k+ nodes)."""
+    h = hashlib.sha256()
+    for a in (g.op_type, g.flops, g.out_bytes, g.mem_bytes, g.out_shape,
+              g.src, g.dst):
+        h.update(np.ascontiguousarray(a).tobytes())
+    return h.hexdigest()
+
+
+def write_shards(g: DataflowGraph, out_dir: str,
+                 shard_nodes: int = 65536) -> "GraphShards":
+    """Write ``g`` as a shard directory and return the read handle."""
+    os.makedirs(out_dir, exist_ok=True)
+    n, e = g.num_nodes, g.num_edges
+    num_shards = max((n + shard_nodes - 1) // shard_nodes, 1)
+    in_deg, out_deg = g.in_degree(), g.out_degree()
+
+    # edges sorted the two ways the neighbor builders consume them
+    by_dst = np.lexsort((g.src, g.dst))
+    src_d, dst_d = g.src[by_dst], g.dst[by_dst]
+    w_d = g.out_bytes[src_d]
+    by_src = np.lexsort((g.dst, g.src))
+    src_s, dst_s = g.src[by_src], g.dst[by_src]
+    w_s = g.out_bytes[dst_s]
+
+    for i in range(num_shards):
+        lo, hi = i * shard_nodes, min((i + 1) * shard_nodes, n)
+        np.savez_compressed(
+            os.path.join(out_dir, f"nodes_{i:05d}.npz"),
+            op_type=g.op_type[lo:hi], flops=g.flops[lo:hi],
+            out_bytes=g.out_bytes[lo:hi], mem_bytes=g.mem_bytes[lo:hi],
+            out_shape=g.out_shape[lo:hi],
+            in_degree=in_deg[lo:hi], out_degree=out_deg[lo:hi])
+        dl, dh = np.searchsorted(dst_d, (lo, hi))
+        np.savez_compressed(
+            os.path.join(out_dir, f"edges_dst_{i:05d}.npz"),
+            src=src_d[dl:dh], dst=dst_d[dl:dh], w=w_d[dl:dh])
+        sl, sh = np.searchsorted(src_s, (lo, hi))
+        np.savez_compressed(
+            os.path.join(out_dir, f"edges_src_{i:05d}.npz"),
+            src=src_s[sl:sh], dst=dst_s[sl:sh], w=w_s[sl:sh])
+
+    meta = {
+        "version": _VERSION, "name": g.name,
+        "num_nodes": n, "num_edges": e, "shard_nodes": shard_nodes,
+        "num_shards": num_shards,
+        "totals": {"flops": float(g.flops.sum()),
+                   "out_bytes": float(g.out_bytes.sum()),
+                   "mem_bytes": float(g.mem_bytes.sum()),
+                   "edge_bytes": float(g.out_bytes[g.src].sum()) if e else 0.0},
+        "max_in_degree": int(in_deg.max()) if n else 0,
+        "max_out_degree": int(out_deg.max()) if n else 0,
+        "digest": _arrays_digest(g),
+    }
+    with open(os.path.join(out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    return GraphShards(out_dir)
+
+
+class GraphShards:
+    """Read handle over a shard directory written by :func:`write_shards`.
+
+    Everything is served per-request from the npz shards; only scalar
+    per-node columns explicitly pulled through :meth:`column` are cached
+    in RAM (O(N) scalars — the same budget the simulator already needs;
+    the O(N·K) neighbor matrices and O(N·F) feature tables are what the
+    windowed path never materializes).
+    """
+
+    def __init__(self, path: str):
+        """Open a shard directory (reads only ``meta.json`` up front)."""
+        self.path = path
+        with open(os.path.join(path, "meta.json")) as f:
+            self.meta = json.load(f)
+        if self.meta.get("version") != _VERSION:
+            raise ValueError(f"{path}: unsupported shard version "
+                             f"{self.meta.get('version')}")
+        self._columns: Dict[str, np.ndarray] = {}
+
+    # -------------------------------------------------------------- meta
+    @property
+    def name(self) -> str:
+        """Graph name recorded at write time."""
+        return self.meta["name"]
+
+    @property
+    def num_nodes(self) -> int:
+        """Total fine-node count."""
+        return int(self.meta["num_nodes"])
+
+    @property
+    def num_edges(self) -> int:
+        """Total edge count."""
+        return int(self.meta["num_edges"])
+
+    @property
+    def digest(self) -> str:
+        """Content hash of the sharded arrays (provenance key)."""
+        return self.meta["digest"]
+
+    @property
+    def totals(self) -> Dict[str, float]:
+        """Whole-graph sums recorded at write time (conservation checks
+        and coarsener provenance read these without streaming)."""
+        return self.meta["totals"]
+
+    def _shards_for(self, lo: int, hi: int) -> range:
+        sn = int(self.meta["shard_nodes"])
+        return range(lo // sn, (max(hi, lo + 1) - 1) // sn + 1)
+
+    def _load(self, kind: str, i: int):
+        return np.load(os.path.join(self.path, f"{kind}_{i:05d}.npz"))
+
+    # ------------------------------------------------------------- nodes
+    def nodes(self, lo: int, hi: int) -> Dict[str, np.ndarray]:
+        """Node fields for the global range ``[lo, hi)`` (one dict of
+        arrays; keys: op_type/flops/out_bytes/mem_bytes/out_shape plus
+        the *global* in_degree/out_degree of those nodes)."""
+        assert 0 <= lo <= hi <= self.num_nodes, (lo, hi)
+        sn = int(self.meta["shard_nodes"])
+        parts = {k: [] for k in _NODE_FIELDS}
+        for i in self._shards_for(lo, hi):
+            with self._load("nodes", i) as z:
+                a, b = max(lo - i * sn, 0), min(hi - i * sn, sn)
+                for k in _NODE_FIELDS:
+                    parts[k].append(z[k][a:b])
+        return {k: np.concatenate(v) if len(v) != 1 else v[0]
+                for k, v in parts.items()}
+
+    def column(self, field: str) -> np.ndarray:
+        """Full ``[N]`` column of one scalar node field, cached."""
+        if field not in self._columns:
+            self._columns[field] = np.concatenate(
+                [self._load("nodes", i)[field]
+                 for i in range(int(self.meta["num_shards"]))])
+        return self._columns[field]
+
+    # ------------------------------------------------------------- edges
+    def _edge_range(self, kind: str, key: str, lo: int, hi: int
+                    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        srcs, dsts, ws = [], [], []
+        for i in self._shards_for(lo, hi):
+            with self._load(kind, i) as z:
+                k = z[key]
+                a, b = np.searchsorted(k, (lo, hi))
+                srcs.append(z["src"][a:b])
+                dsts.append(z["dst"][a:b])
+                ws.append(z["w"][a:b])
+        cat = (lambda xs: np.concatenate(xs) if len(xs) != 1 else xs[0])
+        return cat(srcs), cat(dsts), cat(ws)
+
+    def in_edges(self, lo: int, hi: int
+                 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """``(src, dst, w)`` of every edge whose dst is in ``[lo, hi)``,
+        sorted by (dst, src); ``w`` is the producer's out_bytes (the
+        padded-neighbor truncation key)."""
+        return self._edge_range("edges_dst", "dst", lo, hi)
+
+    def out_edges(self, lo: int, hi: int
+                  ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """``(src, dst, w)`` of every edge whose src is in ``[lo, hi)``,
+        sorted by (src, dst); ``w`` is the consumer's out_bytes."""
+        return self._edge_range("edges_src", "src", lo, hi)
+
+    # ----------------------------------------------------------- rebuild
+    def load_graph(self) -> DataflowGraph:
+        """Reassemble the full in-RAM :class:`DataflowGraph` (the
+        simulator needs O(N) arrays anyway; only featurization must stay
+        windowed)."""
+        n = self.num_nodes
+        fields = {k: [] for k in ("op_type", "flops", "out_bytes",
+                                  "mem_bytes", "out_shape")}
+        for i in range(int(self.meta["num_shards"])):
+            with self._load("nodes", i) as z:
+                for k in fields:
+                    fields[k].append(z[k])
+        src, dst, _ = self.out_edges(0, n)
+        g = DataflowGraph(
+            name=self.name,
+            op_type=np.concatenate(fields["op_type"]).astype(np.int32),
+            flops=np.concatenate(fields["flops"]).astype(np.float64),
+            out_bytes=np.concatenate(fields["out_bytes"]).astype(np.float64),
+            mem_bytes=np.concatenate(fields["mem_bytes"]).astype(np.float64),
+            out_shape=(np.concatenate(fields["out_shape"])
+                       .astype(np.int64).reshape(n, MAX_SHAPE_RANK)),
+            src=src.astype(np.int32), dst=dst.astype(np.int32))
+        g.validate()
+        return g
+
+
+def open_shards(path: str) -> Optional[GraphShards]:
+    """Open ``path`` as :class:`GraphShards` if it holds one, else None."""
+    if os.path.isfile(os.path.join(path, "meta.json")):
+        return GraphShards(path)
+    return None

@@ -1,0 +1,168 @@
+"""Deterministic METIS-style coarsening for jumbo dataflow graphs.
+
+The fine graph is contracted into a few-thousand-supernode coarse graph
+that the GDP policy can train on directly.  Partitions are *contiguous
+topological ranges* — contracting a contiguous range of a topologically
+ordered DAG can never create a cycle, so the coarse graph is a valid
+:class:`~repro.core.graph.DataflowGraph` by construction (no cycle
+detection pass at 500k+ nodes).  Cut points are chosen greedily: each of
+the K-1 boundaries lands at the minimum-crossing-bytes position inside a
+balance window around its ideal (equal-node) location, where the
+crossing-bytes profile of *every* boundary comes from one O(N+E)
+difference-array cumsum.
+
+Costs are conserved exactly: supernode flops/mem_bytes are the sums over
+their members, and the per-coarse-edge aggregated bytes (``edge_bytes``)
+sum to the fine graph's total cross-partition traffic (pinned by
+tests/test_hier.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Union
+
+import numpy as np
+
+from repro.core.graph import DataflowGraph, MAX_SHAPE_RANK
+from repro.graphs.shards import GraphShards, _arrays_digest
+
+
+@dataclasses.dataclass(frozen=True)
+class Coarsening:
+    """A contracted graph plus everything needed to go back down.
+
+    ``coarse.out_bytes[p]`` is the *largest* aggregated outgoing
+    cross-edge of supernode ``p`` (the simulator charges one transfer per
+    edge off a node's out_bytes, so the max is the conservative proxy);
+    the exact per-edge aggregates live in ``edge_bytes`` (aligned with
+    ``coarse.src``/``coarse.dst``) for conservation checks and reporting.
+    """
+    coarse: DataflowGraph
+    part: np.ndarray          # i32[N]  fine node -> supernode
+    starts: np.ndarray        # i64[K+1] contiguous partition boundaries
+    edge_bytes: np.ndarray    # f64[Ec] aggregated bytes per coarse edge
+    fine_digest: str          # content hash of the fine graph's arrays
+    fingerprint: str          # cacheable provenance key (see coarsen())
+
+    @property
+    def num_partitions(self) -> int:
+        """Number of supernodes K."""
+        return len(self.starts) - 1
+
+    def expand(self, coarse_placement: np.ndarray) -> np.ndarray:
+        """Lift a coarse placement i32[K] to fine nodes i32[N]."""
+        cp = np.asarray(coarse_placement, np.int32)
+        assert cp.shape == (self.num_partitions,), cp.shape
+        return cp[self.part]
+
+    def window(self, p: int):
+        """Fine-node range ``(lo, hi)`` of supernode ``p``."""
+        return int(self.starts[p]), int(self.starts[p + 1])
+
+
+def _pick_cuts(n: int, k: int, crossing: np.ndarray,
+               balance_slack: float) -> np.ndarray:
+    """K+1 boundary positions: each interior cut minimizes crossing bytes
+    inside ±``balance_slack``·(N/K) of its equal-size ideal, constrained
+    to keep every partition non-empty."""
+    ideal = n / k
+    tol = max(int(balance_slack * ideal), 0)
+    cuts = [0]
+    for i in range(1, k):
+        center = int(round(i * ideal))
+        lo = max(center - tol, cuts[-1] + 1)
+        hi = min(center + tol, n - (k - i))   # leave room for the rest
+        if hi < lo:
+            lo = hi = min(max(center, cuts[-1] + 1), n - (k - i))
+        w = crossing[lo:hi + 1]
+        cuts.append(lo + int(np.argmin(w)))
+    cuts.append(n)
+    return np.asarray(cuts, np.int64)
+
+
+def coarsen(source: Union[DataflowGraph, GraphShards],
+            target_nodes: int = 8192,
+            balance_slack: float = 0.25) -> Coarsening:
+    """Contract ``source`` into a ≤``target_nodes``-supernode coarse graph.
+
+    ``source`` may be an in-RAM graph or a shard directory handle; either
+    way only O(N+E) *scalar* columns are touched (never padded feature or
+    neighbor matrices).  Deterministic: the same graph always yields the
+    same cuts, so ``fingerprint`` — the WL fingerprint of the coarse
+    graph + a hash of the boundaries + the fine-array digest — is a
+    stable cache/provenance key through the serve machinery.
+    """
+    if isinstance(source, GraphShards):
+        name = source.name
+        n = source.num_nodes
+        flops = source.column("flops").astype(np.float64)
+        mem = source.column("mem_bytes").astype(np.float64)
+        op = source.column("op_type")
+        shp = source.column("out_shape").reshape(n, MAX_SHAPE_RANK)
+        src, dst, w = source.in_edges(0, n)   # w = out_bytes[src]
+        fine_digest = source.digest
+    else:
+        g = source
+        name, n = g.name, g.num_nodes
+        flops, mem, op, shp = (g.flops.astype(np.float64),
+                               g.mem_bytes.astype(np.float64),
+                               g.op_type, g.out_shape)
+        src, dst = g.src, g.dst
+        w = g.out_bytes[src].astype(np.float64)
+        fine_digest = _arrays_digest(g)
+
+    k = min(int(target_nodes), n)
+    if k <= 0:
+        raise ValueError(f"coarsen: empty graph {name!r}")
+
+    # crossing[b] = bytes over boundary b (edges with src < b <= dst):
+    # +w at b=src+1, -w at b=dst+1, cumsum.
+    diff = np.zeros(n + 2, np.float64)
+    np.add.at(diff, np.asarray(src) + 1, w)
+    np.add.at(diff, np.asarray(dst) + 1, -w)
+    crossing = np.cumsum(diff)[:n + 1]
+    starts = _pick_cuts(n, k, crossing, balance_slack)
+    lengths = np.diff(starts)
+    assert lengths.min() >= 1
+    part = np.repeat(np.arange(k, dtype=np.int32), lengths)
+
+    flops_c = np.add.reduceat(flops, starts[:-1])
+    mem_c = np.add.reduceat(mem, starts[:-1])
+    # dominant member (by flops) donates op type and shape
+    dom = np.empty(k, np.int64)
+    for p in range(k):
+        lo, hi = starts[p], starts[p + 1]
+        dom[p] = lo + int(np.argmax(flops[lo:hi]))
+    op_c = op[dom].astype(np.int32)
+    shp_c = shp[dom].astype(np.int64)
+
+    ps, pd = part[src], part[dst]
+    cross = ps != pd
+    if cross.any():
+        pairs, inv = np.unique(
+            np.stack([ps[cross], pd[cross]], 1), axis=0, return_inverse=True)
+        ebytes = np.bincount(inv, weights=w[cross],
+                             minlength=len(pairs)).astype(np.float64)
+        src_c, dst_c = pairs[:, 0].astype(np.int32), pairs[:, 1].astype(np.int32)
+    else:
+        src_c = dst_c = np.zeros(0, np.int32)
+        ebytes = np.zeros(0, np.float64)
+    out_c = np.zeros(k, np.float64)
+    if len(src_c):
+        np.maximum.at(out_c, src_c, ebytes)
+
+    coarse = DataflowGraph(
+        name=f"{name}-c{k}", op_type=op_c, flops=flops_c,
+        out_bytes=out_c, mem_bytes=mem_c, out_shape=shp_c,
+        src=src_c, dst=dst_c)
+    coarse.validate()
+
+    from repro.serve.fingerprint import graph_fingerprint
+    h = hashlib.sha256()
+    h.update(graph_fingerprint(coarse).encode())
+    h.update(starts.tobytes())
+    h.update(fine_digest.encode())
+    return Coarsening(coarse=coarse, part=part, starts=starts,
+                      edge_bytes=ebytes, fine_digest=fine_digest,
+                      fingerprint=h.hexdigest())

@@ -62,6 +62,7 @@ from repro.core import policy as policy_mod
 from repro.core.featurize import bucket_size, featurize, jumbo_bucket
 from repro.core.policy import PolicyConfig
 from repro.core.ppo import PPOTrainer, clone_state
+from repro.core.scale import ScaleConfig, warn_deprecated_alias
 from repro.obs import jaxprof
 from repro.obs.metrics import CounterDict, Histogram, MetricsRegistry
 from repro.obs.trace import get_tracer
@@ -163,10 +164,43 @@ class ServeConfig:
     # are REJECTED: a typed shed to the degraded baseline fast path
     # (``Request.rejection``, ``counts["shed_rejected"]``) instead of an
     # assert crashing the worker.
-    jumbo_threshold: int = 4096
-    jumbo_pad_multiple: int = 2048
+    #
+    # ``jumbo_threshold``/``jumbo_pad_multiple`` are DEPRECATED aliases
+    # for the same fields on ``scale`` (repro.core.scale.ScaleConfig);
+    # passing either without ``scale`` warns and keeps working for one
+    # release.  After construction both fields always hold the resolved
+    # values, whichever spelling configured them.
+    jumbo_threshold: Optional[int] = None
+    jumbo_pad_multiple: Optional[int] = None
     max_graph_nodes: int = 1 << 17
+    scale: Optional[ScaleConfig] = None
     costs: ServiceCosts = dataclasses.field(default_factory=ServiceCosts)
+
+    def __post_init__(self):
+        scale = self.scale
+        if scale is not None:
+            for alias in ("jumbo_threshold", "jumbo_pad_multiple"):
+                old, new = getattr(self, alias), getattr(scale, alias)
+                if old is not None and old != new:
+                    raise ValueError(
+                        f"ServeConfig({alias}={old}) conflicts with "
+                        f"scale.{alias}={new}; set the value on "
+                        f"ScaleConfig only")
+        else:
+            for alias in ("jumbo_threshold", "jumbo_pad_multiple"):
+                if getattr(self, alias) is not None:
+                    warn_deprecated_alias("ServeConfig", alias)
+            scale = ScaleConfig(
+                jumbo_threshold=(self.jumbo_threshold
+                                 if self.jumbo_threshold is not None
+                                 else ScaleConfig.jumbo_threshold),
+                jumbo_pad_multiple=(self.jumbo_pad_multiple
+                                    if self.jumbo_pad_multiple is not None
+                                    else ScaleConfig.jumbo_pad_multiple))
+            object.__setattr__(self, "scale", scale)
+        object.__setattr__(self, "jumbo_threshold", scale.jumbo_threshold)
+        object.__setattr__(self, "jumbo_pad_multiple",
+                           scale.jumbo_pad_multiple)
 
     @property
     def sim(self) -> SimConfig:

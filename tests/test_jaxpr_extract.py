@@ -57,3 +57,68 @@ def test_extracted_model_zoo_graph_placeable():
     pl = jnp.asarray(rng.randint(0, 2, (4, g.num_nodes)), jnp.int32)
     mk, r, valid = env.rewards(pl)
     assert np.all(np.asarray(mk) > 0)
+
+
+# ---------------------------------------------------------------------------
+# scan expansion (expand=) and the extract_arch disk cache
+# ---------------------------------------------------------------------------
+def _scan_mlp():
+    def mlp(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        h, _ = jax.lax.scan(body, x, None, length=4)
+        return jnp.sum(h)
+    return mlp, jnp.zeros((8, 32)), jnp.zeros((32, 32))
+
+
+def test_expand_unrolls_scan_and_conserves_flops():
+    fn, x, w = _scan_mlp()
+    fused = extract(fn, x, w, name="fused")
+    big = extract(fn, x, w, name="big", expand=8)
+    # 4 trips of (matmul, tanh) replace one opaque scan node
+    assert big.num_nodes > fused.num_nodes
+    np.testing.assert_allclose(big.total_flops(), fused.total_flops(),
+                               rtol=1e-12)
+    big.validate()
+    # expand mode emits nodes in topological creation order
+    assert np.all(big.src < big.dst)
+
+
+def test_expand_longer_than_budget_stays_fused():
+    fn, x, w = _scan_mlp()
+    fused = extract(fn, x, w, name="fused")
+    small = extract(fn, x, w, name="small", expand=2)   # length 4 > 2
+    assert small.num_nodes == fused.num_nodes
+    np.testing.assert_allclose(small.total_flops(), fused.total_flops())
+
+
+def test_expand_none_is_bit_identical_to_legacy():
+    fn, x, w = _scan_mlp()
+    g1 = extract(fn, x, w, name="g")
+    g2 = extract(fn, x, w, name="g", expand=None)
+    for f in ("op_type", "flops", "out_bytes", "mem_bytes", "out_shape",
+              "src", "dst"):
+        assert np.array_equal(getattr(g1, f), getattr(g2, f)), f
+
+
+def test_extract_arch_disk_cache_roundtrip(tmp_path):
+    from repro.graphs.jaxpr_extract import extract_arch
+    kw = dict(reduced=True, mode="loss", seq=16, batch=2,
+              cache_dir=str(tmp_path))
+    g1 = extract_arch("starcoder2-3b", **kw)
+    cached = list(tmp_path.glob("*.npz"))
+    assert len(cached) == 1 and ".tmp" not in cached[0].name
+    g2 = extract_arch("starcoder2-3b", **kw)   # second call hits the cache
+    for f in ("op_type", "flops", "out_bytes", "mem_bytes", "out_shape",
+              "src", "dst"):
+        assert np.array_equal(getattr(g1, f), getattr(g2, f)), f
+    assert g1.name == g2.name
+
+
+def test_extract_arch_digest_keys_config(tmp_path):
+    from repro.graphs.jaxpr_extract import arch_digest
+    base = arch_digest("qwen3-8b", mode="grad", seq=64, expand=8)
+    assert arch_digest("qwen3-8b", mode="grad", seq=64, expand=8) == base
+    assert arch_digest("qwen3-8b", mode="loss", seq=64, expand=8) != base
+    assert arch_digest("qwen3-8b", mode="grad", seq=128, expand=8) != base
+    assert arch_digest("qwen3-8b", mode="grad", seq=64, expand=16) != base
